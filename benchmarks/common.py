@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, dataset/model setup, CSV output."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ModelStore
+from repro.data import flight_features, hospital_tables
+from repro.ml import (DecisionTree, GradientBoostedTrees, LogisticRegression,
+                      MLP, OneHotEncoder, Pipeline, PipelineMetadata,
+                      RandomForest, StandardScaler)
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (warm)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def hospital_store(n_rows: int) -> Tuple[ModelStore, Dict[str, np.ndarray]]:
+    store = ModelStore()
+    tables = hospital_tables(n_rows)
+    for name, t in tables.items():
+        store.register_table(name, t)
+    data: Dict[str, np.ndarray] = {}
+    for t in tables.values():
+        for c in t.names:
+            data[c] = np.asarray(t.column(c))
+    return store, data
+
+
+def hospital_tree_pipeline(data, max_depth=8, min_leaf=20,
+                           name="los") -> Pipeline:
+    feat = ["age", "gender", "pregnant", "rcount", "hematocrit",
+            "neutrophils", "bp"]
+    sc = StandardScaler(feat).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression",
+                                       max_depth=max_depth,
+                                       min_leaf=min_leaf),
+                    PipelineMetadata(name=name, task="regression"))
+    pipe.fit({k: data[k] for k in feat}, data["length_of_stay"])
+    return pipe
+
+
+def flights_lr_pipeline(fcols, fy, l1=0.02, steps=300,
+                        name="delay") -> Pipeline:
+    ohe = OneHotEncoder(["origin", "dest", "carrier", "dow"]).fit(fcols)
+    sc = StandardScaler(["distance", "taxi_out", "dep_hour"]).fit(fcols)
+    pipe = Pipeline([ohe, sc], LogisticRegression(l1=l1, steps=steps),
+                    PipelineMetadata(name=name, task="classification"))
+    pipe.fit(fcols, fy)
+    return pipe

@@ -1,0 +1,109 @@
+"""Roofline report: aggregate results/dryrun/*.json into the §Roofline table.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+        [--markdown]
+
+Prints per-cell compute/memory/collective terms (seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and per-device memory.
+The hillclimb candidates (worst fraction / most collective-bound / most
+paper-representative) are flagged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_cells(d: str):
+    cells = []
+    for p in sorted(Path(d).glob("*.json")):
+        c = json.loads(p.read_text())
+        if "arch" not in c:          # raven_query entries: reported apart
+            continue
+        if c.get("variant", "baseline") != "baseline":
+            c = dict(c, arch=f"{c['arch']} [{c['variant']}]")
+        cells.append(c)
+    return cells
+
+
+def fmt_table(cells, markdown=False):
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append((c["arch"], c["shape"], c.get("mesh", ""),
+                         "SKIP", "-", "-", "-", "-", "-"))
+            continue
+        if c.get("status") != "ok":
+            rows.append((c["arch"], c["shape"], c.get("mesh", ""),
+                         "FAIL", "-", "-", "-", "-", "-"))
+            continue
+        r = c["roofline"]
+        mem_gb = c["memory"].get("argument_bytes_per_device", 0) / 1e9 \
+            + c["memory"].get("temp_bytes_per_device", 0) / 1e9
+        rows.append((c["arch"], c["shape"], c["mesh"], r["dominant"],
+                     f"{r['compute_s']*1e3:.1f}",
+                     f"{r['memory_s']*1e3:.1f}",
+                     f"{r['collective_s']*1e3:.1f}",
+                     f"{r['useful_flop_ratio']:.2f}",
+                     f"{mem_gb:.1f}"))
+    hdr = ("arch", "shape", "mesh", "dominant", "compute_ms", "memory_ms",
+           "collective_ms", "useful_ratio", "GB/dev")
+    if markdown:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        for r in rows:
+            out.append("| " + " | ".join(str(x) for x in r) + " |")
+        return "\n".join(out)
+    w = [max(len(str(x)) for x in [h] + [r[i] for r in rows])
+         for i, h in enumerate(hdr)]
+    lines = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    for r in rows:
+        lines.append("  ".join(str(x).ljust(w[i]) for i, x in enumerate(r)))
+    return "\n".join(lines)
+
+
+def pick_hillclimb(cells):
+    """worst roofline fraction, most collective-bound, most representative"""
+    ok = [c for c in cells if c.get("status") == "ok"
+          and "single" in c.get("mesh", "")]
+    if not ok:
+        return []
+    def frac(c):
+        r = c["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        return r["compute_s"] / total if total else 0.0
+    # "worst" among cells doing non-trivial compute (single-token decode at
+    # batch 1 has ~zero flops by construction; not a meaningful target)
+    substantial = [c for c in ok if c["roofline"]["compute_s"] > 5e-3]
+    worst = min(substantial or ok, key=frac)
+    coll = max(ok, key=lambda c: c["roofline"]["collective_s"]
+               / max(c["roofline"]["compute_s"]
+                     + c["roofline"]["memory_s"]
+                     + c["roofline"]["collective_s"], 1e-12))
+    # paper-representative: batched inference serving = decode cell of a
+    # dense arch (in-DB batch scoring is the paper's §5 experiment)
+    rep = next((c for c in ok if c["shape"] == "decode_32k"
+                and c["arch"] == "qwen2.5-14b"), ok[0])
+    return [("worst-roofline-fraction", worst),
+            ("most-collective-bound", coll),
+            ("paper-representative", rep)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print(fmt_table(cells, markdown=args.markdown))
+    print()
+    for label, c in pick_hillclimb(cells):
+        print(f"hillclimb[{label}]: {c['arch']} x {c['shape']} "
+              f"(dominant={c['roofline']['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (collected in common.ROWS).
+The roofline table (§Roofline) is separate: ``python -m benchmarks.roofline``
+reads the dry-run artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller row counts (CI-sized)")
+    args = ap.parse_args()
+
+    from . import (fig2a_projection_pushdown, fig2b_clustering,
+                   fig2c_inlining, fig2d_nn_translation, fig3_integration,
+                   lossy_pushdown, pruning)
+
+    n = 30_000 if args.quick else 200_000
+    print("name,us_per_call,derived")
+    jobs = [
+        ("pruning", lambda: pruning.run(n_rows=n)),
+        ("fig2a", lambda: fig2a_projection_pushdown.run(n_rows=n)),
+        ("fig2b", lambda: fig2b_clustering.run(n_rows=n)),
+        ("fig2c", lambda: fig2c_inlining.run(
+            n_rows=min(n, 300_000) if not args.quick else 30_000)),
+        ("fig2d", lambda: fig2d_nn_translation.run()),
+        ("fig3", lambda: fig3_integration.run(
+            sizes=(1_000, 10_000) if args.quick
+            else (1_000, 10_000, 100_000), per_tuple=True)),
+        # beyond-paper: the paper's §4.1 open question
+        ("lossy_pushdown", lambda: lossy_pushdown.run(
+            n_rows=min(n, 100_000))),
+    ]
+    failures = 0
+    for name, job in jobs:
+        try:
+            job()
+        except Exception:
+            failures += 1
+            print(f"{name},BENCH FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+"""Raven-JAX: relational query processing with ML inference on JAX/TPU."""
+
+__version__ = "1.0.0"

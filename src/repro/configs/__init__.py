@@ -1,0 +1,7 @@
+"""Per-architecture configs + shape cells (assigned pool)."""
+
+from .base import (SHAPES, ModelConfig, ShapeConfig, cell_skips, get_config,
+                   list_archs, reduced_config, runnable_cells)
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "cell_skips",
+           "get_config", "list_archs", "reduced_config", "runnable_cells"]

@@ -1,0 +1,23 @@
+"""Qwen2.5-14B — dense GQA with QKV bias [hf:Qwen/Qwen2.5-14B].
+
+48L, d_model=5120, 40H (GQA kv=8, head 128), d_ff=13824, vocab=152064.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=13824,
+    vocab_size=152064,
+    attention="full",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+    notes="GQA kv=8 with QKV bias",
+)

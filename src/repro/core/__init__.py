@@ -1,0 +1,15 @@
+"""Raven core: unified IR, frontends, cross-optimizer, codegen, model store."""
+
+from .codegen import ExecutionConfig, compile_plan, execute
+from .ir import Category, Node, Plan
+from .model_store import ModelStore
+from .optimizer import CrossOptimizer, OptimizationReport, OptimizerConfig
+from .pipeline_frontend import analyze_script, trace_pipeline
+from .sql_frontend import parse_query
+
+__all__ = [
+    "ExecutionConfig", "compile_plan", "execute",
+    "Category", "Node", "Plan", "ModelStore",
+    "CrossOptimizer", "OptimizationReport", "OptimizerConfig",
+    "analyze_script", "trace_pipeline", "parse_query",
+]

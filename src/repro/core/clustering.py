@@ -1,0 +1,172 @@
+"""Model clustering (paper §4.1, Fig 2b).
+
+Offline: k-means over (a sample of) historical data; for each cluster, derive
+the value-ranges its members occupy and *precompile* a specialized model —
+pruned trees / restricted linear models — exactly like predicate-based pruning
+but driven by discovered data properties instead of WHERE clauses.
+
+Online: route each batch to its cluster's precompiled model; fall back to the
+original when no precompiled model matches (paper: "if a precompiled model
+does not exist, we fall back").  ``ClusteredModel.predict_routed`` implements
+the routed execution used by the benchmark; artifacts are stored in the model
+store via ``register_clustered``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ml.pipeline import Pipeline
+from .rules.common import (constant_features, feature_bounds,
+                           input_columns_of, restrict_featurizers)
+
+__all__ = ["kmeans", "build_clustered_model", "ClusteredModel"]
+
+
+def kmeans(x: jnp.ndarray, k: int, iters: int = 20, seed: int = 0
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Plain Lloyd's in JAX.  Returns (centroids [k,d], assignment [n])."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    cents = x[init_idx]
+
+    def step(cents, _):
+        d = jnp.sum((x[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = onehot.sum(0)[:, None]
+        sums = onehot.T @ x
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    d = jnp.sum((x[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+    return cents, jnp.argmin(d, axis=1)
+
+
+def _cluster_constraints(sample_cols: Dict[str, np.ndarray],
+                         assign: np.ndarray, cid: int):
+    """Per-column [min,max] (plus == for single-valued) inside one cluster."""
+    from ..relational.expr import Constraint
+    out: List[Constraint] = []
+    mask = assign == cid
+    for name, arr in sample_cols.items():
+        vals = np.asarray(arr, np.float64)[mask]
+        if vals.size == 0:
+            continue
+        uniq = np.unique(vals)
+        if uniq.size == 1:
+            out.append(Constraint(name, "==", float(uniq[0])))
+        else:
+            out.append(Constraint(name, ">=", float(vals.min())))
+            out.append(Constraint(name, "<=", float(vals.max())))
+    return out
+
+
+@dataclasses.dataclass
+class _ClusterEntry:
+    centroid: np.ndarray
+    featurizers: List[Any]
+    model: Any
+    n_features: int
+
+
+class ClusteredModel:
+    """Precompiled per-cluster specializations + fallback."""
+
+    def __init__(self, pipeline: Pipeline, centroids: np.ndarray,
+                 entries: List[_ClusterEntry],
+                 cluster_columns: List[str]):
+        self.pipeline = pipeline
+        self.centroids = centroids
+        self.entries = entries
+        self.cluster_columns = cluster_columns
+
+    def assign(self, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        x = jnp.stack([jnp.asarray(columns[c], jnp.float32)
+                       for c in self.cluster_columns], axis=1)
+        d = jnp.sum((x[:, None, :] - jnp.asarray(self.centroids)[None]) ** 2,
+                    axis=-1)
+        return jnp.argmin(d, axis=1)
+
+    def model_cost(self) -> Dict[str, float]:
+        """Feature-count cost of specialized models vs the original (the
+        paper's 'model compile time is negligible; inference gains come from
+        dropped features')."""
+        orig = self.pipeline.feature_mapping().n_features
+        spec = float(np.mean([e.n_features for e in self.entries]))
+        return {"original_features": orig, "mean_cluster_features": spec}
+
+    def predict_routed(self, columns: Dict[str, jnp.ndarray],
+                       assign: Optional[np.ndarray] = None) -> np.ndarray:
+        """Route rows to their cluster's precompiled model (host-side
+        grouping, as a serving tier would); returns predictions aligned to
+        input order."""
+        if assign is None:
+            assign = np.asarray(self.assign(columns))
+        n = assign.shape[0]
+        out = np.zeros((n,), np.float32)
+        for cid, entry in enumerate(self.entries):
+            idx = np.nonzero(assign == cid)[0]
+            if idx.size == 0:
+                continue
+            sub = {k: jnp.asarray(np.asarray(v)[idx])
+                   for k, v in columns.items()}
+            feats = [f.transform(sub) for f in entry.featurizers]
+            x = jnp.concatenate(feats, axis=1)
+            pred = entry.model.predict(x)
+            out[idx] = np.asarray(pred, np.float32)
+        return out
+
+
+def build_clustered_model(pipeline: Pipeline,
+                          sample_cols: Dict[str, np.ndarray],
+                          k: int, seed: int = 0,
+                          cluster_columns: Optional[Sequence[str]] = None
+                          ) -> ClusteredModel:
+    """Offline precompilation: cluster the sample, specialize per cluster."""
+    cluster_columns = list(cluster_columns or pipeline.input_columns())
+    x = np.stack([np.asarray(sample_cols[c], np.float32)
+                  for c in cluster_columns], axis=1)
+    cents, assign = kmeans(jnp.asarray(x), k, seed=seed)
+    assign = np.asarray(assign)
+    entries: List[_ClusterEntry] = []
+    for cid in range(k):
+        constraints = _cluster_constraints(
+            {c: sample_cols[c] for c in cluster_columns}, assign, cid)
+        bounds = feature_bounds(pipeline.featurizers, constraints)
+        model = pipeline.model
+        feats = pipeline.featurizers
+        kind = getattr(model, "kind", None)
+        if kind in ("decision_tree",):
+            pruned = model.tree.prune_with_constraints(bounds)
+            import copy
+            model = copy.copy(model)
+            model.tree = pruned
+            # drop features the pruned tree no longer uses
+            used = set(int(i) for i in pruned.used_features())
+            feats, index_map = restrict_featurizers(pipeline.featurizers, used)
+            kept_old = sorted(index_map, key=lambda o: index_map[o])
+            from .rules.projection_pushdown import _restrict_model
+            model = _restrict_model(model, kept_old) or model
+            nf = len(kept_old)
+        elif kind in ("linear_regression", "logistic_regression"):
+            consts = constant_features(bounds)
+            from .rules.predicate_pruning import _fold_linear_constants
+            res = _fold_linear_constants(model, consts, pipeline.featurizers)
+            if res is not None:
+                model, feats, _ = res
+            nf = int(np.asarray(model.weights).shape[0])
+        else:
+            nf = pipeline.feature_mapping().n_features
+        entries.append(_ClusterEntry(np.asarray(cents)[cid], list(feats),
+                                     model, nf))
+    return ClusteredModel(pipeline, np.asarray(cents), entries,
+                          cluster_columns)

@@ -1,0 +1,241 @@
+"""Runtime code generation: optimized Raven IR -> executable JAX (paper §5).
+
+The paper's Runtime Code Generator emits a SQL query whose model invocations
+execute in-process (ONNX Runtime inside SQL Server), out-of-process
+(``sp_execute_external_script``) or in a container.  Here the three execution
+modes map to:
+
+- **native** (in-process): the operator lowers *into the same jitted
+  computation* as the relational plan — one fused XLA module.  This is the
+  deepest possible integration: XLA fuses across the RA/ML boundary.
+- **external** (out-of-process): the operator runs host-side through
+  ``jax.pure_callback`` on numpy inputs — a real process/device boundary with
+  real transfer costs, mirroring Raven Ext.
+- **container**: like external plus a configurable injected latency simulating
+  the REST hop of a containerized runtime (paper §5; we do not spin up real
+  containers in this offline environment — documented in DESIGN.md §8).
+
+``compile_plan`` returns a callable ``fn(tables) -> Table`` suitable for
+``jax.jit``; ``execute`` runs a plan against the catalog's registered tables.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..relational import ops as rel_ops
+from ..relational.table import ColumnSchema, Schema, Table
+from .ir import Plan
+
+__all__ = ["compile_plan", "execute", "ExecutionConfig"]
+
+
+class ExecutionConfig:
+    """Knobs for non-native runtimes."""
+
+    def __init__(self, container_latency_s: float = 0.05,
+                 external_latency_s: float = 0.0,
+                 use_pallas_tree_gemm: bool = False):
+        self.container_latency_s = container_latency_s
+        self.external_latency_s = external_latency_s
+        self.use_pallas_tree_gemm = use_pallas_tree_gemm
+
+
+def _model_scores(model, x: jnp.ndarray) -> jnp.ndarray:
+    """Raw scores [n, k] for any supported model kind."""
+    kind = getattr(model, "kind", None)
+    if kind in ("decision_tree", "random_forest"):
+        return model.predict_scores(x)
+    if kind == "gbt":
+        return model.predict(x)[:, None]
+    if kind in ("linear_regression", "logistic_regression"):
+        return model.decision_function(x)[:, None]
+    if kind == "mlp":
+        return model.predict_scores(x)
+    raise ValueError(f"unknown model kind {kind}")
+
+
+def _scores_to_output(scores: jnp.ndarray, task: str, proba: bool
+                      ) -> jnp.ndarray:
+    """[n, k] scores -> [n] prediction column."""
+    if scores.shape[-1] == 1:
+        col = scores[:, 0]
+        if task == "classification":
+            if proba:
+                return jax.nn.sigmoid(col)
+            return (col > 0).astype(jnp.float32)
+        return col
+    if task == "classification":
+        if proba:
+            return jax.nn.softmax(scores, axis=-1)[:, 1]
+        return jnp.argmax(scores, axis=-1).astype(jnp.float32)
+    return scores[:, 0]
+
+
+def _external_predict(model, task: str, proba: bool, latency_s: float):
+    """Host-side (numpy) model evaluation behind a pure_callback — the
+    Raven Ext / container execution path."""
+
+    def host_fn(x: np.ndarray) -> np.ndarray:
+        if latency_s > 0:
+            time.sleep(latency_s)
+        xs = jnp.asarray(x)
+        scores = _model_scores(model, xs)
+        out = _scores_to_output(scores, task, proba)
+        return np.asarray(out, np.float32)
+
+    def call(x: jnp.ndarray) -> jnp.ndarray:
+        shape = jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)
+        return jax.pure_callback(host_fn, shape, x)
+
+    return call
+
+
+def compile_plan(plan: Plan, catalog,
+                 config: Optional[ExecutionConfig] = None
+                 ) -> Callable[[Dict[str, Table]], Any]:
+    """Build the executable closure for ``plan``.
+
+    The returned function is pure in its table inputs (model parameters are
+    embedded as constants — they are part of the *compiled query*, which is
+    exactly the paper's model+inference-session caching) and is therefore
+    jit-compatible as a whole.
+    """
+    config = config or ExecutionConfig()
+    order = plan.topo_order()
+    nodes = plan.nodes
+
+    def run(tables: Dict[str, Table]) -> Any:
+        env: Dict[str, Any] = {}
+        for nid in order:
+            n = nodes[nid]
+            op = n.op
+            ins = [env[i] for i in n.inputs]
+            a = n.attrs
+            if op == "scan":
+                env[nid] = tables[a["table"]]
+            elif op == "filter":
+                env[nid] = rel_ops.filter_(ins[0], a["predicate"])
+            elif op == "project":
+                env[nid] = rel_ops.project(ins[0], a["columns"])
+            elif op == "rename":
+                t = ins[0]
+                mapping = a["mapping"]
+                cols = {mapping.get(k, k): v for k, v in t.columns.items()}
+                env[nid] = Table(cols, t.valid, t.schema.rename(mapping))
+            elif op == "map":
+                env[nid] = rel_ops.with_column(ins[0], a["name"], a["expr"])
+            elif op == "join":
+                env[nid] = rel_ops.join_unique(ins[0], ins[1], on=a["on"],
+                                               how=a.get("how", "inner"))
+            elif op == "group_agg":
+                env[nid] = rel_ops.group_aggregate(
+                    ins[0], a["key"], a["aggs"], a.get("num_groups"))
+            elif op == "order_by":
+                env[nid] = rel_ops.order_by(ins[0], a["key"],
+                                            a.get("descending", False))
+            elif op == "limit":
+                env[nid] = rel_ops.limit(ins[0], a["n"])
+            elif op == "union":
+                env[nid] = rel_ops.union_all(ins[0], ins[1])
+            elif op == "attach_column":
+                t, vec = ins
+                if vec.ndim == 2:
+                    vec = vec[:, 0]
+                env[nid] = t.with_columns({a["name"]: vec})
+            elif op == "featurize":
+                table = ins[0]
+                feats = [f.transform(table.columns) for f in a["featurizers"]]
+                env[nid] = jnp.concatenate(feats, axis=1)
+            elif op == "gather_features":
+                env[nid] = ins[0][:, jnp.asarray(a["indices"])]
+            elif op == "predict_model":
+                x = ins[0]
+                task = a.get("task", "classification")
+                proba = a.get("proba", False)
+                if n.runtime == "native":
+                    scores = _model_scores(a["model"], x)
+                    env[nid] = _scores_to_output(scores, task, proba)
+                elif n.runtime == "external":
+                    env[nid] = _external_predict(
+                        a["model"], task, proba,
+                        config.external_latency_s)(x)
+                else:  # container
+                    env[nid] = _external_predict(
+                        a["model"], task, proba,
+                        config.container_latency_s)(x)
+            # ---- LA ops produced by NN-translation / pruning rules ----------
+            elif op == "affine":
+                env[nid] = ins[0] * jnp.asarray(a["scale"]) \
+                    + jnp.asarray(a["offset"])
+            elif op == "matmul_bias":
+                env[nid] = ins[0] @ jnp.asarray(a["weights"]) \
+                    + jnp.asarray(a["bias"])
+            elif op == "sigmoid":
+                env[nid] = jax.nn.sigmoid(ins[0])
+            elif op == "relu":
+                env[nid] = jax.nn.relu(ins[0])
+            elif op == "softmax":
+                env[nid] = jax.nn.softmax(ins[0], axis=-1)
+            elif op == "argmax":
+                env[nid] = jnp.argmax(ins[0], axis=-1).astype(jnp.float32)
+            elif op == "select_column":
+                env[nid] = ins[0][:, a["index"]]
+            elif op == "threshold":
+                env[nid] = (ins[0] > a["value"]).astype(jnp.float32)
+            elif op == "tree_gemm":
+                ens = a["ensemble"]
+                if config.use_pallas_tree_gemm:
+                    from ..kernels.tree_gemm import ops as tg_ops
+                    scores = tg_ops.tree_gemm(ens, ins[0])
+                else:
+                    from ..ml.hummingbird import predict_ensemble_gemm
+                    scores = predict_ensemble_gemm(ens, ins[0])
+                scores = scores + a.get("bias", 0.0)
+                env[nid] = _scores_to_output(
+                    scores, a.get("task", "classification"),
+                    a.get("proba", False))
+            elif op == "constant_vector":
+                n_rows = ins[0].shape[0] if ins and hasattr(ins[0], "shape") \
+                    else ins[0].capacity
+                env[nid] = jnp.full((n_rows,), a["value"], jnp.float32)
+            elif op == "udf":
+                fn = a["fn"]
+                out_dtype = a.get("dtype", jnp.float32)
+                x = ins[0]
+                rows = x.shape[0] if hasattr(x, "shape") else x.capacity
+                shape = jax.ShapeDtypeStruct((rows,), out_dtype)
+                if hasattr(x, "columns"):   # table input: pass column dict
+                    cols = {k: v for k, v in x.columns.items()}
+                    env[nid] = jax.pure_callback(
+                        lambda **kw: np.asarray(fn(kw), out_dtype), shape,
+                        **cols)
+                else:
+                    env[nid] = jax.pure_callback(
+                        lambda v: np.asarray(fn(v), out_dtype), shape, x)
+            else:
+                raise ValueError(f"codegen: unknown op {op}")
+        return env[plan.output]
+
+    return run
+
+
+def execute(plan: Plan, catalog, config: Optional[ExecutionConfig] = None,
+            jit: bool = True, tables: Optional[Dict[str, Table]] = None
+            ) -> Any:
+    """Execute ``plan`` against catalog tables (or ``tables`` override)."""
+    needed = [n.attrs["table"] for n in plan.nodes.values() if n.op == "scan"]
+    tabs = dict(tables or {})
+    for name in needed:
+        if name not in tabs:
+            tabs[name] = catalog.get_table(name)
+    fn = compile_plan(plan, catalog, config)
+    if jit:
+        fn = jax.jit(fn)
+    return fn(tabs)

@@ -1,0 +1,199 @@
+"""Raven's unified intermediate representation (paper §3.1).
+
+One DAG holds *both* halves of an inference query.  Operator categories map
+directly onto the paper's taxonomy:
+
+- **RA** — relational algebra: ``scan, filter, project, map, join, group_agg,
+  order_by, limit, union``.
+- **LA** — linear algebra: ``matmul, add, mul, compare_le, sigmoid, relu,
+  softmax, argmax, tree_gemm, concat_features``.
+- **MLD** — classical-ML / featurizers: ``featurize, predict_model``.
+- **UDF** — opaque host code the static analyzer could not translate.
+
+Nodes are immutable-ish records in a ``Plan``; rules rewrite by building
+replacement nodes and calling :meth:`Plan.replace`.  Node outputs are either a
+``Table`` (RA) or a feature matrix (LA/MLD); ``Node.out_kind`` records which,
+so the optimizer can type-check rewrites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Category", "Node", "Plan"]
+
+
+class Category:
+    RA = "RA"
+    LA = "LA"
+    MLD = "MLD"
+    UDF = "UDF"
+
+
+_ids = itertools.count()
+
+
+def _fresh_id(prefix: str) -> str:
+    return f"{prefix}_{next(_ids)}"
+
+
+@dataclasses.dataclass
+class Node:
+    """One IR operator."""
+
+    op: str
+    category: str
+    inputs: List[str]
+    attrs: Dict[str, Any]
+    out_kind: str                   # "table" | "matrix" | "scalar"
+    id: str = ""
+    runtime: str = "native"         # native | external | container (paper §5)
+
+    def __post_init__(self):
+        if not self.id:
+            self.id = _fresh_id(self.op)
+
+    def copy(self, **overrides) -> "Node":
+        data = dict(op=self.op, category=self.category,
+                    inputs=list(self.inputs), attrs=dict(self.attrs),
+                    out_kind=self.out_kind, id=self.id, runtime=self.runtime)
+        data.update(overrides)
+        return Node(**data)
+
+    def __repr__(self):
+        ins = ",".join(self.inputs)
+        return f"{self.id}:{self.op}[{self.category}]({ins})"
+
+
+class Plan:
+    """A DAG of :class:`Node` with a single output node."""
+
+    def __init__(self, nodes: Optional[Dict[str, Node]] = None,
+                 output: Optional[str] = None):
+        self.nodes: Dict[str, Node] = dict(nodes or {})
+        self.output: Optional[str] = output
+
+    # -- construction --------------------------------------------------------
+    def add(self, node: Node) -> str:
+        if node.id in self.nodes:
+            raise ValueError(f"duplicate node id {node.id}")
+        self.nodes[node.id] = node
+        return node.id
+
+    def emit(self, op: str, category: str, inputs: Sequence[str],
+             out_kind: str, runtime: str = "native", **attrs) -> str:
+        return self.add(Node(op=op, category=category, inputs=list(inputs),
+                             attrs=attrs, out_kind=out_kind, runtime=runtime))
+
+    # -- topology -------------------------------------------------------------
+    def topo_order(self) -> List[str]:
+        order: List[str] = []
+        seen: Set[str] = set()
+
+        def visit(nid: str):
+            if nid in seen:
+                return
+            seen.add(nid)
+            for dep in self.nodes[nid].inputs:
+                visit(dep)
+            order.append(nid)
+
+        if self.output is not None:
+            visit(self.output)
+        # include orphan roots too (multi-sink plans during rewriting)
+        for nid in list(self.nodes):
+            visit(nid)
+        return order
+
+    def consumers(self, nid: str) -> List[str]:
+        return [n.id for n in self.nodes.values() if nid in n.inputs]
+
+    def node(self, nid: str) -> Node:
+        return self.nodes[nid]
+
+    # -- rewriting --------------------------------------------------------------
+    def replace(self, old_id: str, new_node: Node) -> str:
+        """Replace node ``old_id``; consumers are re-pointed to the new id."""
+        self.nodes.pop(old_id)
+        if new_node.id in self.nodes:
+            new_id = new_node.id
+        else:
+            new_id = self.add(new_node)
+        for n in self.nodes.values():
+            n.inputs = [new_id if i == old_id else i for i in n.inputs]
+        if self.output == old_id:
+            self.output = new_id
+        return new_id
+
+    def rewire(self, old_id: str, new_id: str) -> None:
+        """Point all consumers of ``old_id`` at ``new_id`` (bypass)."""
+        for n in self.nodes.values():
+            if n.id == new_id:
+                continue
+            n.inputs = [new_id if i == old_id else i for i in n.inputs]
+        if self.output == old_id:
+            self.output = new_id
+
+    def prune_dead(self) -> int:
+        """Drop nodes unreachable from the output.  Returns count removed."""
+        if self.output is None:
+            return 0
+        live: Set[str] = set()
+
+        def visit(nid: str):
+            if nid in live:
+                return
+            live.add(nid)
+            for dep in self.nodes[nid].inputs:
+                visit(dep)
+
+        visit(self.output)
+        dead = [nid for nid in self.nodes if nid not in live]
+        for nid in dead:
+            del self.nodes[nid]
+        return len(dead)
+
+    def find(self, op: str) -> List[Node]:
+        return [n for n in self.topo_ordered_nodes() if n.op == op]
+
+    def topo_ordered_nodes(self) -> List[Node]:
+        return [self.nodes[i] for i in self.topo_order()]
+
+    # -- validation / display -----------------------------------------------------
+    def validate(self) -> None:
+        for n in self.nodes.values():
+            for dep in n.inputs:
+                if dep not in self.nodes:
+                    raise ValueError(f"{n.id} references missing input {dep}")
+        if self.output is not None and self.output not in self.nodes:
+            raise ValueError(f"output {self.output} missing")
+        # acyclicity via topo
+        self.topo_order()
+
+    def pretty(self) -> str:
+        lines = []
+        for nid in self.topo_order():
+            n = self.nodes[nid]
+            mark = " <- OUTPUT" if nid == self.output else ""
+            extra = ""
+            if n.op == "filter":
+                extra = f" pred={n.attrs['predicate']!r}"
+            elif n.op == "scan":
+                extra = f" table={n.attrs['table']}"
+            elif n.op == "predict_model":
+                extra = f" model={n.attrs.get('model_name')}"
+            lines.append(
+                f"  {n.id:<24} {n.category:<4} {n.op:<16} "
+                f"inputs={n.inputs}{extra} rt={n.runtime}{mark}")
+        return "\n".join(lines)
+
+    def copy(self) -> "Plan":
+        return Plan({k: v.copy() for k, v in self.nodes.items()}, self.output)
+
+    def stats(self) -> Dict[str, int]:
+        by_cat: Dict[str, int] = {}
+        for n in self.nodes.values():
+            by_cat[n.category] = by_cat.get(n.category, 0) + 1
+        return by_cat

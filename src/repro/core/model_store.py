@@ -1,0 +1,164 @@
+"""In-DB model store: versioned, transactional, audited (paper §1/§2).
+
+The paper's motivation is governance: models live *in* the database so they
+inherit transactions, versioning, auditing and high availability.  This module
+provides those semantics for the JAX engine:
+
+- **versioning**: every ``register`` creates an immutable new version;
+- **transactionality**: ``transaction()`` stages registrations and either
+  commits all or none (a model swap is atomic w.r.t. concurrent readers —
+  readers hold a snapshot dict);
+- **auditing**: every read/write appends to an audit log;
+- **statistics**: per-table column stats (min/max/distinct) power the
+  data-property-driven pruning of §4.1 ("derive predicates from data
+  statistics").
+
+It doubles as the *catalog* consumed by the SQL frontend, the cross-optimizer
+and codegen.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..ml.pipeline import Pipeline
+from ..relational.table import Table
+
+__all__ = ["ColumnStats", "ModelStore", "AuditRecord"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditRecord:
+    timestamp: float
+    action: str          # register | read | commit | rollback | cluster
+    subject: str
+    version: Optional[int]
+    principal: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnStats:
+    min: float
+    max: float
+    n_distinct: int
+    distinct_values: Optional[Tuple[float, ...]]   # only if small cardinality
+
+
+class _Txn:
+    def __init__(self, store: "ModelStore"):
+        self.store = store
+        self.staged: List[Tuple[str, Pipeline]] = []
+        self.active = False
+
+    def register(self, name: str, pipeline: Pipeline):
+        self.staged.append((name, pipeline))
+
+    def __enter__(self):
+        self.active = True
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            with self.store._lock:
+                for name, pipeline in self.staged:
+                    self.store._do_register(name, pipeline)
+                self.store._audit("commit", f"txn[{len(self.staged)}]", None)
+        else:
+            self.store._audit("rollback", f"txn[{len(self.staged)}]", None)
+        self.active = False
+        return False
+
+
+class ModelStore:
+    """Model + table catalog."""
+
+    def __init__(self, principal: str = "system"):
+        self._models: Dict[str, List[Pipeline]] = {}
+        self._tables: Dict[str, Table] = {}
+        self._stats: Dict[str, Dict[str, ColumnStats]] = {}
+        self._clusters: Dict[str, Any] = {}
+        self._audit_log: List[AuditRecord] = []
+        self._lock = threading.RLock()
+        self.principal = principal
+
+    # -- audit ----------------------------------------------------------------
+    def _audit(self, action: str, subject: str, version: Optional[int]):
+        self._audit_log.append(AuditRecord(
+            time.time(), action, subject, version, self.principal))
+
+    @property
+    def audit_log(self) -> List[AuditRecord]:
+        return list(self._audit_log)
+
+    # -- models -----------------------------------------------------------------
+    def register_model(self, name: str, pipeline: Pipeline) -> int:
+        with self._lock:
+            return self._do_register(name, pipeline)
+
+    def _do_register(self, name: str, pipeline: Pipeline) -> int:
+        versions = self._models.setdefault(name, [])
+        versions.append(pipeline)
+        version = len(versions)
+        self._audit("register", name, version)
+        return version
+
+    def get_model(self, name: str, version: Optional[int] = None) -> Pipeline:
+        with self._lock:
+            if name not in self._models:
+                raise KeyError(f"model {name!r} not found; "
+                               f"have {sorted(self._models)}")
+            versions = self._models[name]
+            v = version or len(versions)
+            self._audit("read", name, v)
+            return versions[v - 1]
+
+    def model_version(self, name: str) -> int:
+        return len(self._models.get(name, []))
+
+    def transaction(self) -> _Txn:
+        return _Txn(self)
+
+    # -- model clustering artifacts (paper §4.1) ---------------------------------
+    def register_clustered(self, name: str, artifact: Any):
+        with self._lock:
+            self._clusters[name] = artifact
+            self._audit("cluster", name, None)
+
+    def get_clustered(self, name: str) -> Optional[Any]:
+        return self._clusters.get(name)
+
+    # -- tables -----------------------------------------------------------------
+    def register_table(self, name: str, table: Table,
+                       max_distinct: int = 64) -> None:
+        with self._lock:
+            self._tables[name] = table
+            stats: Dict[str, ColumnStats] = {}
+            valid = np.asarray(table.valid)
+            for cname in table.names:
+                arr = np.asarray(table.column(cname))[valid]
+                if arr.dtype.kind not in "iuf" or arr.size == 0:
+                    continue
+                uniq = np.unique(arr)
+                stats[cname] = ColumnStats(
+                    min=float(arr.min()), max=float(arr.max()),
+                    n_distinct=int(uniq.size),
+                    distinct_values=tuple(float(v) for v in uniq)
+                    if uniq.size <= max_distinct else None)
+            self._stats[name] = stats
+
+    def get_table(self, name: str) -> Table:
+        if name not in self._tables:
+            raise KeyError(f"table {name!r} not registered; "
+                           f"have {sorted(self._tables)}")
+        return self._tables[name]
+
+    def table_names(self) -> List[str]:
+        return sorted(self._tables)
+
+    def get_stats(self, table: str) -> Dict[str, ColumnStats]:
+        return self._stats.get(table, {})

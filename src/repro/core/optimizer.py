@@ -1,0 +1,118 @@
+"""Raven's Cross Optimizer (paper §4.3).
+
+An "initial version, heuristic-based, applying all rules in a specific
+order" — exactly what the paper ships.  Each rule lives in
+:mod:`repro.core.rules` and is a pure plan-to-plan rewrite; the optimizer
+clones the input plan, applies the rule list to fixpoint (bounded), and
+returns the optimized plan plus a report of what fired (the report feeds
+EXPERIMENTS.md and the demo notebooks).
+
+Rule order (data flows top to bottom):
+
+1.  ``constant_folding``        — compiler-style Expr folding
+2.  ``predicate_pushdown``      — relational: filters toward scans
+3.  ``predicate_model_pruning`` — data->model: WHERE + table stats prune
+                                  trees / fold one-hot groups (incl. the
+                                  data-properties variant)
+4.  ``projection_pushdown``     — model->data: zero-weight / unused features
+                                  out of featurizers and scans
+5.  ``join_elimination``        — drops joins no surviving feature needs
+6.  ``model_query_splitting``   — optional: split tree+query on root predicate
+7.  ``model_inlining``          — small trees -> relational CASE (UDF-inlining
+                                  analogue, SQL-Server-2019-Froid style)
+8.  ``nn_translation``          — remaining trees/LR/MLP -> LA operators
+                                  (Hummingbird GEMM; Pallas kernel on TPU)
+9.  ``runtime_selection``       — pick native/external/container per operator
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .ir import Plan
+
+__all__ = ["OptimizerConfig", "CrossOptimizer", "OptimizationReport"]
+
+
+@dataclasses.dataclass
+class OptimizerConfig:
+    enable_constant_folding: bool = True
+    enable_predicate_pushdown: bool = True
+    enable_model_pruning: bool = True
+    enable_stats_pruning: bool = True
+    enable_projection_pushdown: bool = True
+    enable_join_elimination: bool = True
+    enable_model_query_splitting: bool = False   # opt-in (duplicates rows)
+    enable_model_inlining: bool = True
+    enable_nn_translation: bool = True
+    inline_max_nodes: int = 63        # trees at most this size inline to CASE
+    gemm_pad_to: int = 128            # MXU alignment for NN translation
+    # Hummingbird trades FLOPs for parallel hardware: the GEMM form wins on
+    # TPU/GPU but loses to pointer-chasing traversal for *single* trees on
+    # CPU (ensembles amortize either way).  "auto" = translate single trees
+    # only on accelerators; paper Fig 2d shows exactly this crossover.
+    nn_translate_single_trees: str = "auto"   # auto | always | never
+    # Cost-based implementation choice (paper §4.3 "next step"): estimate
+    # cardinalities from stats and pick traversal / CASE / GEMM per model
+    # by modeled cost instead of the heuristics above.
+    cost_based: bool = False
+    fk_integrity: bool = True         # joins are FK joins (enables elimination)
+    lossy_pushdown_tol: float = 0.0   # drop |w| <= tol (0 = exact only)
+    split_imbalance: float = 0.35     # split when min-side cost share below
+    max_passes: int = 3
+
+
+@dataclasses.dataclass
+class OptimizationReport:
+    entries: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+
+    def log(self, rule: str, detail: str):
+        self.entries.append((rule, detail))
+
+    def fired(self, rule: str) -> bool:
+        return any(r == rule for r, _ in self.entries)
+
+    def pretty(self) -> str:
+        if not self.entries:
+            return "  (no rules fired)"
+        return "\n".join(f"  [{r}] {d}" for r, d in self.entries)
+
+
+class CrossOptimizer:
+    def __init__(self, catalog, config: Optional[OptimizerConfig] = None):
+        self.catalog = catalog
+        self.config = config or OptimizerConfig()
+
+    def optimize(self, plan: Plan) -> Tuple[Plan, OptimizationReport]:
+        from .rules import (constant_folding, join_elimination,
+                            model_inlining, model_query_splitting,
+                            nn_translation, predicate_pruning,
+                            predicate_pushdown, projection_pushdown,
+                            runtime_selection, subplan_dedup)
+        cfg = self.config
+        plan = plan.copy()
+        report = OptimizationReport()
+        passes = [
+            (True, subplan_dedup.apply),
+            (cfg.enable_constant_folding, constant_folding.apply),
+            (cfg.enable_predicate_pushdown, predicate_pushdown.apply),
+            (cfg.enable_model_pruning, predicate_pruning.apply),
+            (cfg.enable_projection_pushdown, projection_pushdown.apply),
+            (cfg.enable_join_elimination, join_elimination.apply),
+            (cfg.enable_model_query_splitting, model_query_splitting.apply),
+            (cfg.enable_model_inlining, model_inlining.apply),
+            (cfg.enable_nn_translation, nn_translation.apply),
+            (True, runtime_selection.apply),
+        ]
+        for _ in range(cfg.max_passes):
+            changed = False
+            for enabled, rule_fn in passes:
+                if not enabled:
+                    continue
+                changed |= rule_fn(plan, self.catalog, cfg, report)
+                plan.prune_dead()
+                plan.validate()
+            if not changed:
+                break
+        return plan, report

@@ -1,0 +1,170 @@
+"""NN translation: classical ML operators -> linear algebra (paper §4.2,
+Fig 2d; Hummingbird GEMM strategy).
+
+Trees/forests/GBTs become the batched tree-GEMM operator (executed by the
+Pallas MXU kernel on TPU, by fused XLA dots elsewhere); linear models become
+``matmul_bias`` (+ sigmoid/threshold); MLPs become their literal layer chain.
+After this rule the ML half of the plan contains only LA nodes — the form in
+which the TPU backend (and the paper's ONNX Runtime) wants to execute it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..ir import Category, Node, Plan
+from .common import find_predict_chains
+
+
+def _translate_trees(plan, chain, cfg, report) -> bool:
+    from ...ml.hummingbird import ensemble_to_gemm
+    model = chain.predict.attrs["model"]
+    kind = model.kind
+    task = chain.predict.attrs.get("task", "classification")
+    proba = chain.predict.attrs.get("proba", False)
+    if kind == "decision_tree":
+        trees, average, bias, scale = [model.tree], True, 0.0, 1.0
+    elif kind == "random_forest":
+        trees, average, bias, scale = model.trees, True, 0.0, 1.0
+    else:  # gbt
+        trees, average = model.trees, False
+        bias, scale = model.base, model.learning_rate
+        task = "regression"
+    ens = ensemble_to_gemm(trees, pad_to=cfg.gemm_pad_to, average=average)
+    if scale != 1.0:
+        ens.e = (ens.e * scale).astype(np.float32)
+    node = Node(op="tree_gemm", category=Category.LA,
+                inputs=[chain.featurize.id],
+                attrs={"ensemble": ens, "task": task, "proba": proba,
+                       "bias": bias,
+                       "model_name": chain.predict.attrs.get("model_name")},
+                out_kind="matrix")
+    plan.add(node)
+    plan.rewire(chain.predict.id, node.id)
+    plan.prune_dead()
+    report.log("nn_translation",
+               f"{chain.predict.attrs.get('model_name')}: {kind} -> "
+               f"tree_gemm [{ens.a.shape[0]}x{ens.a.shape[2]}i/"
+               f"{ens.c.shape[2]}l pad {cfg.gemm_pad_to}]")
+    return True
+
+
+def _translate_linear(plan, chain, report) -> bool:
+    model = chain.predict.attrs["model"]
+    task = chain.predict.attrs.get("task", "classification")
+    proba = chain.predict.attrs.get("proba", False)
+    w = np.asarray(model.weights, np.float32)[:, None]
+    b = np.asarray([model.bias], np.float32)
+    mm = Node(op="matmul_bias", category=Category.LA,
+              inputs=[chain.featurize.id],
+              attrs={"weights": w, "bias": b}, out_kind="matrix")
+    plan.add(mm)
+    out = Node(op="select_column", category=Category.LA, inputs=[mm.id],
+               attrs={"index": 0}, out_kind="matrix")
+    plan.add(out)
+    last = out.id
+    if model.kind == "logistic_regression":
+        if proba:
+            sig = Node(op="sigmoid", category=Category.LA, inputs=[last],
+                       attrs={}, out_kind="matrix")
+            plan.add(sig)
+            last = sig.id
+        else:
+            thr = Node(op="threshold", category=Category.LA, inputs=[last],
+                       attrs={"value": 0.0}, out_kind="matrix")
+            plan.add(thr)
+            last = thr.id
+    plan.rewire(chain.predict.id, last)
+    plan.prune_dead()
+    report.log("nn_translation",
+               f"{chain.predict.attrs.get('model_name')}: {model.kind} -> "
+               f"matmul_bias({w.shape[0]}x1)")
+    return True
+
+
+def _translate_mlp(plan, chain, report) -> bool:
+    model = chain.predict.attrs["model"]
+    task = chain.predict.attrs.get("task", "classification")
+    proba = chain.predict.attrs.get("proba", False)
+    last = chain.featurize.id
+    for i, layer in enumerate(model.params):
+        mm = Node(op="matmul_bias", category=Category.LA, inputs=[last],
+                  attrs={"weights": np.asarray(layer["w"], np.float32),
+                         "bias": np.asarray(layer["b"], np.float32)},
+                  out_kind="matrix")
+        plan.add(mm)
+        last = mm.id
+        if i < len(model.params) - 1:
+            act = Node(op="relu", category=Category.LA, inputs=[last],
+                       attrs={}, out_kind="matrix")
+            plan.add(act)
+            last = act.id
+    if task == "classification":
+        if proba:
+            sm = Node(op="softmax", category=Category.LA, inputs=[last],
+                      attrs={}, out_kind="matrix")
+            plan.add(sm)
+            sel = Node(op="select_column", category=Category.LA,
+                       inputs=[sm.id], attrs={"index": 1}, out_kind="matrix")
+            plan.add(sel)
+            last = sel.id
+        else:
+            am = Node(op="argmax", category=Category.LA, inputs=[last],
+                      attrs={}, out_kind="matrix")
+            plan.add(am)
+            last = am.id
+    else:
+        sel = Node(op="select_column", category=Category.LA, inputs=[last],
+                   attrs={"index": 0}, out_kind="matrix")
+        plan.add(sel)
+        last = sel.id
+    plan.rewire(chain.predict.id, last)
+    plan.prune_dead()
+    report.log("nn_translation",
+               f"{chain.predict.attrs.get('model_name')}: mlp -> "
+               f"{len(model.params)} matmul_bias layers")
+    return True
+
+
+def _single_tree_ok(cfg) -> bool:
+    mode = getattr(cfg, "nn_translate_single_trees", "auto")
+    if mode == "always":
+        return True
+    if mode == "never":
+        return False
+    import jax
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def apply(plan: Plan, catalog, cfg, report) -> bool:
+    changed = False
+    rows = None
+    for chain in find_predict_chains(plan):
+        if chain.predict.runtime != "native":
+            continue
+        model = chain.predict.attrs["model"]
+        kind = getattr(model, "kind", None)
+        if kind in ("decision_tree", "random_forest", "gbt") \
+                and getattr(cfg, "cost_based", False):
+            from ..cost_model import choose_tree_impl, estimate_rows
+            if rows is None:
+                rows = estimate_rows(plan, catalog)
+            n_feat = sum(f.mapping().n_features
+                         for f in chain.featurize.attrs["featurizers"])
+            choice = choose_tree_impl(model,
+                                      rows.get(chain.table_input, 1e6),
+                                      n_feat)
+            report.log("cost_based_choice",
+                       f"{chain.predict.attrs.get('model_name')}: {choice} "
+                       f"(est rows {rows.get(chain.table_input, 0):.3g})")
+            if choice != "gemm":
+                continue
+        elif kind == "decision_tree" and not _single_tree_ok(cfg):
+            continue    # traversal beats GEMM for lone trees on CPU
+        if kind in ("decision_tree", "random_forest", "gbt"):
+            changed |= _translate_trees(plan, chain, cfg, report)
+        elif kind in ("linear_regression", "logistic_regression"):
+            changed |= _translate_linear(plan, chain, report)
+        elif kind == "mlp":
+            changed |= _translate_mlp(plan, chain, report)
+    return changed

@@ -1,0 +1,36 @@
+"""Runtime selection (paper §4.3/§5): decide where each operator executes.
+
+Native (in-process, fused into the jitted plan) whenever the model kind is
+supported; out-of-process for pipelines flagged ``external`` (the
+sp_execute_external_script path); containerized for everything else.  The
+paper's coverage ladder, verbatim.
+"""
+
+from __future__ import annotations
+
+from ..ir import Plan
+
+_NATIVE_KINDS = {"decision_tree", "random_forest", "gbt",
+                 "linear_regression", "logistic_regression", "mlp"}
+
+
+def apply(plan: Plan, catalog, cfg, report) -> bool:
+    changed = False
+    for n in plan.topo_ordered_nodes():
+        if n.op != "predict_model":
+            continue
+        flavor = n.attrs.get("flavor", "repro.native")
+        kind = getattr(n.attrs.get("model"), "kind", None)
+        want = "native"
+        if flavor == "external" or (kind not in _NATIVE_KINDS
+                                    and flavor != "container"):
+            want = "external"
+        if flavor == "container":
+            want = "container"
+        if kind in _NATIVE_KINDS and flavor == "repro.native":
+            want = "native"
+        if n.runtime != want:
+            n.runtime = want
+            changed = True
+            report.log("runtime_selection", f"{n.id} -> {want}")
+    return changed

@@ -1,0 +1,63 @@
+"""Common-subplan elimination across model invocations (beyond-paper; the
+paper names multi-query optimization as future work in §1/§6).
+
+Two invocations that share work — e.g. ``PREDICT(MODEL='m')`` in the SELECT
+list and ``PREDICT_PROBA(MODEL='m')`` in the WHERE clause — each build their
+own featurize (and sometimes predict) chain.  This rule canonicalizes:
+featurize nodes with the same (input, pipeline) merge; predict nodes with
+the same (input, model object, task, proba) merge.  Downstream rules then
+optimize the shared chain once, and the generated XLA program computes the
+feature matrix a single time.
+"""
+
+from __future__ import annotations
+
+from ..ir import Plan
+
+
+def _effective_input(plan: Plan, nid: str, needed_cols) -> str:
+    """Walk up through attach_column/map nodes whose added column the
+    featurizer never reads — they don't change the feature matrix."""
+    while True:
+        n = plan.node(nid)
+        if n.op in ("attach_column", "map") \
+                and n.attrs.get("name") not in needed_cols:
+            nid = n.inputs[0]
+            continue
+        return nid
+
+
+def _featurize_key(plan, n):
+    src = _effective_input(plan, n.inputs[0],
+                           set(n.attrs.get("input_columns", ())))
+    return ("featurize", src, n.attrs.get("pipeline_name"),
+            tuple(id(f) for f in n.attrs["featurizers"]))
+
+
+def _predict_key(n):
+    return ("predict", tuple(n.inputs), id(n.attrs.get("model")),
+            n.attrs.get("proba"), n.attrs.get("task"), n.runtime)
+
+
+def apply(plan: Plan, catalog, cfg, report) -> bool:
+    changed = False
+    again = True
+    while again:
+        again = False
+        seen = {}
+        for n in plan.topo_ordered_nodes():
+            if n.op == "featurize":
+                key = _featurize_key(plan, n)
+            elif n.op == "predict_model":
+                key = _predict_key(n)
+            else:
+                continue
+            if key in seen and seen[key] != n.id:
+                plan.rewire(n.id, seen[key])
+                plan.prune_dead()
+                report.log("subplan_dedup",
+                           f"merged duplicate {n.op} {n.id} -> {seen[key]}")
+                changed = again = True
+                break
+            seen[key] = n.id
+    return changed

@@ -1,0 +1,420 @@
+"""SQL frontend: parse inference queries into Raven IR (paper §3.2).
+
+Supports the paper's query shape (SQL Server's ``PREDICT`` statement, §5):
+
+    SELECT pid, age, PREDICT(MODEL='los_gbt') AS los
+    FROM patient_info
+      JOIN blood_tests ON pid
+      JOIN prenatal_tests ON pid
+    WHERE pregnant = 1 AND PREDICT(MODEL='los_gbt') > 7
+    ORDER BY los DESC LIMIT 100
+
+plus aggregates / GROUP BY.  ``PREDICT(MODEL='name')`` invokes a stored model
+pipeline; its input columns come from the pipeline signature in the model
+store.  ``PREDICT_PROBA`` yields the positive-class probability for binary
+classifiers.
+
+The translation is classic parser -> logical plan; the only novel part is how
+model invocations embed: each distinct PREDICT call becomes a
+``featurize -> predict_model -> attach_column`` IR chain and its expression
+site is rewritten to reference the attached column, keeping scalar expressions
+purely relational.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..relational.expr import BinOp, CaseWhen, Col, Const, Expr, UnaryOp
+from .ir import Category, Node, Plan
+
+__all__ = ["parse_query", "SqlError"]
+
+
+class SqlError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(r"""
+    (?P<ws>\s+)
+  | (?P<num>\d+\.\d*|\.\d+|\d+)
+  | (?P<str>'[^']*')
+  | (?P<op><=|>=|<>|!=|==|=|<|>|\+|-|\*|/|\(|\)|,|\.)
+  | (?P<ident>[A-Za-z_][A-Za-z_0-9]*)
+""", re.VERBOSE)
+
+_KEYWORDS = {
+    "SELECT", "FROM", "WHERE", "JOIN", "ON", "AS", "AND", "OR", "NOT",
+    "GROUP", "ORDER", "BY", "ASC", "DESC", "LIMIT", "PREDICT",
+    "PREDICT_PROBA", "MODEL", "SUM", "AVG", "COUNT", "MIN", "MAX", "CASE",
+    "WHEN", "THEN", "ELSE", "END", "BETWEEN", "IN",
+}
+
+
+@dataclasses.dataclass
+class Token:
+    kind: str       # num | str | op | ident | kw
+    value: Any
+
+
+def _lex(sql: str) -> List[Token]:
+    out: List[Token] = []
+    pos = 0
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            raise SqlError(f"lex error at: {sql[pos:pos+20]!r}")
+        pos = m.end()
+        if m.lastgroup == "ws":
+            continue
+        if m.lastgroup == "num":
+            text = m.group()
+            out.append(Token("num", float(text) if "." in text else int(text)))
+        elif m.lastgroup == "str":
+            out.append(Token("str", m.group()[1:-1]))
+        elif m.lastgroup == "op":
+            out.append(Token("op", m.group()))
+        else:
+            word = m.group()
+            if word.upper() in _KEYWORDS:
+                out.append(Token("kw", word.upper()))
+            else:
+                out.append(Token("ident", word))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parser
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PredictCall:
+    model_name: str
+    proba: bool
+    placeholder: str      # column name the expression references
+
+
+@dataclasses.dataclass
+class _SelectItem:
+    expr: Optional[Expr]
+    agg: Optional[Tuple[str, Optional[str]]]    # (fn, column)
+    alias: str
+    star: bool = False
+
+
+class _Parser:
+    def __init__(self, tokens: List[Token]):
+        self.toks = tokens
+        self.i = 0
+        self.predicts: List[_PredictCall] = []
+
+    # -- token helpers -------------------------------------------------------
+    def peek(self) -> Optional[Token]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> Token:
+        tok = self.peek()
+        if tok is None:
+            raise SqlError("unexpected end of query")
+        self.i += 1
+        return tok
+
+    def accept(self, kind: str, value: Any = None) -> Optional[Token]:
+        tok = self.peek()
+        if tok and tok.kind == kind and (value is None or tok.value == value):
+            self.i += 1
+            return tok
+        return None
+
+    def expect(self, kind: str, value: Any = None) -> Token:
+        tok = self.accept(kind, value)
+        if tok is None:
+            raise SqlError(f"expected {value or kind}, got {self.peek()}")
+        return tok
+
+    # -- expressions ---------------------------------------------------------
+    def parse_expr(self) -> Expr:
+        return self._or()
+
+    def _or(self) -> Expr:
+        left = self._and()
+        while self.accept("kw", "OR"):
+            left = BinOp("or", left, self._and())
+        return left
+
+    def _and(self) -> Expr:
+        left = self._not()
+        while self.accept("kw", "AND"):
+            left = BinOp("and", left, self._not())
+        return left
+
+    def _not(self) -> Expr:
+        if self.accept("kw", "NOT"):
+            return UnaryOp("not", self._not())
+        return self._cmp()
+
+    def _cmp(self) -> Expr:
+        left = self._add()
+        tok = self.peek()
+        if tok and tok.kind == "op" and tok.value in (
+                "=", "==", "!=", "<>", "<", "<=", ">", ">="):
+            self.next()
+            op = {"=": "==", "<>": "!="}.get(tok.value, tok.value)
+            return BinOp(op, left, self._add())
+        if tok and tok.kind == "kw" and tok.value == "BETWEEN":
+            self.next()
+            lo = self._add()
+            self.expect("kw", "AND")
+            hi = self._add()
+            return BinOp("and", BinOp(">=", left, lo), BinOp("<=", left, hi))
+        return left
+
+    def _add(self) -> Expr:
+        left = self._mul()
+        while True:
+            tok = self.peek()
+            if tok and tok.kind == "op" and tok.value in ("+", "-"):
+                self.next()
+                left = BinOp(tok.value, left, self._mul())
+            else:
+                return left
+
+    def _mul(self) -> Expr:
+        left = self._atom()
+        while True:
+            tok = self.peek()
+            if tok and tok.kind == "op" and tok.value in ("*", "/"):
+                self.next()
+                left = BinOp(tok.value, left, self._atom())
+            else:
+                return left
+
+    def _atom(self) -> Expr:
+        tok = self.next()
+        if tok.kind == "num":
+            return Const(tok.value)
+        if tok.kind == "str":
+            return Const(tok.value)
+        if tok.kind == "op" and tok.value == "(":
+            e = self.parse_expr()
+            self.expect("op", ")")
+            return e
+        if tok.kind == "op" and tok.value == "-":
+            return UnaryOp("neg", self._atom())
+        if tok.kind == "kw" and tok.value in ("PREDICT", "PREDICT_PROBA"):
+            return self._predict_call(proba=tok.value == "PREDICT_PROBA")
+        if tok.kind == "kw" and tok.value == "CASE":
+            return self._case()
+        if tok.kind == "ident":
+            return Col(tok.value)
+        raise SqlError(f"unexpected token {tok}")
+
+    def _case(self) -> Expr:
+        branches = []
+        while self.accept("kw", "WHEN"):
+            cond = self.parse_expr()
+            self.expect("kw", "THEN")
+            val = self.parse_expr()
+            branches.append((cond, val))
+        default: Expr = Const(0.0)
+        if self.accept("kw", "ELSE"):
+            default = self.parse_expr()
+        self.expect("kw", "END")
+        return CaseWhen(tuple(branches), default)
+
+    def _predict_call(self, proba: bool) -> Expr:
+        self.expect("op", "(")
+        self.expect("kw", "MODEL")
+        self.expect("op", "=")
+        name = self.expect("str").value
+        self.expect("op", ")")
+        # One attach per distinct (model, proba) call.
+        for pc in self.predicts:
+            if pc.model_name == name and pc.proba == proba:
+                return Col(pc.placeholder)
+        placeholder = f"__pred_{len(self.predicts)}_{name}"
+        self.predicts.append(_PredictCall(name, proba, placeholder))
+        return Col(placeholder)
+
+    # -- query ---------------------------------------------------------------
+    def parse_query(self):
+        self.expect("kw", "SELECT")
+        items = [self._select_item()]
+        while self.accept("op", ","):
+            items.append(self._select_item())
+        self.expect("kw", "FROM")
+        tables = [self.expect("ident").value]
+        join_keys: List[str] = []
+        while self.accept("kw", "JOIN"):
+            tables.append(self.expect("ident").value)
+            self.expect("kw", "ON")
+            join_keys.append(self.expect("ident").value)
+        where = None
+        if self.accept("kw", "WHERE"):
+            where = self.parse_expr()
+        group_by = None
+        if self.accept("kw", "GROUP"):
+            self.expect("kw", "BY")
+            group_by = self.expect("ident").value
+        order_by = None
+        descending = False
+        if self.accept("kw", "ORDER"):
+            self.expect("kw", "BY")
+            order_by = self.expect("ident").value
+            if self.accept("kw", "DESC"):
+                descending = True
+            else:
+                self.accept("kw", "ASC")
+        lim = None
+        if self.accept("kw", "LIMIT"):
+            lim = int(self.expect("num").value)
+        if self.peek() is not None:
+            raise SqlError(f"trailing tokens at {self.peek()}")
+        return items, tables, join_keys, where, group_by, \
+            (order_by, descending), lim
+
+    def _select_item(self) -> _SelectItem:
+        if self.accept("op", "*"):
+            return _SelectItem(None, None, "*", star=True)
+        tok = self.peek()
+        if tok and tok.kind == "kw" and tok.value in (
+                "SUM", "AVG", "COUNT", "MIN", "MAX"):
+            fn = self.next().value.lower()
+            self.expect("op", "(")
+            if self.accept("op", "*"):
+                column = None
+            else:
+                column = self.expect("ident").value
+            self.expect("op", ")")
+            alias = fn if column is None else f"{fn}_{column}"
+            if self.accept("kw", "AS"):
+                alias = self.expect("ident").value
+            return _SelectItem(None, (fn, column), alias)
+        expr = self.parse_expr()
+        alias = expr.name if isinstance(expr, Col) else f"expr_{self.i}"
+        if self.accept("kw", "AS"):
+            alias = self.expect("ident").value
+        return _SelectItem(expr, None, alias)
+
+
+# ---------------------------------------------------------------------------
+# IR construction
+# ---------------------------------------------------------------------------
+
+def _expr_refs_any(expr: Expr, names: Sequence[str]) -> bool:
+    return bool(expr.references() & set(names))
+
+
+def parse_query(sql: str, catalog) -> Plan:
+    """Parse ``sql`` into a Raven IR plan, resolving models via ``catalog``
+    (needs ``get_model(name) -> Pipeline``)."""
+    parser = _Parser(_lex(sql))
+    items, tables, join_keys, where, group_by, (order_key, desc), lim = \
+        parser.parse_query()
+
+    plan = Plan()
+    current = plan.emit("scan", Category.RA, [], "table", table=tables[0])
+    for t, key in zip(tables[1:], join_keys):
+        right = plan.emit("scan", Category.RA, [], "table", table=t)
+        current = plan.emit("join", Category.RA, [current, right], "table",
+                            on=key, how="inner")
+
+    placeholders = [p.placeholder for p in parser.predicts]
+
+    # WHERE: conjuncts that don't touch predictions filter *before* the model
+    # runs (paper: this enables predicate-based model pruning); conjuncts
+    # referencing PREDICT output filter after attachment.
+    pre_conjuncts: List[Expr] = []
+    post_conjuncts: List[Expr] = []
+    if where is not None:
+        from ..relational.expr import conjuncts as split
+        for c in split(where):
+            (post_conjuncts if _expr_refs_any(c, placeholders)
+             else pre_conjuncts).append(c)
+
+    def _conjoin(cs: List[Expr]) -> Expr:
+        e = cs[0]
+        for c in cs[1:]:
+            e = BinOp("and", e, c)
+        return e
+
+    if pre_conjuncts:
+        current = plan.emit("filter", Category.RA, [current], "table",
+                            predicate=_conjoin(pre_conjuncts))
+
+    # Attach one prediction column per distinct PREDICT call.
+    for pc in parser.predicts:
+        pipeline = catalog.get_model(pc.model_name)
+        feats = plan.emit("featurize", Category.MLD, [current], "matrix",
+                          pipeline_name=pc.model_name,
+                          featurizers=pipeline.featurizers,
+                          input_columns=pipeline.input_columns())
+        pred = plan.emit("predict_model", Category.MLD, [feats], "matrix",
+                         model=pipeline.model, model_name=pc.model_name,
+                         proba=pc.proba, task=pipeline.metadata.task,
+                         flavor=pipeline.metadata.flavor)
+        current = plan.emit("attach_column", Category.RA, [current, pred],
+                            "table", name=pc.placeholder)
+
+    if post_conjuncts:
+        current = plan.emit("filter", Category.RA, [current], "table",
+                            predicate=_conjoin(post_conjuncts))
+
+    if group_by is not None:
+        aggs = {}
+        for it in items:
+            if it.agg is not None:
+                aggs[it.alias] = it.agg
+            elif it.expr is not None and isinstance(it.expr, Col) \
+                    and it.expr.name == group_by:
+                pass
+            elif not it.star:
+                raise SqlError(
+                    f"non-aggregated select item {it.alias!r} with GROUP BY")
+        current = plan.emit("group_agg", Category.RA, [current], "table",
+                            key=group_by, aggs=aggs)
+    else:
+        # extended projection for computed items
+        computed = [(it.alias, it.expr) for it in items
+                    if it.expr is not None and not isinstance(it.expr, Col)]
+        for alias, expr in computed:
+            current = plan.emit("map", Category.RA, [current], "table",
+                                name=alias, expr=expr)
+        if any(it.agg for it in items):
+            aggs = {it.alias: it.agg for it in items if it.agg}
+            current = plan.emit("group_agg", Category.RA, [current], "table",
+                                key=None, aggs=aggs)
+
+    if order_key is not None:
+        current = plan.emit("order_by", Category.RA, [current], "table",
+                            key=order_key, descending=desc)
+    if lim is not None:
+        current = plan.emit("limit", Category.RA, [current], "table", n=lim)
+
+    # final projection
+    if group_by is None and not any(it.agg for it in items) \
+            and not any(it.star for it in items):
+        names = []
+        for it in items:
+            if isinstance(it.expr, Col) and it.alias == it.expr.name:
+                names.append(it.expr.name)
+            else:
+                names.append(it.alias)
+        # rename prediction placeholders chosen via AS
+        renames = {it.expr.name: it.alias for it in items
+                   if isinstance(it.expr, Col) and it.alias != it.expr.name}
+        if renames:
+            current = plan.emit("rename", Category.RA, [current], "table",
+                                mapping=renames)
+        current = plan.emit("project", Category.RA, [current], "table",
+                            columns=names)
+
+    plan.output = current
+    plan.validate()
+    return plan

@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic paper datasets + LM token streams."""
+
+from .synthetic import flight_features, hospital_features, hospital_tables
+
+__all__ = ["flight_features", "hospital_features", "hospital_tables"]

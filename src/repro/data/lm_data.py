@@ -1,0 +1,96 @@
+"""Deterministic, seekable LM token pipeline with host prefetch.
+
+Restart-exactly-once requires the stream to be a pure function of
+(seed, step): batch k is always the same tokens, on any host, after any
+restart.  We synthesize a Zipf-distributed token stream with short-range
+structure (enough for loss to drop measurably in the example runs) using
+counter-based RNG (threefry) keyed by (seed, step).
+
+``PrefetchIterator`` overlaps host batch synthesis with device compute —
+the framework-level piece of straggler mitigation.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["TokenStream", "PrefetchIterator"]
+
+
+class TokenStream:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, zipf_a: float = 1.3,
+                 extra_specs: Optional[Dict] = None):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.zipf_a = zipf_a
+        self.extra_specs = dict(extra_specs or {})
+        # fixed Zipf-ish unigram table (stable across restarts)
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        probs = ranks ** (-zipf_a)
+        self._cdf = np.cumsum(probs / probs.sum())
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """Pure function of (seed, step)."""
+        rng = np.random.default_rng((self.seed << 32) ^ step)
+        u = rng.random((self.global_batch, self.seq_len))
+        tokens = np.searchsorted(self._cdf, u).astype(np.int32)
+        # short-range structure: with prob .5 repeat the previous token + 1
+        rep = rng.random((self.global_batch, self.seq_len)) < 0.5
+        shifted = np.roll(tokens, 1, axis=1)
+        tokens = np.where(rep, (shifted + 1) % self.vocab_size, tokens)
+        tokens = np.clip(tokens, 0, self.vocab_size - 1)
+        out = {"tokens": tokens}
+        for name, spec in self.extra_specs.items():
+            shape, dtype = spec
+            out[name] = rng.standard_normal(
+                (self.global_batch,) + tuple(shape)).astype(dtype)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class PrefetchIterator:
+    """Host-thread prefetch of upcoming batches (depth-bounded)."""
+
+    def __init__(self, stream: TokenStream, start_step: int = 0,
+                 depth: int = 2, shardings=None):
+        self.stream = stream
+        self.depth = depth
+        self.shardings = shardings
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.stream.batch(step)
+            if self.shardings is not None:
+                batch = {k: jax.device_put(v, self.shardings.get(k))
+                         for k, v in batch.items()}
+            try:
+                self._q.put((step, batch), timeout=1.0)
+            except queue.Full:
+                continue
+            step += 1
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, compression, elasticity, fault tolerance."""

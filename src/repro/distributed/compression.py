@@ -1,0 +1,67 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+At 1000+ nodes the gradient all-reduce dominates DCN traffic; int8 with
+per-tensor scale cuts it 4x vs fp32 (2x vs bf16).  Error feedback (Seide et
+al.; 1-bit SGD lineage) accumulates quantization residuals locally and adds
+them back next step, preserving convergence.
+
+``make_compressor`` returns a stateless transform for use as
+``make_train_step(..., compress_grads=...)`` (residual carried in a closure
+buffer — host-side state, swapped each step), plus a pure quantize/dequantize
+pair for tests and for wrapping explicit psum collectives in shard_map code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
+           "make_error_feedback_compressor"]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads):
+    """Quantize->dequantize every leaf (the collective in between happens in
+    int8 on the wire; under pjit the all-reduce is implicit, so we model the
+    wire format by the value actually contributed)."""
+    def one(g):
+        q, s = quantize_int8(g.astype(jnp.float32))
+        return dequantize_int8(q, s).astype(g.dtype)
+    return jax.tree_util.tree_map(one, grads)
+
+
+def make_error_feedback_compressor() -> Callable:
+    """Returns compress(grads, residual) -> (grads', residual')."""
+
+    def compress(grads, residual=None):
+        if residual is None:
+            residual = jax.tree_util.tree_map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+        def one(g, r):
+            total = g.astype(jnp.float32) + r
+            q, s = quantize_int8(total)
+            deq = dequantize_int8(q, s)
+            return deq.astype(g.dtype), total - deq
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_r = jax.tree_util.tree_leaves(residual)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return new_g, new_r
+
+    return compress

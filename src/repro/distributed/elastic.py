@@ -1,0 +1,77 @@
+"""Elastic scaling: reshard any checkpoint onto any mesh.
+
+Checkpoints store *global* (unsharded) arrays (train.checkpoint), so scaling
+from N to M nodes is: build the new mesh, derive the new shardings from the
+same logical-axis rules, and ``restore_checkpoint(..., shardings=new)``.
+This module adds the planning/validation layer: capacity checks (does the
+model still fit?), batch re-splitting, and a one-call ``rescale``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..train.checkpoint import restore_checkpoint
+from .sharding import train_rules, tree_shardings
+
+__all__ = ["RescalePlan", "plan_rescale", "rescale_state"]
+
+_V5E_HBM = 16 * 1024 ** 3
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    old_devices: int
+    new_devices: int
+    bytes_per_device: int
+    fits: bool
+    global_batch_multiple: int     # new data-parallel degree
+
+    def summary(self) -> str:
+        return (f"rescale {self.old_devices} -> {self.new_devices} devices; "
+                f"{self.bytes_per_device/1e9:.2f} GB/device "
+                f"({'fits' if self.fits else 'DOES NOT FIT'}); "
+                f"global batch must divide {self.global_batch_multiple}")
+
+
+def _tree_bytes(tree_like) -> int:
+    return sum(int(np.prod(l.shape)) * jax.dtypes.canonicalize_dtype(
+        l.dtype).itemsize for l in jax.tree_util.tree_leaves(tree_like))
+
+
+def plan_rescale(state_like, old_mesh, new_mesh,
+                 hbm_per_device: int = _V5E_HBM) -> RescalePlan:
+    total = _tree_bytes(state_like)
+    new_n = new_mesh.devices.size
+    per_dev = total // new_n           # fully-sharded state (FSDP x TP)
+    data_par = 1
+    for a in ("pod", "data"):
+        if a in new_mesh.shape:
+            data_par *= new_mesh.shape[a]
+    return RescalePlan(
+        old_devices=old_mesh.devices.size if old_mesh is not None else 0,
+        new_devices=new_n,
+        bytes_per_device=per_dev,
+        fits=per_dev < hbm_per_device * 0.9,
+        global_batch_multiple=data_par,
+    )
+
+
+def rescale_state(ckpt_root: str, state_like, new_mesh,
+                  rules: Optional[Dict] = None,
+                  step: Optional[int] = None):
+    """Load a checkpoint resharded onto ``new_mesh``.  Works for both scale
+    up and scale down; all data movement is host-side (restore) + device_put
+    with the new shardings."""
+    rules = rules or train_rules(new_mesh)
+    from ..models.layers import param_axes  # noqa: F401 (doc pointer)
+    shardings = None
+    if hasattr(state_like, "keys") and "logical_axes" in state_like:
+        shardings = tree_shardings(new_mesh, state_like["logical_axes"],
+                                   rules)
+    return restore_checkpoint(ckpt_root, state_like, step=step,
+                              shardings=shardings)

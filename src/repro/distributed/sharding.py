@@ -1,0 +1,113 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Params carry logical axes (``embed``, ``heads``, ``kv``, ``mlp``, ``vocab``,
+``expert``, ``layers``); a rule table maps them onto the physical mesh per
+workload:
+
+- **train**: FSDP(ZeRO-3) x TP — ``embed`` fully shards over the data axes
+  (params are gathered per layer just-in-time by GSPMD), ``heads/mlp/vocab/
+  expert`` shard over ``model``.  Activations: batch over data axes,
+  sequence over ``model`` between blocks (Megatron sequence parallelism).
+- **serve**: TP only — weights replicated over data axes (every data-parallel
+  serving group holds a full TP-sharded replica), batch over data axes,
+  KV-cache *sequence* over ``model`` (flash-decoding style; no replication of
+  KV for GQA archs whose n_kv < model-axis size).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Rules", "train_rules", "serve_rules", "logical_to_pspec",
+           "tree_pspecs", "tree_shardings", "activation_specs",
+           "data_axes_of"]
+
+Rules = Dict[str, Any]
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def train_rules(mesh: Mesh) -> Rules:
+    fsdp = data_axes_of(mesh)
+    return {
+        "layers": None,
+        "vocab": "model",
+        "embed": fsdp,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "expert": "model",
+    }
+
+
+def serve_rules(mesh: Mesh) -> Rules:
+    return {
+        "layers": None,
+        "vocab": "model",
+        "embed": None,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "expert": "model",
+    }
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...], rules: Rules,
+                     shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Map one param's logical axes to a PartitionSpec.
+
+    If ``shape`` is given, a mesh-axis assignment that does not divide the
+    dimension evenly is dropped (GSPMD supports uneven sharding via padding,
+    but even sharding compiles to tighter collectives; our configs are chosen
+    so the hot dims divide)."""
+    entries = []
+    for i, ax in enumerate(axes):
+        ent = rules.get(ax) if ax is not None else None
+        entries.append(ent if ent is not None else None)
+    return P(*entries)
+
+
+def tree_pspecs(logical_axes_tree, rules: Rules):
+    return jax.tree_util.tree_map(
+        lambda axes: logical_to_pspec(axes, rules),
+        logical_axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_shardings(mesh: Mesh, logical_axes_tree, rules: Rules):
+    specs = tree_pspecs(logical_axes_tree, rules)
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_specs(mesh: Mesh, mode: str) -> Dict[str, Any]:
+    """with_sharding_constraint specs used inside the model.
+
+    train: residual [B,S,D] -> (fsdp, model, -) sequence parallelism;
+           logits [B,S,V]  -> (fsdp, model, -) then vocab handled by head
+           sharding; heads [B,S,H,hd] -> (fsdp, -, model, -).
+    serve: batch over fsdp only (S=1 for decode).
+    """
+    fsdp = data_axes_of(mesh)
+    if mode == "train":
+        return {
+            "residual": NamedSharding(mesh, P(fsdp, "model", None)),
+            # q/k/v head shardings propagate from the projection weights
+            # (head *counts* like hymba's 25 don't divide the model axis;
+            # the flattened head dims always do).
+            "heads": None,
+            "logits": NamedSharding(mesh, P(fsdp, None, "model")),
+        }
+    return {
+        "residual": NamedSharding(mesh, P(fsdp, None, None)),
+        "heads": None,
+        "logits": NamedSharding(mesh, P(fsdp, None, "model")),
+    }

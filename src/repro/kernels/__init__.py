@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit
+wrapper with interpret fallback), ref.py (pure-jnp oracle).  Validated on CPU
+via interpret=True; BlockSpecs target TPU v5e VMEM/MXU.
+"""

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode is memory-bound: the step reads the whole KV cache once.  The kernel
+streams KV blocks through VMEM (grid axis 2) while the per-(batch, kv-head)
+query group [G, D] stays resident; online-softmax scratch carries across
+blocks — flash-decoding without materializing [T] scores in HBM.  Invalid
+cache slots (>= cache_len) mask to -inf, so ring buffers and partially-filled
+caches work unchanged.
+
+Grid: (B, KV, T/BK).  VMEM per cell: k/v blocks 2*BK*D*4 (BK=512, D=128:
+512KB) + q/acc [G,D] (~128KB at G<=8) — v5e-friendly with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, softcap: float):
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                  # [G, D]
+    k = k_ref[0]                                     # [BK, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)          # [G, BK]
+    valid_len = len_ref[0]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < valid_len, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_len, *,
+                            softcap: float = 0.0, block_k: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q [B,1,H,D]; caches [B,T,KV,D]; cache_len [B] -> out [B,1,H,D]."""
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    block_k = min(block_k, t)
+    t_pad = ((t + block_k - 1) // block_k) * block_k
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+
+    qt = q.reshape(b, kv, g, d)                       # [B,KV,G,D]
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, d)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, d)
+    lens = jnp.asarray(cache_len, jnp.int32).reshape(b)
+
+    grid = (b, kv, t_pad // block_k)
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k,
+                               softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki, kv_=kv: (bi * kv_ + hi, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki, kv_=kv: (bi * kv_ + hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qt, kt, vt)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,26 @@
+"""Jit wrapper for decode attention with interpret fallback off-TPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention_pallas
+
+__all__ = ["decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_k",
+                                             "interpret"))
+def _run(q, k_cache, v_cache, cache_len, softcap, block_k, interpret):
+    return decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                                   softcap=softcap, block_k=block_k,
+                                   interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, softcap: float = 0.0,
+                     block_k: int = 512, interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(q, k_cache, v_cache, cache_len, softcap, block_k, interpret)

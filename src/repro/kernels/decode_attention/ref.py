@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for decode attention (mirrors
+repro.models.attention.decode_attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len,
+                         softcap: float = 0.0) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(t)[None, :] < jnp.asarray(cache_len)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Jit wrapper: flash attention with interpret fallback off-TPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def _run(q, k, v, causal, window, softcap, block_q, block_k, interpret):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(q, k, v, causal, window, softcap, block_q, block_k,
+                interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """q [B,S,H,D]; k,v [B,T,KV,D] -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal:
+        diff = jnp.arange(s)[:, None] - jnp.arange(t)[None, :]
+        mask = diff >= 0
+        if window > 0:
+            mask = jnp.logical_and(mask, diff < window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,31 @@
+"""Jit wrapper for the WKV6 kernel (pads S to the chunk size)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .rwkv6_scan import rwkv6_scan_pallas
+
+__all__ = ["rwkv6_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _run(r, k, v, w, u, chunk, interpret):
+    b, s, h, kk = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    y = rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+    return y[:, :s]
+
+
+def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(r, k, v, w, u, chunk, interpret)

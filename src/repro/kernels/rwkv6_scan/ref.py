@@ -1,0 +1,3 @@
+"""Oracle for the WKV6 kernel: the naive per-step recurrence."""
+
+from repro.models.rwkv6 import wkv6_reference as wkv6_scan_ref  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence (RWKV-6 "Finch").
+
+The XLA lowering of the chunked recurrence materializes the per-chunk
+pairwise decay tensor [B,q,q,H,K] in HBM every chunk (the dominant memory
+term in the rwkv6 train_4k baseline roofline — see EXPERIMENTS.md §Perf).
+Here the whole chunk computation lives in VMEM: the per-(batch,head) state
+[K,V] persists in scratch across the sequential chunk axis, and the [q,q,K]
+pairwise tensor never leaves the core.
+
+Grid: (B*H, n_chunks) — chunks innermost (sequential, carrying state).
+VMEM per cell at q=16, K=V=64: r/k/v/w chunks 4x16x64x4B = 16KB, pairwise
+16x16x64x4B = 64KB, state 16KB — tiny; the win is avoiding the HBM round
+trips, not occupancy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_scan_pallas"]
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)                  # [q, K]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                  # [1, K] -> broadcast
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), -60.0)
+    cum = jnp.cumsum(logw, axis=0)                    # [q, K] inclusive
+    cum_ex = cum - logw
+
+    st = state_scr[...]                               # [K, V]
+    y_inter = jax.lax.dot(r * jnp.exp(cum_ex), st,
+                          preferred_element_type=jnp.float32)
+
+    # pairwise decays (exponents <= 0; [q, q, K] stays in VMEM)
+    diff = cum_ex[:, None, :] - cum[None, :, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = (t_idx > s_idx)[:, :, None]
+    dec = jnp.where(strict, jnp.exp(diff), 0.0)
+    att = jnp.sum(r[:, None, :] * k[None, :, :] * dec, axis=-1)  # [q, q]
+    diag = jnp.sum(r * (u * k), axis=-1)              # [q]
+    y_intra = jax.lax.dot(att, v, preferred_element_type=jnp.float32) \
+        + diag[:, None] * v
+
+    total = cum[-1]                                   # [K]
+    k_dec = k * jnp.exp(total[None, :] - cum)
+    state_scr[...] = st * jnp.exp(total)[:, None] + jax.lax.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+
+def rwkv6_scan_pallas(r, k, v, w, u, *, chunk: int = 16,
+                      interpret: bool = False) -> jnp.ndarray:
+    """r,k,v,w [B,S,H,K]; u [H,K] -> y [B,S,H,K(=V)].
+
+    S must be a multiple of ``chunk`` (callers pad; the model pads with
+    w=1 so padded steps are decay-neutral).
+    """
+    b, s, h, kk = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    def resh(a):
+        # [B,S,H,K] -> [B*H, n_chunks, q, K]
+        return a.reshape(b, n_chunks, chunk, h, kk) \
+            .transpose(0, 3, 1, 2, 4).reshape(b * h, n_chunks, chunk, kk)
+
+    rs, ks, vs, ws = resh(r), resh(k), resh(v), resh(w)
+    us = jnp.broadcast_to(u[None], (b, h, kk)).reshape(b * h, 1, kk)
+
+    grid = (b * h, n_chunks)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, kk), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, kk), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, kk), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, kk),
+                               lambda bh, ci: (bh, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_chunks, chunk, kk),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
+        interpret=interpret,
+    )(rs, ks, vs, ws, us)
+    return y.reshape(b, h, n_chunks, chunk, kk).transpose(0, 2, 3, 1, 4) \
+        .reshape(b, s, h, kk)

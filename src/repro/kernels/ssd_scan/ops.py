@@ -1,0 +1,33 @@
+"""Jit wrapper for the SSD kernel (pads S to the chunk size)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["ssd_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _run(x, dt, a, bmat, cmat, chunk, interpret):
+    b, s, h, p = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x, dt, a, bmat, cmat, chunk=chunk,
+                        interpret=interpret)
+    return y[:, :s]
+
+
+def ssd_scan(x, dt, a, bmat, cmat, chunk: int = 128,
+             interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _run(x, dt, a, bmat, cmat, chunk, interpret)

@@ -1,0 +1,12 @@
+"""Oracle for the SSD kernel: naive per-step recurrence."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_reference
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat) -> jnp.ndarray:
+    y, _ = ssd_reference(x, dt, a, bmat, cmat)
+    return y

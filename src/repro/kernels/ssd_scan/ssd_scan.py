@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: chunked SSD (Mamba-2 style) selective-state-space scan.
+
+Within a chunk everything is VMEM-resident matmul work (decay matrix [q,q]
+per head, scores C.B^T [q,q]); the [P,N] state per (batch, head) carries in
+scratch across the sequential chunk axis.  This removes the HBM traffic of
+the XLA lowering (per-chunk decay/score tensors) for Hymba's SSM branch.
+
+Grid: (B*H, n_chunks).  VMEM per cell at q=128, P=64, N=16: x 32KB,
+b/c 8KB, decay [q,q] 64KB, state 4KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)                  # [q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)                # [q, 1]
+    a = a_ref[0, 0]                                   # scalar decay rate
+    bmat = b_ref[0, 0].astype(jnp.float32)               # [q, N]
+    cmat = c_ref[0, 0].astype(jnp.float32)               # [q, N]
+
+    da = dt * a                                       # [q,1] (<= 0)
+    csum = jnp.cumsum(da, axis=0)                     # [q,1] inclusive
+    # intra-chunk: y[t] += sum_{s<=t} (C_t.B_s) exp(csum_t-csum_s) dt_s x_s
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    # clamp the (masked-out) t<s exponents at 0 so no inf*0 leaks through
+    dec = jnp.exp(jnp.minimum(csum - csum[:, 0][None, :], 0.0))   # [t, s]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, dec.shape, 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, dec.shape, 1)
+    w = jnp.where(t_idx >= s_idx, scores * dec, 0.0) * dt[:, 0][None, :]
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y[t] += exp(csum_t) * C_t . state
+    st = state_scr[...]                               # [P, N]
+    y += jnp.exp(csum) * jax.lax.dot_general(
+        cmat, st, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: S' = exp(csum_last) S + sum_s exp(csum_last-csum_s)
+    #                                        dt_s x_s B_s^T
+    rem = jnp.exp(csum[-1, 0] - csum) * dt            # [q,1]
+    contrib = jax.lax.dot_general(x, bmat * rem, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_scr[...] = st * jnp.exp(csum[-1, 0]) + contrib
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, a, bmat, cmat, *, chunk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """x [B,S,H,P]; dt [B,S,H]; a [H]; bmat/cmat [B,S,N] -> y [B,S,H,P]."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    xs = x.reshape(b, n_chunks, chunk, h, p).transpose(0, 3, 1, 2, 4) \
+        .reshape(b * h, n_chunks, chunk, p)
+    dts = dt.reshape(b, n_chunks, chunk, h).transpose(0, 3, 1, 2) \
+        .reshape(b * h, n_chunks, chunk, 1)
+    a_rep = jnp.broadcast_to(a[None], (b, h)).reshape(b * h, 1)
+    bs = jnp.broadcast_to(
+        bmat.reshape(b, 1, n_chunks, chunk, n), (b, h, n_chunks, chunk, n)
+    ).reshape(b * h, n_chunks, chunk, n)
+    cs = jnp.broadcast_to(
+        cmat.reshape(b, 1, n_chunks, chunk, n), (b, h, n_chunks, chunk, n)
+    ).reshape(b * h, n_chunks, chunk, n)
+
+    grid = (b * h, n_chunks)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, ci: (bh, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, ci: (bh, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda bh, ci: (bh, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, n_chunks, chunk, p),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xs, dts, a_rep, bs, cs)
+    return y.reshape(b, h, n_chunks, chunk, p).transpose(0, 2, 3, 1, 4) \
+        .reshape(b, s, h, p)

@@ -1,0 +1,39 @@
+"""Jit wrapper for the tree-GEMM kernel, consuming EnsembleGemm artifacts."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tree_gemm import tree_gemm_pallas
+
+__all__ = ["tree_gemm"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("average", "n_trees",
+                                             "interpret"))
+def _run(x, a, b, c, d, e, n_trees: int, average: bool, interpret: bool):
+    out = tree_gemm_pallas(jnp.asarray(x, jnp.float32), a, b, c, d, e,
+                           interpret=interpret)
+    return out / n_trees if average else out
+
+
+def tree_gemm(ensemble, x: jnp.ndarray, interpret: bool = None
+              ) -> jnp.ndarray:
+    """Score an ``repro.ml.hummingbird.EnsembleGemm`` with the Pallas kernel.
+
+    On non-TPU backends runs in interpret mode (Pallas executes the kernel
+    body in Python) — correctness-identical, used by tests.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _run(x, jnp.asarray(ensemble.a), jnp.asarray(ensemble.b),
+                jnp.asarray(ensemble.c), jnp.asarray(ensemble.d),
+                jnp.asarray(ensemble.e), n_trees=ensemble.n_trees,
+                average=ensemble.average, interpret=interpret)

@@ -1,0 +1,379 @@
+"""Loop-aware cost analysis of optimized (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, but a
+layer-scan executes it ``n_layers`` times and a flash-attention KV scan
+``n_blocks`` times — so flat costs undercount by orders of magnitude.  This
+module parses ``compiled.as_text()`` (the per-device program) and computes
+trip-count-aware totals:
+
+- **flops**: 2 x |result| x |contraction| for every ``dot`` (including dots
+  inside fusion subcomputations), multiplied through enclosing while-loop
+  ``known_trip_count``s.  Transformer cost is dot-dominated; elementwise
+  flops are ignored (documented).
+- **bytes**: per instruction, result + operand bytes (fusions count their
+  boundary, not internals — a reasonable HBM-traffic model), loop-scaled.
+  ``dynamic-update-slice`` (and fusions rooted in one) is modeled IN-PLACE:
+  traffic = 2 x update bytes, not the full target buffer — XLA aliases the
+  target on TPU (donated/loop-carried buffers), so a KV-cache append reads
+  and writes one token's slice, not the whole cache.
+- **collective bytes**: per collective op, the *operand* sizes (the data each
+  device contributes), loop-scaled and broken out by collective type.
+
+All values are per device.  Used by launch/dryrun.py and benchmarks/roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a shape string like 'f32[32,256]{1,0}' or a tuple."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+    shapes: Dict[str, str]          # symbol table: instr/param name -> shape
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: Dict[str, float]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    header_re = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\.)")
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if current is None:
+            # computation headers sit at column 0 and end with '{'
+            # (instruction lines are indented)
+            if line.endswith("{") and not raw[:1].isspace() \
+                    and (stripped.startswith("%")
+                         or stripped.startswith("ENTRY")):
+                m = header_re.match(stripped)
+                if m:
+                    current = _Computation(m.group(1), [], {})
+                    # parameters: 'name: shape' pairs inside parens
+                    params = re.findall(r"([\w.\-]+):\s*((?:\([^)]*\)|"
+                                        r"[\w\[\]\{\},]+))", stripped)
+                    for pname, pshape in params:
+                        current.shapes[pname] = pshape
+            continue
+        if stripped == "}" or stripped.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, opcode = m.groups()
+            current.shapes[name] = shape
+            current.instrs.append(_Instr(name, shape, opcode, stripped))
+            # parameters appear as instructions too
+    if current is not None:
+        comps[current.name] = current
+    return comps
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    result_elems = 1
+    for d in _shape_dims(instr.shape):
+        result_elems *= d
+    # contraction size from lhs operand shape + contracting dims
+    after = instr.line.split("(", 1)[1]
+    ops = _OPERANDS_RE.findall(after)
+    contract = 1
+    m = _CONTRACT_RE.search(instr.line)
+    if m and ops:
+        lhs_shape = comp.shapes.get(ops[0], "")
+        dims = _shape_dims(lhs_shape)
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _operand_bytes(instr: _Instr, comp: _Computation) -> float:
+    after = instr.line.split("(", 1)
+    if len(after) < 2:
+        return 0.0
+    total = 0.0
+    # only operands before the first '),' metadata boundary
+    operand_part = after[1].split(")", 1)[0]
+    for op in _OPERANDS_RE.findall(operand_part):
+        if op in comp.shapes:
+            total += _shape_bytes(comp.shapes[op])
+    return total
+
+
+def _analyze_comp(comp_name: str, comps: Dict[str, _Computation],
+                  memo: Dict[str, Tuple[float, float, Dict[str, float]]],
+                  fusion_flops_memo: Dict[str, float]
+                  ) -> Tuple[float, float, Dict[str, float]]:
+    """Returns (flops, bytes, collective_bytes_by_type) for one execution of
+    ``comp_name``, recursing into loops (x trip count), calls and fusions."""
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    if comp is None:
+        return 0.0, 0.0, {}
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = {}
+    memo[comp_name] = (0.0, 0.0, {})      # cycle guard
+    for instr in comp.instrs:
+        op = instr.opcode
+        if op == "parameter":
+            continue
+        res_bytes = _shape_bytes(instr.shape)
+        opd_bytes = _operand_bytes(instr, comp)
+        if op == "while":
+            trips = 1
+            m = _TRIP_RE.search(instr.line)
+            if m:
+                trips = int(m.group(1))
+            body = _BODY_RE.search(instr.line)
+            cond = _COND_RE.search(instr.line)
+            if body:
+                f, b, c = _analyze_comp(body.group(1), comps, memo,
+                                        fusion_flops_memo)
+                flops += trips * f
+                bytes_ += trips * b
+                for k, v in c.items():
+                    coll[k] = coll.get(k, 0.0) + trips * v
+            if cond:
+                f, b, c = _analyze_comp(cond.group(1), comps, memo,
+                                        fusion_flops_memo)
+                flops += trips * f
+                bytes_ += trips * b
+            continue
+        if op in ("call", "conditional", "async-start"):
+            m = _CALLS_RE.search(instr.line)
+            if m:
+                f, b, c = _analyze_comp(m.group(1), comps, memo,
+                                        fusion_flops_memo)
+                flops += f
+                bytes_ += b
+                for k, v in c.items():
+                    coll[k] = coll.get(k, 0.0) + v
+            continue
+        if op in ("slice", "dynamic-slice"):
+            # reads only the sliced region
+            bytes_ += 2 * res_bytes
+            continue
+        if op == "dynamic-update-slice":
+            # in-place: read + write the update slice only
+            after = instr.line.split("(", 1)
+            ops_ = _OPERANDS_RE.findall(after[1].split(")", 1)[0]) \
+                if len(after) > 1 else []
+            upd = _shape_bytes(comp.shapes.get(ops_[1], "")) \
+                if len(ops_) > 1 else res_bytes
+            bytes_ += 2 * upd
+            continue
+        if op == "fusion":
+            m = _CALLS_RE.search(instr.line)
+            if m and _fusion_root_is_dus(m.group(1), comps):
+                # in-place cache append: traffic = everything but the
+                # aliased target buffer (largest operand), twice
+                after = instr.line.split("(", 1)
+                ops_ = _OPERANDS_RE.findall(after[1].split(")", 1)[0]) \
+                    if len(after) > 1 else []
+                sizes = sorted((_shape_bytes(comp.shapes.get(o, ""))
+                                for o in ops_), reverse=True)
+                small = sum(sizes[1:]) if len(sizes) > 1 else res_bytes
+                bytes_ += 2 * small
+                flops += _fusion_flops(m.group(1), comps, fusion_flops_memo)
+                continue
+            if m and m.group(1) in comps:
+                bytes_ += res_bytes + _fusion_param_traffic(
+                    instr, comp, comps[m.group(1)])
+                flops += _fusion_flops(m.group(1), comps, fusion_flops_memo)
+                continue
+            bytes_ += res_bytes + opd_bytes
+            if m:
+                flops += _fusion_flops(m.group(1), comps, fusion_flops_memo)
+            continue
+        if op == "dot":
+            flops += _dot_flops(instr, comp)
+            bytes_ += res_bytes + opd_bytes
+            continue
+        if op in _COLLECTIVES or any(instr.line.find(f" {c}(") >= 0
+                                     for c in _COLLECTIVES):
+            kind = op if op in _COLLECTIVES else next(
+                c for c in _COLLECTIVES if f" {c}(" in instr.line)
+            coll[kind] = coll.get(kind, 0.0) + opd_bytes
+            bytes_ += res_bytes + opd_bytes
+            continue
+        if op in ("get-tuple-element", "tuple", "bitcast", "constant",
+                  "after-all", "partition-id", "replica-id"):
+            continue    # bookkeeping: no data movement
+        # plain op: count memory traffic only
+        bytes_ += res_bytes + opd_bytes
+    memo[comp_name] = (flops, bytes_, coll)
+    return memo[comp_name]
+
+
+def _fusion_param_traffic(fusion_instr: _Instr, outer: _Computation,
+                          body: _Computation) -> float:
+    """Operand traffic of a fusion, slice-aware.
+
+    A fusion that slices a parameter (e.g. indexing one layer out of
+    scan-stacked weights: ``convert(slice(param))``) reads only the sliced
+    region, not the whole buffer.  For each fusion parameter we trace
+    slice/dynamic-slice users (through convert/bitcast/copy) and charge the
+    slice-result bytes; parameters never sliced charge full size.
+    """
+    after = fusion_instr.line.split("(", 1)
+    if len(after) < 2:
+        return 0.0
+    operand_names = _OPERANDS_RE.findall(after[1].split(")", 1)[0])
+    # body params in order
+    params = [i.name for i in body.instrs if i.opcode == "parameter"]
+    # resolve transparent forwarding: name -> ultimate source name
+    fwd: Dict[str, str] = {}
+    for i in body.instrs:
+        if i.opcode in ("convert", "bitcast", "copy"):
+            ops = _OPERANDS_RE.findall(i.line.split("(", 1)[1])
+            if ops:
+                fwd[i.name] = ops[0]
+
+    def source(name: str) -> str:
+        seen = set()
+        while name in fwd and name not in seen:
+            seen.add(name)
+            name = fwd[name]
+        return name
+
+    sliced_bytes: Dict[str, float] = {}
+    for i in body.instrs:
+        if i.opcode in ("slice", "dynamic-slice"):
+            ops = _OPERANDS_RE.findall(i.line.split("(", 1)[1])
+            if not ops:
+                continue
+            src = source(ops[0])
+            if src in params:
+                sliced_bytes[src] = sliced_bytes.get(src, 0.0) \
+                    + _shape_bytes(i.shape)
+    total = 0.0
+    for pos, op_name in enumerate(operand_names):
+        pname = params[pos] if pos < len(params) else None
+        if pname is not None and pname in sliced_bytes:
+            total += sliced_bytes[pname]
+        elif op_name in outer.shapes:
+            total += _shape_bytes(outer.shapes[op_name])
+    return total
+
+
+def _fusion_root_is_dus(comp_name: str, comps: Dict[str, _Computation]
+                        ) -> bool:
+    comp = comps.get(comp_name)
+    if comp is None or not comp.instrs:
+        return False
+    for instr in comp.instrs:
+        if "ROOT" in instr.line:
+            return instr.opcode == "dynamic-update-slice"
+    return comp.instrs[-1].opcode == "dynamic-update-slice"
+
+
+def _fusion_flops(comp_name: str, comps: Dict[str, _Computation],
+                  memo: Dict[str, float]) -> float:
+    """Dot flops inside a fusion subcomputation (bytes stay at boundary)."""
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    if comp is None:
+        return 0.0
+    memo[comp_name] = 0.0
+    flops = 0.0
+    for instr in comp.instrs:
+        if instr.opcode == "dot":
+            flops += _dot_flops(instr, comp)
+        elif instr.opcode == "fusion":
+            m = _CALLS_RE.search(instr.line)
+            if m:
+                flops += _fusion_flops(m.group(1), comps, memo)
+    memo[comp_name] = flops
+    return flops
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: computation named main-ish
+        for name in comps:
+            if "main" in name:
+                entry = name
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    # Fusion computations are reached via calls=; exclude them from top-level.
+    flops, bytes_, coll = _analyze_comp(entry, comps, {}, {})
+    return HloCost(flops=flops, bytes=bytes_, collective_bytes=coll)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods x 256 as
+(pod=2, data=16, model=16) — the ``pod`` axis composes with ``data`` for
+FSDP/batch sharding, so the same rules scale to N pods (DCN traffic stays on
+the pod axis: gradient/weight-gather collectives only).
+
+Defined as functions (never module-level) so importing this module touches no
+jax device state; the dry-run sets XLA_FLAGS for 512 host devices *before*
+any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)

@@ -1,0 +1,61 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the continuous-batching engine over synthetic requests and reports
+throughput / TTFT percentiles.  Reduced configs serve on CPU; full configs
+are exercised via the dry-run (launch.dryrun) on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    import jax
+
+    from ..configs import get_config, reduced_config
+    from ..models import build_model
+    from ..serve import InferenceEngine, Request, ServeConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = InferenceEngine(model, ServeConfig(
+        n_slots=args.slots,
+        max_len=args.prompt_len + args.new_tokens + 8,
+        eos_token=-1))
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        engine.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).astype(np.int32),
+            max_new_tokens=args.new_tokens))
+    engine.run_until_drained(params)
+    wall = time.time() - t0
+    done = engine.completed
+    toks = sum(len(r.output) for r in done)
+    ttft = sorted(1e3 * (r.first_token_at - r.submitted_at) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {wall:.2f}s "
+          f"({toks/wall:.1f} tok/s)")
+    print(f"TTFT p50={ttft[len(ttft)//2]:.0f}ms p95="
+          f"{ttft[int(len(ttft)*0.95)]:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

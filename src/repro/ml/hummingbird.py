@@ -1,0 +1,163 @@
+"""NN translation: decision trees / ensembles -> GEMM pipelines.
+
+The paper's "NN translation" (§4.2, Fig 2d) compiles classical ML operators to
+tensor programs so a NN runtime executes them with hardware acceleration.  We
+implement the GEMM strategy (as in Hummingbird, Nakandala et al.): a tree
+becomes three matmuls plus comparisons —
+
+    T = (X @ A  <= B)          gate each internal-node condition     [n, I]
+    S = T @ C                  count satisfied path conditions       [n, L]
+    leaf = argmax(S == D)      exactly-matching leaf                 [n]
+    out  = onehot(leaf) @ E    leaf payout                           [n, O]
+
+A [F, I] routes features to internal nodes, B [I] thresholds, C [I, L] is +1
+where leaf l sits in the left subtree of node i (condition must hold), -1 for
+the right subtree, 0 otherwise, D [L] = per-leaf count of +1 entries, and
+E [L, O] holds leaf values.
+
+On TPU this is MXU food: all dims are padded to multiples of 128 and the
+batched-ensemble form is evaluated by the Pallas kernel in
+``repro.kernels.tree_gemm`` (this module is also its pure-jnp oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .tree import TreeArrays
+
+__all__ = ["TreeGemm", "EnsembleGemm", "tree_to_gemm", "ensemble_to_gemm",
+           "predict_gemm", "predict_ensemble_gemm"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class TreeGemm:
+    """GEMM-form single tree.  Arrays are un-padded; padding happens at the
+    ensemble/kernel layer."""
+
+    a: np.ndarray  # [F, I] float32
+    b: np.ndarray  # [I]
+    c: np.ndarray  # [I, L]
+    d: np.ndarray  # [L]
+    e: np.ndarray  # [L, O]
+
+    @property
+    def n_features(self):
+        return self.a.shape[0]
+
+
+def tree_to_gemm(tree: TreeArrays) -> TreeGemm:
+    internal = np.nonzero(~tree.is_leaf())[0]
+    leaves = tree.leaf_indices()
+    imap = {int(n): i for i, n in enumerate(internal)}
+    lmap = {int(n): i for i, n in enumerate(leaves)}
+    n_i = max(len(internal), 1)
+    n_l = len(leaves)
+
+    a = np.zeros((tree.n_features, n_i), np.float32)
+    b = np.zeros((n_i,), np.float32)
+    c = np.zeros((n_i, n_l), np.float32)
+    d = np.zeros((n_l,), np.float32)
+    e = np.zeros((n_l, tree.n_outputs), np.float32)
+
+    for i, node in enumerate(internal):
+        a[tree.feature[node], i] = 1.0
+        b[i] = tree.threshold[node]
+
+    # Path walk: for each leaf record the (node, direction) path from root.
+    def walk(node: int, path: List[Tuple[int, bool]]):
+        if tree.left[node] < 0:
+            li = lmap[node]
+            for anc, went_left in path:
+                c[imap[anc], li] = 1.0 if went_left else -1.0
+                if went_left:
+                    d[li] += 1.0
+            e[li] = tree.value[node]
+            return
+        walk(int(tree.left[node]), path + [(node, True)])
+        walk(int(tree.right[node]), path + [(node, False)])
+
+    walk(0, [])
+    return TreeGemm(a, b, c, d, e)
+
+
+def predict_gemm(g: TreeGemm, x: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle for the GEMM strategy."""
+    t = (x @ jnp.asarray(g.a) <= jnp.asarray(g.b)).astype(jnp.float32)
+    s = t @ jnp.asarray(g.c)
+    match = (s == jnp.asarray(g.d)).astype(jnp.float32)
+    # Exactly one leaf matches; argmax picks it.
+    leaf = jnp.argmax(match, axis=-1)
+    return jnp.asarray(g.e)[leaf]
+
+
+@dataclasses.dataclass
+class EnsembleGemm:
+    """Padded, stacked GEMM-form ensemble: [n_trees, ...] batched matrices.
+
+    Padding: I, L to multiples of ``pad_to`` so the Pallas kernel sees
+    MXU-aligned shapes; padded leaves get D = +inf sentinel (never matched),
+    padded internal nodes get B = +inf (condition trivially true but C rows
+    are zero so they never contribute).
+    """
+
+    a: np.ndarray  # [T, F, I]
+    b: np.ndarray  # [T, I]
+    c: np.ndarray  # [T, I, L]
+    d: np.ndarray  # [T, L]
+    e: np.ndarray  # [T, L, O]
+    n_trees: int
+    average: bool = True
+
+    @property
+    def n_features(self):
+        return self.a.shape[1]
+
+
+def ensemble_to_gemm(trees: Sequence[TreeArrays], pad_to: int = 128,
+                     average: bool = True) -> EnsembleGemm:
+    gemms = [tree_to_gemm(t) for t in trees]
+    n_f = gemms[0].a.shape[0]
+    n_o = gemms[0].e.shape[1]
+    max_i = _round_up(max(g.a.shape[1] for g in gemms), pad_to)
+    max_l = _round_up(max(g.c.shape[1] for g in gemms), pad_to)
+    T = len(gemms)
+    a = np.zeros((T, n_f, max_i), np.float32)
+    b = np.full((T, max_i), np.float32(np.finfo(np.float32).max))
+    c = np.zeros((T, max_i, max_l), np.float32)
+    d = np.full((T, max_l), np.float32(np.finfo(np.float32).max))
+    e = np.zeros((T, max_l, n_o), np.float32)
+    for t, g in enumerate(gemms):
+        i, l = g.a.shape[1], g.c.shape[1]
+        a[t, :, :i] = g.a
+        b[t, :i] = g.b
+        c[t, :i, :l] = g.c
+        d[t, :l] = g.d
+        e[t, :l] = g.e
+    return EnsembleGemm(a, b, c, d, e, n_trees=T, average=average)
+
+
+def predict_ensemble_gemm(ens: EnsembleGemm, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: batched GEMMs over trees.  [n, F] -> [n, O]."""
+    a = jnp.asarray(ens.a)
+    b = jnp.asarray(ens.b)
+    c = jnp.asarray(ens.c)
+    d = jnp.asarray(ens.d)
+    e = jnp.asarray(ens.e)
+    # [T, n, I]
+    t = (jnp.einsum("nf,tfi->tni", x, a) <= b[:, None, :]).astype(jnp.float32)
+    s = jnp.einsum("tni,til->tnl", t, c)
+    match = (s == d[:, None, :]).astype(jnp.float32)
+    leaf = jnp.argmax(match, axis=-1)                       # [T, n]
+    out = jnp.take_along_axis(
+        e, leaf[:, :, None].repeat(e.shape[-1], -1), axis=1)  # [T, n, O]
+    total = jnp.sum(out, axis=0)
+    return total / ens.n_trees if ens.average else total

@@ -1,0 +1,5 @@
+"""LM model zoo: shared layers + the 10 assigned architectures."""
+
+from .transformer import LanguageModel, build_model
+
+__all__ = ["LanguageModel", "build_model"]

@@ -1,0 +1,286 @@
+"""GQA attention: blockwise (flash-style) forward + flash custom-VJP
+backward; cached decode.
+
+Train/prefill never materializes the [S, T] score matrix: the forward scans
+KV blocks with an online-softmax accumulator (the FlashAttention recurrence
+in pure JAX — working set [B, H, S, block]).  The **backward** is the flash
+VJP: plain autodiff of the forward scan would stack per-block probabilities
+and accumulators in HBM (the dominant memory term of every train cell at
+baseline, EXPERIMENTS §Perf); the custom VJP saves only (q, k, v, out, lse)
+and recomputes score blocks inside the backward scan.
+
+This module is also the oracle for the Pallas ``flash_attention`` kernel;
+on real TPU the kernel substitutes behind the same signature.
+
+Mask flavors (per assigned archs): causal, sliding-window (gemma2/hymba
+local layers; the window may be a *traced* per-layer value), bidirectional
+(encoder), cross.  Logit softcapping (gemma2) applies inside the block loop
+with the exact tanh chain rule in the backward.  GQA folds query-head
+groups: q [B,S,Kv,G,hd] against kv [B,T,Kv,hd].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense_init, rope, softcap
+
+__all__ = ["attention_params", "full_attention", "decode_attention",
+           "project_qkv", "qkv_from_cache_layout"]
+
+_NEG_INF = -1e30
+
+
+def attention_params(cfg) -> Dict:
+    d = cfg.d_model
+    p = {
+        "wq": dense_init((d, "embed"), (cfg.q_dim, "heads")),
+        "wk": dense_init((d, "embed"), (cfg.kv_dim, "kv")),
+        "wv": dense_init((d, "embed"), (cfg.kv_dim, "kv")),
+        "wo": dense_init((cfg.q_dim, "heads"), (d, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = dense_init((cfg.q_dim, "heads"), init="zeros")
+        p["bk"] = dense_init((cfg.kv_dim, "kv"), init="zeros")
+        p["bv"] = dense_init((cfg.kv_dim, "kv"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = dense_init((cfg.d_head, None), init="zeros")
+        p["k_norm"] = dense_init((cfg.d_head, None), init="zeros")
+    return p
+
+
+def project_qkv(cfg, p: Dict, x: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None,
+                use_rope: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,S,Kv,hd] (RoPE applied)."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        from .layers import rms_norm
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        sin, cos = rope(positions, cfg.d_head, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _block_mask(q_pos, k_pos, mask_kind: str, window_f, t_valid: int):
+    """[S, bk] boolean mask.  ``window_f`` <= 0 disables the window (may be
+    a traced float)."""
+    base = (k_pos < t_valid)[None, :]
+    if mask_kind in ("bidir", "cross"):
+        return jnp.broadcast_to(base, (q_pos.shape[0], k_pos.shape[0]))
+    diff = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.logical_and(diff >= 0, base)
+    win = jnp.logical_or(diff.astype(jnp.float32) < window_f, window_f <= 0)
+    return jnp.logical_and(mask, win)
+
+
+def _pad_seq(x, target):
+    pad = target - x.shape[1]
+    if pad:
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def _attn_fwd_impl(q, k, v, window_f, mask_kind: str, block_size: int,
+                   q_offset: int, cap: float):
+    """Blockwise forward.  Returns (out [B,S,H,hd], lse [B,Kv,G,S])."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+
+    bk = min(block_size, t)
+    n_blocks = (t + bk - 1) // bk
+    k_p = _pad_seq(k, n_blocks * bk)
+    v_p = _pad_seq(v, n_blocks * bk)
+    kb = k_p.reshape(b, n_blocks, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v_p.reshape(b, n_blocks, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, s, kv, g, hd)
+    q_pos = q_offset + jnp.arange(s)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        k_blk, v_blk, blk_idx = inputs
+        k_pos = blk_idx * bk + jnp.arange(bk)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        if cap > 0:
+            scores = cap * jnp.tanh(scores / cap)
+        mask = _block_mask(q_pos, k_pos, mask_kind, window_f, t)
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+        m_new = jnp.maximum(m, scores.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p_.sum(-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p_, v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, s), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, s, kv, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(n_blocks)))
+    denom = l.transpose(0, 3, 1, 2)[..., None]
+    out = (acc / jnp.maximum(denom, 1e-30)).reshape(b, s, h, hd) \
+        .astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))        # [B,Kv,G,S]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, window_f, mask_kind, block_size, q_offset, cap):
+    out, _ = _attn_fwd_impl(q, k, v, window_f, mask_kind, block_size,
+                            q_offset, cap)
+    return out
+
+
+def _flash_fwd(q, k, v, window_f, mask_kind, block_size, q_offset, cap):
+    out, lse = _attn_fwd_impl(q, k, v, window_f, mask_kind, block_size,
+                              q_offset, cap)
+    return out, (q, k, v, window_f, out, lse)
+
+
+def _flash_bwd(mask_kind, block_size, q_offset, cap, res, dout):
+    q, k, v, window_f, out, lse = res
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    bk = min(block_size, t)
+    n_blocks = (t + bk - 1) // bk
+    k_p = _pad_seq(k, n_blocks * bk)
+    v_p = _pad_seq(v, n_blocks * bk)
+    kb = k_p.reshape(b, n_blocks, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v_p.reshape(b, n_blocks, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, s, kv, g, hd).astype(jnp.float32)
+    dog = dout.reshape(b, s, kv, g, hd).astype(jnp.float32)
+    outg = out.reshape(b, s, kv, g, hd).astype(jnp.float32)
+    # D = rowsum(dO * O): [B,Kv,G,S]
+    dsum = jnp.einsum("bskgd,bskgd->bkgs", dog, outg)
+    q_pos = q_offset + jnp.arange(s)
+
+    def step(dq_acc, inputs):
+        k_blk, v_blk, blk_idx = inputs
+        k_pos = blk_idx * bk + jnp.arange(bk)
+        raw = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk,
+                         preferred_element_type=jnp.float32) * scale
+        if cap > 0:
+            tanh_t = jnp.tanh(raw / cap)
+            scores = cap * tanh_t
+            chain = 1.0 - tanh_t * tanh_t
+        else:
+            scores = raw
+            chain = None
+        mask = _block_mask(q_pos, k_pos, mask_kind, window_f, t)
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+        p = jnp.exp(scores - lse[..., None])           # exact probs
+        dv_blk = jnp.einsum("bkgst,bskgd->btkd", p, dog)
+        dp = jnp.einsum("bskgd,btkd->bkgst", dog, v_blk)
+        ds = p * (dp - dsum[..., None])
+        if chain is not None:
+            ds = ds * chain
+        ds = ds * scale
+        dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bskgd", ds, k_blk)
+        dk_blk = jnp.einsum("bkgst,bskgd->btkd", ds, qg)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, s, kv, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0,
+                                  (kb, vb, jnp.arange(n_blocks)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * bk, kv, hd)[:, :t]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, n_blocks * bk, kv, hd)[:, :t]
+    return (dq.reshape(b, s, h, hd).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype), jnp.zeros_like(window_f))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def full_attention(cfg, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   mask_kind: str = "causal",
+                   window: Optional[jnp.ndarray] = None,
+                   block_size: int = 512,
+                   q_offset: int = 0,
+                   use_flash_vjp: bool = True) -> jnp.ndarray:
+    """Blockwise attention.  ``window``: None = cfg default; <= 0 disables
+    the sliding window; may be a traced per-layer value (gemma2/hymba)."""
+    if window is None:
+        window = cfg.window_size if mask_kind == "window" else 0
+    window_f = jnp.asarray(window, jnp.float32)
+    cap = float(cfg.attn_softcap)
+    if use_flash_vjp:
+        return _flash(q, k, v, window_f, mask_kind, block_size, q_offset,
+                      cap)
+    out, _ = _attn_fwd_impl(q, k, v, window_f, mask_kind, block_size,
+                            q_offset, cap)
+    return out
+
+
+def decode_attention(cfg, q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray,
+                     mask_kind: str = "causal",
+                     window: Optional[int] = None,
+                     ring: bool = False) -> jnp.ndarray:
+    """One-token attention over a KV cache.
+
+    q [B,1,H,hd]; caches [B,C,Kv,hd]; cache_len = number of valid entries
+    (the new token's k/v must already be written).  ``ring=True`` marks a
+    sliding-window ring buffer (every slot valid once full; masking by
+    recency is implicit in the buffer contents).
+    """
+    b, _, h, hd = q.shape
+    c = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.attn_softcap > 0:
+        scores = softcap(scores, cfg.attn_softcap)
+    pos = jnp.arange(c)
+    valid = pos[None, :] < cache_len[:, None] if cache_len.ndim \
+        else pos < cache_len
+    if valid.ndim == 1:
+        valid = valid[None]
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def qkv_from_cache_layout(cfg, shape_batch: int, cache_len: int,
+                          dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for one layer's KV cache."""
+    return (jax.ShapeDtypeStruct(
+        (shape_batch, cache_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        jax.ShapeDtypeStruct(
+        (shape_batch, cache_len, cfg.n_kv_heads, cfg.d_head), dtype))

@@ -1,0 +1,151 @@
+"""Shared model components: param templates w/ logical sharding axes,
+norms, RoPE, activations, MLPs.
+
+Every parameter is declared as a :class:`ParamDef` carrying its *logical*
+axes; :func:`repro.distributed.sharding.logical_to_pspec` maps logical axes to
+mesh axes per workload (train: FSDP x TP; serve: TP only).  ``init_params``
+and ``abstract_params`` both derive from the same template, so the dry-run
+never materializes weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamDef", "init_params", "abstract_params", "param_axes",
+           "rms_norm", "softcap", "rope", "apply_rope", "mlp_params",
+           "mlp_apply", "dense_init", "stack_layers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis names per dim
+    init: str = "normal"                # normal | zeros | ones
+    scale: Optional[float] = None       # None => 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(template, key: jax.Array, dtype=jnp.float32):
+    """Materialize a template tree into arrays (smoke tests / examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[0] if len(d.shape) == 1 else d.shape[-2]
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(
+                max(fan_in, 1))
+            out.append(scale * jax.random.normal(k, d.shape, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(template, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), template,
+        is_leaf=_is_def)
+
+
+def param_axes(template):
+    """Tree of logical-axes tuples, same structure as the params."""
+    return jax.tree_util.tree_map(lambda d: d.axes, template, is_leaf=_is_def)
+
+
+def dense_init(*shape_axes, init="normal", scale=None) -> ParamDef:
+    shape = tuple(s for s, _ in shape_axes)
+    axes = tuple(a for _, a in shape_axes)
+    return ParamDef(shape, axes, init, scale)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(positions: jnp.ndarray, d_head: int, theta: float
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., S] -> (sin, cos) each [..., S, d_head/2], fp32."""
+    half = d_head // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x [..., S, H, d_head]; sin/cos [..., S, half] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+_ACTS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_params(d_model: int, d_ff: int, act: str) -> Dict:
+    """Gated (SwiGLU/GeGLU) or plain MLP params."""
+    gated = act in ("silu", "gelu")
+    p = {
+        "wi": dense_init((d_model, "embed"), (d_ff, "mlp")),
+        "wo": dense_init((d_ff, "mlp"), (d_model, "embed")),
+    }
+    if gated:
+        p["wg"] = dense_init((d_model, "embed"), (d_ff, "mlp"))
+    return p
+
+
+def stack_layers(template, n_layers: int):
+    """Prepend a stacked 'layers' dimension to every ParamDef in a per-layer
+    template (enables lax.scan over layers)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n_layers,) + d.shape, ("layers",) + d.axes,
+                           d.init, d.scale),
+        template, is_leaf=_is_def)
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    a = _ACTS[act]
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = a(x @ p["wg"]) * h
+    else:
+        h = a(h)
+    return h @ p["wo"]

@@ -1,0 +1,222 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+Recurrence per head (K = V = head size 64):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S in R^{K x V})
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t in (0,1) produced *per token* by the decay LoRA (the Finch novelty),
+token-shift ddlerp mixing, and a squared-ReLU channel-mix.
+
+Train/prefill uses a chunked O(S Q K V / Q) matmul formulation (the jnp
+oracle for the Pallas ``rwkv6_scan`` kernel); decode is the O(1) recurrent
+step.  Chunk math is fp32 (decay products underflow in bf16).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+__all__ = ["rwkv_params", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_state_specs", "wkv6_chunked", "wkv6_reference",
+           "rwkv_decode_step"]
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+
+
+def rwkv_params(cfg) -> Dict:
+    d = cfg.d_model
+    f = cfg.d_ff
+    return {
+        # time-mix
+        "mu_x": dense_init((d, None), init="zeros"),
+        "mu_rkvwg": dense_init((5, None), (d, None), init="zeros"),
+        "ddlerp_w1": dense_init((d, "embed"), (5 * _DDLERP_RANK, None)),
+        "ddlerp_w2": dense_init((5, None), (_DDLERP_RANK, None),
+                                (d, "embed")),
+        "decay_base": dense_init((d, None), init="zeros", scale=0.0),
+        "decay_w1": dense_init((d, "embed"), (_DECAY_RANK, None)),
+        "decay_w2": dense_init((_DECAY_RANK, None), (d, "embed")),
+        "bonus_u": dense_init((d, None), init="zeros"),
+        "wr": dense_init((d, "embed"), (d, "heads")),
+        "wk": dense_init((d, "embed"), (d, "heads")),
+        "wv": dense_init((d, "embed"), (d, "heads")),
+        "wg": dense_init((d, "embed"), (d, "heads")),
+        "wo": dense_init((d, "heads"), (d, "embed")),
+        "ln_x": dense_init((d, None), init="zeros"),
+        # channel-mix
+        "cm_mu_k": dense_init((d, None), init="zeros"),
+        "cm_mu_r": dense_init((d, None), init="zeros"),
+        "cm_wk": dense_init((d, "embed"), (f, "mlp")),
+        "cm_wv": dense_init((f, "mlp"), (d, "embed")),
+        "cm_wr": dense_init((d, "embed"), (d, "mlp")),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]
+                 ) -> jnp.ndarray:
+    """x [B,S,D] -> previous token's x (first uses ``prev`` or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_reference(r, k, v, w, u):
+    """Per-step oracle.  r,k,v [B,S,H,K]; w [B,S,H,K] decay in (0,1);
+    u [H,K].  Returns y [B,S,H,K(=V)]."""
+    b, s, h, kk = r.shape
+    state = jnp.zeros((b, h, kk, kk), jnp.float32)
+    ys = []
+    for t in range(s):
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        rt = r[:, t].astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]           # [B,H,K,V]
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       state + u[None, :, :, None] * kv)
+        state = state * w[:, t].astype(jnp.float32)[..., None] + kv
+        ys.append(y)
+    return jnp.stack(ys, axis=1)
+
+
+def wkv6_chunked(r, k, v, w, u, state: Optional[jnp.ndarray] = None,
+                 chunk: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6.  Shapes as in :func:`wkv6_reference`;
+    state [B,H,K,V].  Returns (y, final_state).
+
+    All exponents are differences "later minus earlier" of a monotonically
+    decreasing cumulative log-decay, hence <= 0: the chunk math can underflow
+    to zero but never overflow.  The pairwise decay tensor is [B,q,q,H,K]
+    with q=16 — small, and a register-resident tile in the Pallas kernel.
+    """
+    b, s, h, kk = r.shape
+    q = min(chunk, s)
+    n_chunks = (s + q - 1) // q
+    pad = n_chunks * q - s
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+
+    def resh(a):
+        return a.reshape(b, n_chunks, q, h, kk).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, ws = resh(r), resh(k), resh(v), resh(w)
+    if state is None:
+        state = jnp.zeros((b, h, kk, kk), jnp.float32)
+    pair_mask = jnp.tril(jnp.ones((q, q), jnp.bool_), -1)   # t > s
+
+    def step(st, inputs):
+        rc, kc, vc, wc = [a.astype(jnp.float32) for a in inputs]  # [B,q,H,K]
+        logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-38)), -60.0)
+        cum = jnp.cumsum(logw, axis=1)                     # inclusive [B,q,H,K]
+        cum_ex = cum - logw                                # exclusive
+        # y_inter[t] = (r_t * prod_{s<t} w_s) @ state   (exponent <= 0)
+        r_dec = rc * jnp.exp(cum_ex)
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", r_dec, st)
+        # intra pair (t, s<t): decay exp(cum_ex[t] - cum[s]) <= 1 per channel
+        diff = cum_ex[:, :, None] - cum[:, None]           # [B,t,s,H,K]
+        dec = jnp.where(pair_mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bthk,bshk,btshk->bhts", rc, kc, dec)
+        # diagonal bonus term
+        diag = jnp.einsum("bthk,bthk->bth", rc, u[None, None] * kc)
+        y_intra = jnp.einsum("bhts,bshv->bthv", att, vc) \
+            + diag[..., None] * vc
+        # state update: S' = diag(prod w) S + sum_s (k_s * prod_{r>s} w_r) v_s
+        total = cum[:, -1]                                 # [B,H,K]
+        k_dec = kc * jnp.exp(total[:, None] - cum)         # exponent <= 0
+        st_new = st * jnp.exp(total)[..., None] \
+            + jnp.einsum("bshk,bshv->bhkv", k_dec, vc)
+        return st_new, y_inter + y_intra
+
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * q, h, kk)
+    return y[:, :s], state
+
+
+def _ddlerp(p, x, xs):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = xs - x
+    base = x + dx * p["mu_x"][None, None]
+    lora = jnp.tanh(base @ p["ddlerp_w1"])
+    b, s, _ = x.shape
+    lora = lora.reshape(b, s, 5, _DDLERP_RANK)
+    adj = jnp.einsum("bsfr,frd->bsfd", lora, p["ddlerp_w2"])
+    mixed = x[:, :, None] + dx[:, :, None] \
+        * (p["mu_rkvwg"][None, None] + adj)
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def rwkv_time_mix(cfg, p: Dict, x: jnp.ndarray,
+                  state: Optional[Dict] = None,
+                  impl: str = "chunked"
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """x [B,S,D] -> (y, state{shift, wkv}).
+
+    impl='kernel_contract' substitutes an IO-equivalent elementwise stub for
+    the recurrence — the HBM boundary of the Pallas ``rwkv6_scan`` kernel
+    (read r/k/v/w once, write y once) — used ONLY for roofline lowering of
+    the kernel variant on the CPU dry-run host (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = cfg.d_head
+    prev = state["tm_shift"] if state else None
+    xs = _token_shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+    decay_in = p["decay_base"][None, None] \
+        + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(decay_in.astype(jnp.float32)))   # (0,1)
+    r = (xr @ p["wr"]).reshape(b, s, h, hd)
+    k = (xk @ p["wk"]).reshape(b, s, h, hd)
+    v = (xv @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    u = p["bonus_u"].reshape(h, hd)
+    wkv_state = state["wkv"] if state else None
+    if impl == "kernel_contract" and s > 1:
+        wr = w.reshape(b, s, h, hd)
+        y = r * wr + k * v + u[None, None]
+        if wkv_state is None:
+            wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    else:
+        y, wkv_state = wkv6_chunked(r, k, v, w.reshape(b, s, h, hd), u,
+                                    wkv_state)
+    y = y.reshape(b, s, d)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = y @ p["wo"]
+    new_state = {"tm_shift": x[:, -1:], "wkv": wkv_state}
+    return out, new_state
+
+
+def rwkv_channel_mix(cfg, p: Dict, x: jnp.ndarray,
+                     state: Optional[Dict] = None
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    prev = state["cm_shift"] if state else None
+    xs = _token_shift(x, prev)
+    dx = xs - x
+    xk = x + dx * p["cm_mu_k"][None, None]
+    xr = x + dx * p["cm_mu_r"][None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    return out, {"cm_shift": x[:, -1:]}
+
+
+def rwkv_decode_step(cfg, p: Dict, x: jnp.ndarray, state: Dict
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """Single token through time-mix (recurrent, no chunking).  x [B,1,D]."""
+    return rwkv_time_mix(cfg, p, x, state)
+
+
+def rwkv_state_specs(cfg, batch: int):
+    h, hd, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    return {
+        "tm_shift": jax.ShapeDtypeStruct((batch, 1, d), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((batch, h, hd, hd), jnp.float32),
+        "cm_shift": jax.ShapeDtypeStruct((batch, 1, d), jnp.bfloat16),
+    }

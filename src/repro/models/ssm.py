@@ -1,0 +1,205 @@
+"""Selective SSM (Mamba/SSD) for the Hymba hybrid blocks.
+
+We implement the SSD (state-space dual, Mamba-2-style) chunked form: within a
+chunk everything is matmuls (MXU food), across chunks a small recurrent state
+[B,H,P,N] carries.  This file is also the jnp oracle for the Pallas
+``ssd_scan`` kernel.
+
+Recurrence (per head h, state n, channel p):
+    h_t = exp(dt_t * a_h) * h_{t-1} + dt_t * B_t[n] * x_t[p]
+    y_t = C_t . h_t + D_h * x_t
+with a_h = -exp(A_log_h) < 0, dt = softplus(x W_dt + bias).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+__all__ = ["ssm_params", "ssm_apply", "ssm_decode_step", "ssm_state_specs",
+           "ssd_chunked", "ssd_reference"]
+
+_CONV_K = 4
+
+
+def ssm_params(cfg) -> Dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = inner // cfg.d_head          # ssm heads of size d_head
+    conv_dim = inner + 2 * n
+    return {
+        "w_in": dense_init((d, "embed"), (2 * inner + 2 * n, "heads")),
+        "conv": dense_init((_CONV_K, None), (conv_dim, "heads"),
+                           scale=1.0 / math.sqrt(_CONV_K)),
+        "w_dt": dense_init((d, "embed"), (heads, None)),
+        "dt_bias": dense_init((heads, None), init="zeros"),
+        "a_log": dense_init((heads, None), init="zeros"),
+        "d_skip": dense_init((heads, None), init="ones"),
+        "norm": dense_init((inner, None), init="zeros"),
+        "w_out": dense_init((inner, "heads"), (d, "embed")),
+    }
+
+
+def _split_proj(cfg, xz: jnp.ndarray):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    x, z, b, c = jnp.split(xz, [inner, 2 * inner, 2 * inner + n], axis=-1)
+    return x, z, b, c
+
+
+def _causal_conv(xbc: jnp.ndarray, kernel: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, k=4.  xbc [B,S,C]; kernel [k,C];
+    state [B,k-1,C] (prefix).  Returns (out [B,S,C], new_state)."""
+    b, s, c = xbc.shape
+    if state is None:
+        state = jnp.zeros((b, _CONV_K - 1, c), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(_CONV_K):
+        out = out + padded[:, i:i + s, :] * kernel[i]
+    new_state = padded[:, -( _CONV_K - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None,
+                chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.  x [B,S,H,P]; dt [B,S,H]; a [H]; bmat/cmat [B,S,N].
+
+    Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    n_chunks = (s + q - 1) // q
+    pad = n_chunks * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    xs = x.reshape(bsz, n_chunks, q, h, p).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(bsz, n_chunks, q, h).transpose(1, 0, 2, 3)
+    bs = bmat.reshape(bsz, n_chunks, q, n).transpose(1, 0, 2, 3)
+    cs = cmat.reshape(bsz, n_chunks, q, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))            # t >= s
+
+    def step(hstate, inputs):
+        xc, dtc, bc, cc = inputs                              # [B,q,...]
+        da = (dtc.astype(jnp.float32)
+              * a.astype(jnp.float32)[None, None, :])         # [B,q,H] (<=0)
+        csum = jnp.cumsum(da, axis=1)                         # inclusive
+        # decay(t,s) = exp(csum_t - csum_s) for t >= s
+        dec = jnp.exp(csum[:, :, None, :] - csum[:, None, :, :])
+        dec = dec * tri[None, :, :, None]                     # [B,q,q,H]
+        scores = jnp.einsum("btn,bsn->bts", cc.astype(jnp.float32),
+                            bc.astype(jnp.float32))           # [B,q,q]
+        w = scores[..., None] * dec \
+            * dtc.astype(jnp.float32)[:, None, :, :]          # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w,
+                             xs_f := xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        dec0 = jnp.exp(csum)                                  # [B,q,H]
+        y_inter = jnp.einsum("btn,bhpn->bthp", cc.astype(jnp.float32),
+                             hstate) * dec0[..., None]
+        # state update
+        rem = jnp.exp(csum[:, -1:, :] - csum)                 # [B,q,H]
+        contrib = jnp.einsum("bqh,bqhp,bqn->bhpn",
+                             rem * dtc.astype(jnp.float32), xs_f,
+                             bc.astype(jnp.float32))
+        h_new = hstate * jnp.exp(csum[:, -1, :])[:, :, None, None] + contrib
+        return h_new, y_intra + y_inter
+
+    hfinal, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, n_chunks * q, h, p)
+    return y[:, :s].astype(x.dtype), hfinal
+
+
+def ssd_reference(x, dt, a, bmat, cmat, h0=None):
+    """Naive per-step oracle (tests)."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    hs = jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t].astype(jnp.float32) * a[None, :])  # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32),
+                         bmat[:, t].astype(jnp.float32))
+        hs = hs * da[:, :, None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", cmat[:, t].astype(jnp.float32),
+                             hs))
+    return jnp.stack(ys, axis=1).astype(x.dtype), hs
+
+
+def ssm_apply(cfg, p: Dict, u: jnp.ndarray,
+              state: Optional[Dict] = None,
+              impl: str = "chunked",
+              ) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence SSM branch.  u [B,S,D] -> (y [B,S,D], state).
+
+    impl='kernel_contract': IO-equivalent stub matching the Pallas
+    ``ssd_scan`` kernel's HBM boundary (dry-run roofline lowering only)."""
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = inner // cfg.d_head
+    xz = u @ p["w_in"]                                    # [B,S,2I+2N]
+    x_part, z, b_in, c_in = _split_proj(cfg, xz)
+    xbc = jnp.concatenate([x_part, b_in, c_in], axis=-1)
+    conv_state = state["conv"] if state else None
+    xbc, conv_state = _causal_conv(xbc, p["conv"], conv_state)
+    x_part, b_in, c_in = jnp.split(xbc, [inner, inner + n], axis=-1)
+    bsz, s, _ = x_part.shape
+    xh = x_part.reshape(bsz, s, heads, cfg.d_head)
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])    # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = state["ssd"] if state else None
+    if impl == "kernel_contract" and s > 1:
+        y = xh * dt[..., None] \
+            + (b_in * c_in).sum(-1)[:, :, None, None] * a[None, None, :,
+                                                          None]
+        hfinal = h0 if h0 is not None else jnp.zeros(
+            (bsz, heads, cfg.d_head, n), jnp.float32)
+    else:
+        y, hfinal = ssd_chunked(xh, dt, a, b_in, c_in, h0)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, inner)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return out, {"conv": conv_state, "ssd": hfinal}
+
+
+def ssm_decode_step(cfg, p: Dict, u: jnp.ndarray, state: Dict
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token step.  u [B,1,D]."""
+    return ssm_apply(cfg, p, u, state)
+
+
+def ssm_state_specs(cfg, batch: int):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = inner // cfg.d_head
+    conv_dim = inner + 2 * n
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, _CONV_K - 1, conv_dim),
+                                     jnp.bfloat16),
+        "ssd": jax.ShapeDtypeStruct((batch, heads, cfg.d_head, n),
+                                    jnp.float32),
+    }

@@ -1,0 +1,580 @@
+"""LM assembly: all 10 assigned architectures behind one API.
+
+``LanguageModel(cfg)`` exposes:
+
+- ``param_template() / init_params(key) / abstract_params()`` — the dry-run
+  lowers against abstract params, smoke tests materialize tiny ones;
+- ``train_loss(params, batch)`` — next-token CE, layer-scan + remat;
+- ``prefill(params, batch)`` — full-sequence forward returning last-position
+  logits + a decode cache;
+- ``decode_step(params, cache, tokens)`` — one token with KV/SSM/RWKV state
+  (python-unrolled over layers: caches are heterogeneous across layer types);
+- ``cache_specs(batch, max_len)`` — ShapeDtypeStructs for the decode cache
+  (the dry-run builds decode inputs from these, no prefill needed).
+
+Layer families: dense GQA (+local/global, softcaps, QK-norm, biases), MoE
+(token-choice top-k, shard_map expert parallel when a mesh is supplied),
+Hymba hybrid (parallel attn+SSD heads), RWKV6, and enc-dec (bidir encoder +
+cross-attention decoder).  Multimodal frontends are stubs per assignment:
+``pixtral`` consumes precomputed patch embeddings prepended to text,
+``seamless`` consumes precomputed audio frame embeddings in the encoder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import (abstract_params, dense_init, init_params, mlp_apply,
+                     mlp_params, param_axes, rms_norm, softcap, stack_layers)
+
+__all__ = ["LanguageModel", "build_model"]
+
+
+def _wsc(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _cast_floats(tree, dtype):
+    """Cast float leaves to the compute dtype (mixed-precision policy:
+    fp32 master params, bf16 compute)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 data_axes: Tuple[str, ...] = (),
+                 act_specs: Optional[Dict[str, Any]] = None,
+                 remat: bool = True,
+                 param_dtype=jnp.float32,
+                 scan_impl: str = "chunked",
+                 kv_cache_dtype=jnp.bfloat16,
+                 moe_impl: str = "psum",
+                 flash_vjp: bool = True):
+        """``scan_impl``: 'chunked' = XLA chunked recurrences (baseline);
+        'kernel_contract' = replace the WKV/SSD inner math with an
+        IO-equivalent stub matching the Pallas kernel's HBM boundary (reads
+        r/k/v/w once, writes y once).  kernel_contract is ONLY for roofline
+        lowering of the Pallas-kernel variant on the CPU dry-run host — it is
+        not semantically the recurrence (the real kernel is, see
+        repro.kernels.rwkv6_scan / ssd_scan, validated in tests).
+
+        ``kv_cache_dtype``: jnp.bfloat16 (baseline) or jnp.int8 (quantized KV
+        with per-token scales — halves decode KV reads)."""
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.act_specs = act_specs or {}
+        self.remat = remat
+        self.param_dtype = param_dtype
+        self.scan_impl = scan_impl
+        self.kv_cache_dtype = kv_cache_dtype
+        self.moe_impl = moe_impl   # psum | a2a (all-to-all EP dispatch)
+        self.flash_vjp = flash_vjp  # False reproduces autodiff-attn baseline
+
+    # ------------------------------------------------------------------ params
+    def _layer_template(self) -> Dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        if cfg.rwkv:
+            return {"ln1": dense_init((d, None), init="zeros"),
+                    "ln2": dense_init((d, None), init="zeros"),
+                    **{f"tm_{k}": v for k, v in
+                       rwkv_mod.rwkv_params(cfg).items()}}
+        layer: Dict[str, Any] = {
+            "ln1": dense_init((d, None), init="zeros"),
+            "ln2": dense_init((d, None), init="zeros"),
+            "attn": attn_mod.attention_params(cfg),
+        }
+        if cfg.hybrid:
+            layer["ssm"] = ssm_mod.ssm_params(cfg)
+            layer["fuse_na"] = dense_init((d, None), init="zeros")
+            layer["fuse_ns"] = dense_init((d, None), init="zeros")
+            layer["beta_a"] = dense_init((d, None), init="ones")
+            layer["beta_s"] = dense_init((d, None), init="ones")
+        if cfg.n_experts > 0:
+            layer["moe"] = moe_mod.moe_params(cfg)
+        else:
+            layer["mlp"] = mlp_params(d, cfg.d_ff, cfg.act)
+        return layer
+
+    def _encoder_layer_template(self) -> Dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": dense_init((d, None), init="zeros"),
+                "ln2": dense_init((d, None), init="zeros"),
+                "attn": attn_mod.attention_params(cfg),
+                "mlp": mlp_params(d, cfg.d_ff, cfg.act)}
+
+    def _decoder_cross_template(self) -> Dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln_cross": dense_init((d, None), init="zeros"),
+                "cross": attn_mod.attention_params(cfg)}
+
+    def param_template(self) -> Dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_padded
+        tpl: Dict[str, Any] = {
+            "embed": dense_init((v, "vocab"), (d, "embed"), scale=0.02),
+            "final_norm": dense_init((d, None), init="zeros"),
+            "layers": stack_layers(self._layer_template(), cfg.n_layers),
+        }
+        if not cfg.tie_embeddings:
+            tpl["lm_head"] = dense_init((d, "embed"), (v, "vocab"))
+        if cfg.is_encdec:
+            tpl["enc_layers"] = stack_layers(self._encoder_layer_template(),
+                                             cfg.n_encoder_layers)
+            tpl["enc_norm"] = dense_init((d, None), init="zeros")
+            tpl["cross_layers"] = stack_layers(self._decoder_cross_template(),
+                                               cfg.n_layers)
+        return tpl
+
+    def init_params(self, key: jax.Array):
+        return init_params(self.param_template(), key, self.param_dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.param_template(), self.param_dtype)
+
+    def param_logical_axes(self):
+        return param_axes(self.param_template())
+
+    # --------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, int]:
+        """Returns (h [B,S,D], n_prefix) where n_prefix tokens carry no loss
+        (vlm patches)."""
+        cfg = self.cfg
+        emb = params["embed"]
+        h = jnp.take(emb, batch["tokens"], axis=0)
+        h = h * cfg.embed_scale
+        n_prefix = 0
+        if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(h.dtype), h], axis=1)
+            n_prefix = batch["patch_embeds"].shape[1]
+        return h.astype(jnp.bfloat16), n_prefix
+
+    def _logits(self, params, h: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = (h @ head.astype(h.dtype)).astype(jnp.float32)
+        logits = logits * cfg.logit_scale
+        if cfg.final_softcap > 0:
+            logits = softcap(logits, cfg.final_softcap)
+        if cfg.vocab_padded > cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return _wsc(logits, self.act_specs.get("logits"))
+
+    # ----------------------------------------------------------------- blocks
+    def _layer_flags(self) -> np.ndarray:
+        """Per-layer is_global flag."""
+        cfg = self.cfg
+        if cfg.attention == "local_global" and cfg.global_every:
+            return np.asarray(
+                [(i % cfg.global_every) == cfg.global_every - 1
+                 for i in range(cfg.n_layers)])
+        if cfg.attention == "swa_global":
+            return np.asarray([i in cfg.global_layers
+                               for i in range(cfg.n_layers)])
+        return np.ones((cfg.n_layers,), bool)
+
+    def _attn_full(self, lp, h, is_global, mask_kind="causal"):
+        cfg = self.cfg
+        q, k, v = attn_mod.project_qkv(cfg, lp["attn"], h,
+                                       use_rope=not cfg.rwkv)
+        q = _wsc(q, self.act_specs.get("heads"))
+        if self.scan_impl == "kernel_contract" and q.shape[1] > 1:
+            # Pallas flash_attention IO contract: read q/k/v once, write out
+            # once (scores never leave VMEM).  Roofline lowering only; the
+            # real kernel is repro.kernels.flash_attention.
+            b, s, _, hd = q.shape
+            kv = k.shape[2]
+            g = cfg.n_heads // kv
+            out = (q.reshape(b, s, kv, g, hd)
+                   * (k + v)[:, :, :, None]).reshape(b, s, cfg.n_heads, hd)
+        else:
+            window = jnp.where(is_global, jnp.int32(2 ** 30),
+                               jnp.int32(cfg.window_size))
+            kind = "window" if mask_kind == "causal" else mask_kind
+            out = attn_mod.full_attention(cfg, q, k, v, mask_kind=kind,
+                                          window=window,
+                                          use_flash_vjp=self.flash_vjp)
+        b, s, _, _ = out.shape
+        return out.reshape(b, s, cfg.q_dim) @ lp["attn"]["wo"], (k, v)
+
+    def _mlp_or_moe(self, lp, h):
+        cfg = self.cfg
+        if cfg.n_experts > 0:
+            if self.mesh is not None:
+                fn = moe_mod.moe_apply_sharded_a2a \
+                    if self.moe_impl == "a2a" else moe_mod.moe_apply_sharded
+                return fn(cfg, lp["moe"], h, self.mesh, self.data_axes)
+            return moe_mod.moe_apply(cfg, lp["moe"], h)
+        return mlp_apply(lp["mlp"], h, cfg.act)
+
+    def _block_seq(self, lp, flag, h, mask_kind="causal", cp=None,
+                   enc_out=None):
+        """Full-sequence block (train/prefill).  Returns (h, cache_bits).
+        For enc-dec, ``cp``/``enc_out`` interleave cross-attention between
+        self-attention and the MLP (standard ordering)."""
+        cfg = self.cfg
+        rs = cfg.residual_scale
+        h = _wsc(h, self.act_specs.get("residual"))
+        if cfg.rwkv:
+            tm = {k[3:]: v for k, v in lp.items() if k.startswith("tm_")}
+            y, st = rwkv_mod.rwkv_time_mix(
+                cfg, tm, rms_norm(h, lp["ln1"], cfg.norm_eps),
+                impl=self.scan_impl)
+            h = h + rs * y
+            y, st2 = rwkv_mod.rwkv_channel_mix(
+                cfg, tm, rms_norm(h, lp["ln2"], cfg.norm_eps))
+            h = h + rs * y
+            return h, {**st, **st2}
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_out, (k, v) = self._attn_full(lp, x, flag, mask_kind)
+        if cfg.hybrid:
+            ssm_out, ssm_state = ssm_mod.ssm_apply(cfg, lp["ssm"], x,
+                                                   impl=self.scan_impl)
+            fused = 0.5 * (
+                rms_norm(attn_out, lp["fuse_na"], cfg.norm_eps)
+                * lp["beta_a"]
+                + rms_norm(ssm_out, lp["fuse_ns"], cfg.norm_eps)
+                * lp["beta_s"])
+            h = h + rs * fused
+            cache = {"k": k.astype(jnp.bfloat16),
+                     "v": v.astype(jnp.bfloat16), **ssm_state}
+        else:
+            h = h + rs * attn_out
+            cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+        if cp is not None:
+            h = self._cross_block(cp, h, enc_out)
+        y = self._mlp_or_moe(lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+        h = h + rs * y
+        return h, cache
+
+    def _cross_block(self, cp, h, enc_out, decode=False):
+        cfg = self.cfg
+        x = rms_norm(h, cp["ln_cross"], cfg.norm_eps)
+        q, _, _ = attn_mod.project_qkv(cfg, cp["cross"], x, use_rope=False)
+        b, t, _ = enc_out.shape
+        k = (enc_out @ cp["cross"]["wk"].astype(enc_out.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head)
+        v = (enc_out @ cp["cross"]["wv"].astype(enc_out.dtype)).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head)
+        if decode:
+            out = attn_mod.decode_attention(
+                cfg, q, k, v, jnp.full((b,), t, jnp.int32))
+        else:
+            out = attn_mod.full_attention(cfg, q, k, v, mask_kind="cross")
+        bb, s, _, _ = out.shape
+        return h + out.reshape(bb, s, cfg.q_dim) @ cp["cross"]["wo"]
+
+    # ------------------------------------------------------------------ train
+    def _decoder_stack(self, params, h, mask_kind="causal",
+                       collect_cache=False, enc_out=None):
+        cfg = self.cfg
+        flags = jnp.asarray(self._layer_flags())
+        xs = (params["layers"], flags)
+        if cfg.is_encdec:
+            xs = xs + (params["cross_layers"],)
+
+        def body(carry, xs):
+            if cfg.is_encdec:
+                lp, flag, cp = xs
+            else:
+                (lp, flag), cp = xs, None
+            lp = _cast_floats(lp, jnp.bfloat16)
+            cp = _cast_floats(cp, jnp.bfloat16) if cp is not None else None
+            fn = functools.partial(self._block_seq, mask_kind=mask_kind,
+                                   cp=cp, enc_out=enc_out)
+            if self.remat:
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            h_new, cache = fn(lp, flag, carry)
+            return h_new.astype(carry.dtype), cache if collect_cache else None
+
+        h, caches = jax.lax.scan(body, h, xs)
+        return h, caches
+
+    def _encoder_stack(self, params, src: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+
+        def body(h, lp):
+            lp = _cast_floats(lp, jnp.bfloat16)
+            x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn_mod.project_qkv(cfg, lp["attn"], x)
+            out = attn_mod.full_attention(cfg, q, k, v, mask_kind="bidir")
+            b, s, _, _ = out.shape
+            h = h + out.reshape(b, s, cfg.q_dim) @ lp["attn"]["wo"]
+            h = h + mlp_apply(lp["mlp"],
+                              rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+            return h.astype(jnp.bfloat16), None
+
+        body_fn = jax.checkpoint(body) if self.remat else body
+        h, _ = jax.lax.scan(body_fn, src.astype(jnp.bfloat16),
+                            params["enc_layers"])
+        return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+    def train_loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encoder_stack(params, batch["src_embeds"])
+        h, n_prefix = self._embed_inputs(params, batch)
+        h, _ = self._decoder_stack(params, h, enc_out=enc_out)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        logits = self._logits(params, h)
+        targets = batch["tokens"][:, 1:]
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, batch, max_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encoder_stack(params, batch["src_embeds"])
+        h, n_prefix = self._embed_inputs(params, batch)
+        seq_len = h.shape[1]
+        max_len = max_len or seq_len + 64
+        h, caches = self._decoder_stack(params, h, collect_cache=True,
+                                        enc_out=enc_out)
+        logits = self._logits(params, h[:, -1:])
+        layers = self._prefill_caches_to_decode(caches, seq_len, max_len)
+        cache: Dict[str, Any] = {
+            "len": jnp.full((h.shape[0],), seq_len, jnp.int32),
+            "layers": layers,
+        }
+        if enc_out is not None:
+            cache["enc_out"] = enc_out
+        return logits[:, 0], cache
+
+    def _prefill_caches_to_decode(self, caches, seq_len: int, max_len: int
+                                  ) -> List[Dict]:
+        """Convert scan-stacked prefill caches [L, B, S, ...] into the
+        per-layer decode layout: full-capacity buffers for global layers,
+        ring buffers (slot = pos % window) for sliding-window layers."""
+        cfg = self.cfg
+        flags = self._layer_flags()
+        out: List[Dict] = []
+        for i in range(cfg.n_layers):
+            lc = jax.tree_util.tree_map(lambda x: x[i], caches)
+            entry: Dict[str, Any] = {}
+            if cfg.rwkv:
+                out.append(lc)
+                continue
+            k, v = lc.pop("k"), lc.pop("v")
+            if flags[i]:
+                cap = max_len
+                pad = cap - seq_len
+                entry["k"] = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                entry["v"] = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            else:
+                w = min(cfg.window_size, max_len)
+                take = min(w, seq_len)
+                pos = jnp.arange(seq_len - take, seq_len)
+                slots = pos % w
+                ring_k = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype)
+                ring_v = jnp.zeros_like(ring_k)
+                entry["k"] = ring_k.at[:, slots].set(k[:, -take:])
+                entry["v"] = ring_v.at[:, slots].set(v[:, -take:])
+            if self.kv_cache_dtype == jnp.int8:
+                for name in ("k", "v"):
+                    val = entry[name].astype(jnp.float32)
+                    sc = jnp.maximum(jnp.max(jnp.abs(val), axis=-1),
+                                     1e-6) / 127.0
+                    entry[name] = jnp.clip(jnp.round(val / sc[..., None]),
+                                           -127, 127).astype(jnp.int8)
+                    entry[f"{name}_scale"] = sc
+            entry.update(lc)    # ssm state for hybrid layers
+            out.append(entry)
+        return out
+
+    # ----------------------------------------------------------------- decode
+    def cache_specs(self, batch: int, max_len: int) -> Dict:
+        """Decode-cache ShapeDtypeStructs (heterogeneous per layer)."""
+        cfg = self.cfg
+        flags = self._layer_flags()
+        layers = []
+        for i in range(cfg.n_layers):
+            entry: Dict[str, Any] = {}
+            if cfg.rwkv:
+                entry.update(rwkv_mod.rwkv_state_specs(cfg, batch))
+            else:
+                c = max_len if flags[i] else min(cfg.window_size, max_len)
+                k, v = attn_mod.qkv_from_cache_layout(
+                    cfg, batch, c, dtype=self.kv_cache_dtype)
+                entry["k"], entry["v"] = k, v
+                if self.kv_cache_dtype == jnp.int8:
+                    # per-token, per-head dequant scales
+                    entry["k_scale"] = jax.ShapeDtypeStruct(
+                        (batch, c, cfg.n_kv_heads), jnp.float32)
+                    entry["v_scale"] = jax.ShapeDtypeStruct(
+                        (batch, c, cfg.n_kv_heads), jnp.float32)
+                if cfg.hybrid:
+                    entry.update(ssm_mod.ssm_state_specs(cfg, batch))
+            layers.append(entry)
+        spec = {"len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+                "layers": layers}
+        if cfg.is_encdec:
+            enc_len = max(1, int(max_len * cfg.encoder_len_ratio))
+            spec["enc_out"] = jax.ShapeDtypeStruct(
+                (batch, enc_len, cfg.d_model), jnp.bfloat16)
+        return spec
+
+    def decode_step(self, params, cache, tokens: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, Dict]:
+        """tokens [B,1] -> (logits [B,V], new cache)."""
+        cfg = self.cfg
+        flags = self._layer_flags()
+        pos = cache["len"]                       # [B]
+        h = jnp.take(params["embed"], tokens, axis=0) * cfg.embed_scale
+        h = h.astype(jnp.bfloat16)
+        new_layers = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+            lp = _cast_floats(lp, jnp.bfloat16)
+            lc = cache["layers"][i]
+            cp = None
+            if cfg.is_encdec:
+                cp = jax.tree_util.tree_map(lambda x: x[i],
+                                            params["cross_layers"])
+                cp = _cast_floats(cp, jnp.bfloat16)
+            h, nc = self._decode_block(lp, lc, h, bool(flags[i]), pos,
+                                       cp=cp, enc_out=cache.get("enc_out"))
+            new_layers.append(nc)
+        logits = self._logits(params, h)[:, 0]
+        new_cache = dict(cache, len=pos + 1, layers=new_layers)
+        return logits, new_cache
+
+    def _decode_block(self, lp, lc, h, is_global: bool, pos, cp=None,
+                      enc_out=None):
+        cfg = self.cfg
+        rs = cfg.residual_scale
+        if cfg.rwkv:
+            tm = {k[3:]: v for k, v in lp.items() if k.startswith("tm_")}
+            y, st = rwkv_mod.rwkv_time_mix(
+                cfg, tm, rms_norm(h, lp["ln1"], cfg.norm_eps), lc)
+            h = h + rs * y
+            y, st2 = rwkv_mod.rwkv_channel_mix(
+                cfg, tm, rms_norm(h, lp["ln2"], cfg.norm_eps), lc)
+            h = h + rs * y
+            return h, {**st, **st2}
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        b = x.shape[0]
+        q, k, v = attn_mod.project_qkv(cfg, lp["attn"], x,
+                                       positions=pos[:, None])
+        cap = lc["k"].shape[1]
+        slot = pos % cap if not is_global else jnp.minimum(pos, cap - 1)
+
+        def dus(c, val, s):
+            return jax.vmap(
+                lambda cc, vv, ss: jax.lax.dynamic_update_slice_in_dim(
+                    cc, vv, ss, 0))(c, val, s)
+
+        nc = {}
+        if self.kv_cache_dtype == jnp.int8:
+            def quant(val):   # [B,1,kv,hd] -> (int8, scale [B,1,kv])
+                sc = jnp.maximum(jnp.max(jnp.abs(val), axis=-1), 1e-6) / 127.
+                qv = jnp.clip(jnp.round(val / sc[..., None]),
+                              -127, 127).astype(jnp.int8)
+                return qv, sc.astype(jnp.float32)
+            kq, ks = quant(k)
+            vq, vs = quant(v)
+            k_cache = dus(lc["k"], kq, slot)
+            v_cache = dus(lc["v"], vq, slot)
+            k_sc = dus(lc["k_scale"], ks, slot)
+            v_sc = dus(lc["v_scale"], vs, slot)
+            k_deq = k_cache.astype(jnp.bfloat16) \
+                * k_sc[..., None].astype(jnp.bfloat16)
+            v_deq = v_cache.astype(jnp.bfloat16) \
+                * v_sc[..., None].astype(jnp.bfloat16)
+            nc.update(k_scale=k_sc, v_scale=v_sc)
+        else:
+            k_cache = dus(lc["k"], k.astype(lc["k"].dtype), slot)
+            v_cache = dus(lc["v"], v.astype(lc["v"].dtype), slot)
+            k_deq, v_deq = k_cache, v_cache
+        valid_len = jnp.minimum(pos + 1, cap)
+        out = attn_mod.decode_attention(cfg, q, k_deq, v_deq, valid_len)
+        attn_out = out.reshape(b, 1, cfg.q_dim) @ lp["attn"]["wo"]
+        nc.update(k=k_cache, v=v_cache)
+        if cfg.hybrid:
+            ssm_out, ssm_state = ssm_mod.ssm_decode_step(
+                cfg, lp["ssm"], x, {"conv": lc["conv"], "ssd": lc["ssd"]})
+            fused = 0.5 * (
+                rms_norm(attn_out, lp["fuse_na"], cfg.norm_eps)
+                * lp["beta_a"]
+                + rms_norm(ssm_out, lp["fuse_ns"], cfg.norm_eps)
+                * lp["beta_s"])
+            h = h + rs * fused
+            nc.update(ssm_state)
+        else:
+            h = h + rs * attn_out
+        if cp is not None:
+            h = self._cross_block(cp, h, enc_out, decode=True)
+        y = self._mlp_or_moe(lp, rms_norm(h, lp["ln2"], cfg.norm_eps))
+        h = h + rs * y
+        return h, nc
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeConfig) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = jnp.int32
+        if shape.kind == "train":
+            batch: Dict[str, Any] = {}
+            if cfg.frontend == "vision_patches":
+                npatch = cfg.n_frontend_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - npatch), tok)
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, npatch, cfg.d_model), jnp.bfloat16)
+            elif cfg.is_encdec:
+                src = max(1, int(s * cfg.encoder_len_ratio))
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+                batch["src_embeds"] = jax.ShapeDtypeStruct(
+                    (b, src, cfg.d_model), jnp.bfloat16)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.frontend == "vision_patches":
+                npatch = cfg.n_frontend_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - npatch), tok)
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, npatch, cfg.d_model), jnp.bfloat16)
+            elif cfg.is_encdec:
+                src = max(1, int(s * cfg.encoder_len_ratio))
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+                batch["src_embeds"] = jax.ShapeDtypeStruct(
+                    (b, src, cfg.d_model), jnp.bfloat16)
+            else:
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s), tok)
+            return batch
+        # decode: one new token + cache at context length s
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), tok),
+                "cache": self.cache_specs(b, s)}
+
+
+def build_model(cfg: ModelConfig, **kw) -> LanguageModel:
+    return LanguageModel(cfg, **kw)

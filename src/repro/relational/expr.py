@@ -1,0 +1,311 @@
+"""Scalar expression trees over table columns.
+
+These are the predicate/projection expressions that appear in Raven IR
+``Filter``/``Map`` nodes.  They evaluate column-at-a-time on jnp arrays, are
+introspectable (the cross-optimizer walks them to extract conjunctive
+equality/range constraints for predicate-based model pruning), and foldable
+(constant sub-trees are evaluated at optimization time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, FrozenSet, List, Mapping, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Expr", "Col", "Const", "BinOp", "UnaryOp", "CaseWhen", "col", "const",
+    "lit", "conjuncts", "extract_constraints", "Constraint", "fold_constants",
+]
+
+
+class Expr:
+    """Base class.  Operator overloads build trees."""
+
+    def _wrap(self, other: Any) -> "Expr":
+        return other if isinstance(other, Expr) else Const(other)
+
+    # comparisons
+    def __eq__(self, other):  # type: ignore[override]
+        return BinOp("==", self, self._wrap(other))
+
+    def __ne__(self, other):  # type: ignore[override]
+        return BinOp("!=", self, self._wrap(other))
+
+    def __lt__(self, other):
+        return BinOp("<", self, self._wrap(other))
+
+    def __le__(self, other):
+        return BinOp("<=", self, self._wrap(other))
+
+    def __gt__(self, other):
+        return BinOp(">", self, self._wrap(other))
+
+    def __ge__(self, other):
+        return BinOp(">=", self, self._wrap(other))
+
+    # arithmetic
+    def __add__(self, other):
+        return BinOp("+", self, self._wrap(other))
+
+    def __radd__(self, other):
+        return BinOp("+", self._wrap(other), self)
+
+    def __sub__(self, other):
+        return BinOp("-", self, self._wrap(other))
+
+    def __rsub__(self, other):
+        return BinOp("-", self._wrap(other), self)
+
+    def __mul__(self, other):
+        return BinOp("*", self, self._wrap(other))
+
+    def __rmul__(self, other):
+        return BinOp("*", self._wrap(other), self)
+
+    def __truediv__(self, other):
+        return BinOp("/", self, self._wrap(other))
+
+    # boolean
+    def __and__(self, other):
+        return BinOp("and", self, self._wrap(other))
+
+    def __or__(self, other):
+        return BinOp("or", self, self._wrap(other))
+
+    def __invert__(self):
+        return UnaryOp("not", self)
+
+    def __hash__(self):
+        return hash(repr(self))
+
+    # -- interface ---------------------------------------------------------
+    def evaluate(self, columns: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def references(self) -> FrozenSet[str]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Col(Expr):
+    name: str
+
+    def evaluate(self, columns):
+        return columns[self.name]
+
+    def references(self):
+        return frozenset({self.name})
+
+    def __repr__(self):
+        return f"col({self.name!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Expr):
+    value: Any
+
+    def evaluate(self, columns):
+        return jnp.asarray(self.value)
+
+    def references(self):
+        return frozenset()
+
+    def __repr__(self):
+        return f"const({self.value!r})"
+
+
+_BINOPS: Dict[str, Callable] = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+    "and": lambda a, b: jnp.logical_and(a, b),
+    "or": lambda a, b: jnp.logical_or(a, b),
+}
+
+_NUMPY_BINOPS: Dict[str, Callable] = {
+    **{k: v for k, v in _BINOPS.items() if k not in ("and", "or")},
+    "and": lambda a, b: np.logical_and(a, b),
+    "or": lambda a, b: np.logical_or(a, b),
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BinOp(Expr):
+    op: str
+    left: Expr
+    right: Expr
+
+    def evaluate(self, columns):
+        return _BINOPS[self.op](self.left.evaluate(columns),
+                                self.right.evaluate(columns))
+
+    def references(self):
+        return self.left.references() | self.right.references()
+
+    def __repr__(self):
+        return f"({self.left!r} {self.op} {self.right!r})"
+
+
+_UNOPS: Dict[str, Callable] = {
+    "not": jnp.logical_not,
+    "neg": jnp.negative,
+    "abs": jnp.abs,
+    "isnan": jnp.isnan,
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class UnaryOp(Expr):
+    op: str
+    operand: Expr
+
+    def evaluate(self, columns):
+        return _UNOPS[self.op](self.operand.evaluate(columns))
+
+    def references(self):
+        return self.operand.references()
+
+    def __repr__(self):
+        return f"{self.op}({self.operand!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CaseWhen(Expr):
+    """SQL CASE WHEN c1 THEN v1 ... ELSE default END.
+
+    This is the node that *model inlining* (tree -> relational) produces: a
+    decision tree becomes nested CaseWhen expressions over its split
+    conditions.
+    """
+
+    branches: Tuple[Tuple[Expr, Expr], ...]
+    default: Expr
+
+    def evaluate(self, columns):
+        out = self.default.evaluate(columns)
+        # Reverse order: the first matching WHEN wins.
+        for cond, val in reversed(self.branches):
+            out = jnp.where(cond.evaluate(columns), val.evaluate(columns), out)
+        return out
+
+    def references(self):
+        refs = self.default.references()
+        for cond, val in self.branches:
+            refs |= cond.references() | val.references()
+        return refs
+
+    def __repr__(self):
+        parts = " ".join(f"WHEN {c!r} THEN {v!r}" for c, v in self.branches)
+        return f"CASE {parts} ELSE {self.default!r} END"
+
+
+def col(name: str) -> Col:
+    return Col(name)
+
+
+def const(value: Any) -> Const:
+    return Const(value)
+
+
+lit = const
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers used by the cross-optimizer.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """A single-column constraint derived from a conjunctive predicate.
+
+    ``kind`` in {"==", "<", "<=", ">", ">=", "!="}; value is a python scalar.
+    The optimizer uses these to prune decision-tree branches and to constant-
+    fold one-hot features.
+    """
+
+    column: str
+    kind: str
+    value: Any
+
+
+def conjuncts(expr: Expr) -> List[Expr]:
+    """Split a predicate into top-level AND-ed conjuncts."""
+    if isinstance(expr, BinOp) and expr.op == "and":
+        return conjuncts(expr.left) + conjuncts(expr.right)
+    return [expr]
+
+
+def extract_constraints(expr: Expr) -> List[Constraint]:
+    """Extract single-column constraints from the conjuncts of ``expr``.
+
+    Only `col <op> const` / `const <op> col` conjuncts qualify; anything else
+    (ORs, multi-column comparisons) is conservatively ignored — the pruning
+    rules must stay sound.
+    """
+    out: List[Constraint] = []
+    flip = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "==": "==", "!=": "!="}
+    for c in conjuncts(expr):
+        if not isinstance(c, BinOp) or c.op not in flip:
+            continue
+        if isinstance(c.left, Col) and isinstance(c.right, Const):
+            out.append(Constraint(c.left.name, c.op, c.right.value))
+        elif isinstance(c.right, Col) and isinstance(c.left, Const):
+            out.append(Constraint(c.right.name, flip[c.op], c.left.value))
+    return out
+
+
+def fold_constants(expr: Expr) -> Expr:
+    """Compiler-style constant folding over an expression tree."""
+    if isinstance(expr, BinOp):
+        left = fold_constants(expr.left)
+        right = fold_constants(expr.right)
+        if isinstance(left, Const) and isinstance(right, Const):
+            val = _NUMPY_BINOPS[expr.op](np.asarray(left.value),
+                                         np.asarray(right.value))
+            return Const(val.item() if np.ndim(val) == 0 else val)
+        # boolean short-circuits with one constant side
+        if expr.op == "and":
+            for a, b in ((left, right), (right, left)):
+                if isinstance(a, Const):
+                    return b if bool(a.value) else Const(False)
+        if expr.op == "or":
+            for a, b in ((left, right), (right, left)):
+                if isinstance(a, Const):
+                    return Const(True) if bool(a.value) else b
+        return BinOp(expr.op, left, right)
+    if isinstance(expr, UnaryOp):
+        operand = fold_constants(expr.operand)
+        if isinstance(operand, Const):
+            if expr.op == "not":
+                return Const(not bool(operand.value))
+            if expr.op == "neg":
+                return Const(-operand.value)
+            if expr.op == "abs":
+                return Const(abs(operand.value))
+        return UnaryOp(expr.op, operand)
+    if isinstance(expr, CaseWhen):
+        branches = []
+        for cond, val in expr.branches:
+            cond = fold_constants(cond)
+            if isinstance(cond, Const):
+                if bool(cond.value):
+                    # This branch always fires; later branches are dead.
+                    if not branches:
+                        return fold_constants(val)
+                    return CaseWhen(tuple(branches), fold_constants(val))
+                continue  # never fires: drop
+            branches.append((cond, fold_constants(val)))
+        if not branches:
+            return fold_constants(expr.default)
+        return CaseWhen(tuple(branches), fold_constants(expr.default))
+    return expr

@@ -1,0 +1,235 @@
+"""Columnar tables with validity-mask bag semantics.
+
+XLA requires static shapes, so a selection never compacts rows; it narrows the
+validity mask instead.  Every relational operator in :mod:`repro.relational.ops`
+consumes and produces ``Table`` objects whose ``valid`` mask marks live rows.
+Aggregations, joins and materialization are all mask-aware, which preserves SQL
+bag semantics exactly (property-tested against a numpy oracle in
+``tests/test_relational_properties.py``).
+
+Columns are ``jnp`` arrays of equal leading dimension.  Categorical/string
+columns are dictionary-encoded at ingest time (``Table.from_pydict``): the
+device column holds int32 codes and the dictionary lives host-side in the
+schema.  This mirrors a columnar RDBMS (and Arrow) and keeps everything
+XLA-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ColumnSchema", "Schema", "Table"]
+
+
+_NUMERIC_KINDS = {"i", "u", "f", "b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSchema:
+    """Schema entry for one column."""
+
+    name: str
+    dtype: Any
+    # For dictionary-encoded (categorical/string) columns: code -> value.
+    dictionary: Optional[Tuple[Any, ...]] = None
+
+    @property
+    def is_categorical(self) -> bool:
+        return self.dictionary is not None
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        if self.dictionary is None:
+            return codes
+        lut = np.asarray(self.dictionary, dtype=object)
+        out = np.empty(codes.shape, dtype=object)
+        valid = (codes >= 0) & (codes < len(lut))
+        out[valid] = lut[codes[valid]]
+        out[~valid] = None
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    columns: Tuple[ColumnSchema, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate column names in schema: {names}")
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    def field(self, name: str) -> ColumnSchema:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(f"no column {name!r}; have {self.names}")
+
+    def with_column(self, col: ColumnSchema) -> "Schema":
+        cols = [c for c in self.columns if c.name != col.name]
+        return Schema(tuple(cols) + (col,))
+
+    def select(self, names: Sequence[str]) -> "Schema":
+        return Schema(tuple(self.field(n) for n in names))
+
+    def rename(self, mapping: Mapping[str, str]) -> "Schema":
+        return Schema(
+            tuple(
+                dataclasses.replace(c, name=mapping.get(c.name, c.name))
+                for c in self.columns
+            )
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+class Table:
+    """A columnar table: dict of equal-length jnp columns + validity mask.
+
+    ``Table`` is a pytree (columns and mask are leaves; schema is static), so
+    tables flow through ``jax.jit`` boundaries, shardings can be attached per
+    column, and whole query plans compile to a single XLA module.
+    """
+
+    def __init__(self, columns: Dict[str, jnp.ndarray], valid: jnp.ndarray,
+                 schema: Schema):
+        self.columns = dict(columns)
+        self.valid = valid
+        self.schema = schema
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        leaves = tuple(self.columns[n] for n in names) + (self.valid,)
+        return leaves, (names, self.schema)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        names, schema = aux
+        cols = dict(zip(names, leaves[:-1]))
+        return cls(cols, leaves[-1], schema)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_pydict(cls, data: Mapping[str, Iterable[Any]],
+                    dictionaries: Optional[Mapping[str, Sequence[Any]]] = None
+                    ) -> "Table":
+        """Ingest host data; dictionary-encode non-numeric columns."""
+        dictionaries = dict(dictionaries or {})
+        cols: Dict[str, jnp.ndarray] = {}
+        fields: List[ColumnSchema] = []
+        n = None
+        for name, values in data.items():
+            arr = np.asarray(values)
+            if n is None:
+                n = arr.shape[0]
+            elif arr.shape[0] != n:
+                raise ValueError(f"column {name} length {arr.shape[0]} != {n}")
+            if name in dictionaries or arr.dtype.kind not in _NUMERIC_KINDS:
+                if name in dictionaries:
+                    dictionary = list(dictionaries[name])
+                else:
+                    dictionary = sorted(set(arr.tolist()))
+                index = {v: i for i, v in enumerate(dictionary)}
+                codes = np.asarray([index[v] for v in arr.tolist()],
+                                   dtype=np.int32)
+                cols[name] = jnp.asarray(codes)
+                fields.append(ColumnSchema(name, jnp.int32,
+                                           tuple(dictionary)))
+            else:
+                if arr.dtype.kind == "f":
+                    arr = arr.astype(np.float32)
+                elif arr.dtype.kind in "iu":
+                    arr = arr.astype(np.int32)
+                elif arr.dtype.kind == "b":
+                    arr = arr.astype(np.bool_)
+                cols[name] = jnp.asarray(arr)
+                fields.append(ColumnSchema(name, cols[name].dtype))
+        if n is None:
+            raise ValueError("empty table")
+        valid = jnp.ones((n,), dtype=jnp.bool_)
+        return cls(cols, valid, Schema(tuple(fields)))
+
+    @classmethod
+    def from_arrays(cls, columns: Mapping[str, jnp.ndarray],
+                    valid: Optional[jnp.ndarray] = None,
+                    schema: Optional[Schema] = None) -> "Table":
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        n = next(iter(cols.values())).shape[0]
+        if valid is None:
+            valid = jnp.ones((n,), dtype=jnp.bool_)
+        if schema is None:
+            schema = Schema(tuple(ColumnSchema(k, v.dtype)
+                                  for k, v in cols.items()))
+        return cls(cols, valid, schema)
+
+    # -- accessors ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Physical row count (allocated slots, live or dead)."""
+        return int(self.valid.shape[0])
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self.columns)
+
+    def column(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def num_valid(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def with_columns(self, new: Mapping[str, jnp.ndarray],
+                     fields: Optional[Sequence[ColumnSchema]] = None
+                     ) -> "Table":
+        cols = dict(self.columns)
+        schema = self.schema
+        fields = list(fields) if fields is not None else [
+            ColumnSchema(k, jnp.asarray(v).dtype) for k, v in new.items()]
+        for f, (k, v) in zip(fields, new.items()):
+            cols[k] = jnp.asarray(v)
+            schema = schema.with_column(f)
+        return Table(cols, self.valid, schema)
+
+    def with_valid(self, valid: jnp.ndarray) -> "Table":
+        return Table(self.columns, valid, self.schema)
+
+    def select(self, names: Sequence[str]) -> "Table":
+        missing = [n for n in names if n not in self.columns]
+        if missing:
+            raise KeyError(f"columns {missing} not in table {self.names}")
+        return Table({n: self.columns[n] for n in names}, self.valid,
+                     self.schema.select(names))
+
+    # -- materialization (host side; not jittable) --------------------------
+    def to_pydict(self, decode: bool = True) -> Dict[str, list]:
+        valid = np.asarray(self.valid)
+        out: Dict[str, list] = {}
+        for name in self.columns:
+            arr = np.asarray(self.columns[name])[valid]
+            field = self.schema.field(name)
+            if decode and field.is_categorical:
+                arr = field.decode(arr)
+            out[name] = arr.tolist()
+        return out
+
+    def to_numpy(self, names: Optional[Sequence[str]] = None,
+                 compact: bool = True) -> np.ndarray:
+        """Dense float32 feature matrix (rows x columns)."""
+        names = list(names or self.names)
+        mat = np.stack([np.asarray(self.columns[n], dtype=np.float32)
+                        for n in names], axis=1)
+        if compact:
+            mat = mat[np.asarray(self.valid)]
+        return mat
+
+    def __repr__(self):
+        cols = ", ".join(f"{n}:{jnp.asarray(v).dtype}"
+                         for n, v in self.columns.items())
+        return f"Table[{self.capacity} rows]({cols})"

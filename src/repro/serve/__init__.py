@@ -1,0 +1,6 @@
+"""Serving: continuous-batching engine, sampling, prefix cache."""
+
+from .engine import InferenceEngine, Request, ServeConfig
+from .sampling import sample_token
+
+__all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token"]

@@ -1,0 +1,170 @@
+"""Serving engine: continuous batching over a fixed-slot decode batch.
+
+The paper's §5 lesson — batch inference, in-process, with model/session
+caching — applied to LM serving:
+
+- a **fixed decode batch** of ``n_slots`` sequences (static shapes for XLA);
+- **continuous batching**: when a sequence finishes, its slot is refilled
+  from the admission queue at the next step boundary (prefill for the new
+  request runs as its own jitted call, then its cache splices into the slot);
+- **session caching**: the jitted prefill/decode executables are compiled
+  once per shape and reused across requests (the paper's inference-session
+  cache);
+- **prefix cache**: identical prompt prefixes reuse cached KV (the LM
+  analogue of Raven's constant-folding a fixed predicate into the model).
+
+This engine is single-host; slots shard over the data axes under pjit on a
+real mesh (the decode_32k dry-run cell is exactly one engine step at
+batch=128).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sampling import sample_token
+
+__all__ = ["Request", "ServeConfig", "InferenceEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    # vocab-restricted decoding (projection pushdown analogue; DESIGN.md §3)
+    allowed_tokens: Optional[Tuple[int, ...]] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 4
+    max_len: int = 512
+    eos_token: int = 1
+    prefix_cache: bool = True
+
+
+class InferenceEngine:
+    def __init__(self, model, cfg: ServeConfig):
+        self.model = model
+        self.cfg = cfg
+        self.queue: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.n_slots
+        self.cache = None                 # batched decode cache
+        self._prefill_jit = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=cfg.max_len))
+        self._decode_jit = jax.jit(model.decode_step)
+        self._prefix_cache: Dict[bytes, Tuple[Any, Any]] = {}
+        self._rng = jax.random.PRNGKey(0)
+        self.completed: List[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    # -- cache plumbing --------------------------------------------------------
+    def _blank_cache(self, params):
+        specs = self.model.cache_specs(self.cfg.n_slots, self.cfg.max_len)
+
+        def zero(s):
+            return jnp.zeros(s.shape, s.dtype)
+
+        return jax.tree_util.tree_map(zero, specs)
+
+    def _splice_slot(self, cache, slot_cache, slot: int):
+        """Write one sequence's prefill cache into batch slot ``slot``."""
+        def splice(dst, src):
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+        return jax.tree_util.tree_map(splice, cache, slot_cache)
+
+    # -- main step ---------------------------------------------------------------
+    def _admit(self, params):
+        for slot in range(self.cfg.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            key = req.prompt.tobytes()
+            if self.cfg.prefix_cache and key in self._prefix_cache:
+                logits, pcache = self._prefix_cache[key]
+            else:
+                batch = {"tokens": jnp.asarray(req.prompt)[None]}
+                logits, pcache = self._prefill_jit(params, batch)
+                if self.cfg.prefix_cache:
+                    self._prefix_cache[key] = (logits, pcache)
+            # splice prefill cache into the batch cache
+            if self.cache is None:
+                self.cache = self._blank_cache(params)
+            new_layers = [
+                self._splice_slot(self.cache["layers"][i],
+                                  pcache["layers"][i], slot)
+                for i in range(len(pcache["layers"]))]
+            self.cache = dict(self.cache, layers=new_layers)
+            self.cache["len"] = self.cache["len"].at[slot].set(
+                int(pcache["len"][0]))
+            tok = sample_token(jnp.asarray(logits), req.temperature,
+                               self._next_key(),
+                               allowed=req.allowed_tokens)[0]
+            req.output.append(int(tok))
+            req.first_token_at = time.time()
+            self.slots[slot] = req
+            self._maybe_finish(slot)
+
+    def _next_key(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def _maybe_finish(self, slot: int) -> bool:
+        req = self.slots[slot]
+        if req is None:
+            return False
+        tok = req.output[-1]
+        done = (tok == self.cfg.eos_token
+                or len(req.output) >= req.max_new_tokens
+                or int(self.cache["len"][slot]) >= self.cfg.max_len - 1)
+        if done:
+            req.finished_at = time.time()
+            self.completed.append(req)
+            self.slots[slot] = None
+        return done
+
+    def step(self, params) -> int:
+        """One engine iteration: admit, decode one token for every live
+        slot, retire finished sequences.  Returns #live slots."""
+        self._admit(params)
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return 0
+        last = np.zeros((self.cfg.n_slots, 1), np.int32)
+        for i in live:
+            last[i, 0] = self.slots[i].output[-1]
+        logits, self.cache = self._decode_jit(params, self.cache,
+                                              jnp.asarray(last))
+        for i in live:
+            req = self.slots[i]
+            tok = int(sample_token(logits[i][None], req.temperature,
+                                   self._next_key(),
+                                   allowed=req.allowed_tokens)[0])
+            req.output.append(tok)
+            self._maybe_finish(i)
+        return len([r for r in self.slots if r is not None])
+
+    def run_until_drained(self, params, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slots)) \
+                and steps < max_steps:
+            self.step(params)
+            steps += 1

@@ -1,0 +1,42 @@
+"""Token sampling: greedy / temperature / top-k / vocab-restricted.
+
+Vocab restriction is the LM analogue of the paper's model-projection
+pushdown (DESIGN.md §3): an inference query that only consumes a candidate
+set (e.g. ``PREDICT(MODEL='lm', classes=('yes','no'))``) projects the logit
+computation onto those classes — scores outside the set are provably unused
+and masked before the softmax (a cost-based engine would also shrink the
+final GEMM to the candidate rows of the unembedding matrix).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_token", "restrict_vocab"]
+
+
+def restrict_vocab(logits: jnp.ndarray,
+                   allowed: Sequence[int]) -> jnp.ndarray:
+    """Mask logits outside the allowed candidate set."""
+    mask = jnp.zeros((logits.shape[-1],), jnp.bool_)
+    mask = mask.at[jnp.asarray(list(allowed), jnp.int32)].set(True)
+    return jnp.where(mask, logits, -jnp.inf)
+
+
+def sample_token(logits: jnp.ndarray, temperature: float, key,
+                 top_k: int = 0,
+                 allowed: Optional[Sequence[int]] = None) -> jnp.ndarray:
+    """logits [B, V] -> tokens [B]."""
+    if allowed is not None:
+        logits = restrict_vocab(logits, allowed)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1][:, None]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,7 @@
+"""Training: optimizer, state, loop, checkpointing."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, wsd_schedule
+from .train_state import abstract_train_state, init_train_state, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "wsd_schedule",
+           "abstract_train_state", "init_train_state", "make_train_step"]

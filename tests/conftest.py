@@ -1,0 +1,56 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def hospital():
+    from repro.core import ModelStore
+    from repro.data import hospital_tables
+    store = ModelStore()
+    tables = hospital_tables(4000, seed=7)
+    for n, t in tables.items():
+        store.register_table(n, t)
+    data = {}
+    for t in tables.values():
+        for c in t.names:
+            data[c] = np.asarray(t.column(c))
+    return store, data
+
+
+@pytest.fixture(scope="session")
+def hospital_tree(hospital):
+    from repro.ml import DecisionTree, Pipeline, PipelineMetadata, \
+        StandardScaler
+    store, data = hospital
+    feat = ["age", "gender", "pregnant", "rcount", "hematocrit",
+            "neutrophils", "bp"]
+    sc = StandardScaler(feat).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression", max_depth=7,
+                                       min_leaf=15),
+                    PipelineMetadata(name="los", task="regression"))
+    pipe.fit({k: data[k] for k in feat}, data["length_of_stay"])
+    store.register_model("los", pipe)
+    return store, data, pipe
+
+
+@pytest.fixture(scope="session")
+def flights():
+    from repro.core import ModelStore
+    from repro.data import flight_features
+    from repro.ml import (LogisticRegression, OneHotEncoder, Pipeline,
+                          PipelineMetadata, StandardScaler)
+    from repro.relational import Table
+    fcols, fy = flight_features(4000, seed=3)
+    store = ModelStore()
+    store.register_table("flights", Table.from_pydict({**fcols,
+                                                       "delayed": fy}))
+    ohe = OneHotEncoder(["origin", "dest", "carrier"]).fit(fcols)
+    sc = StandardScaler(["distance", "taxi_out", "dep_hour"]).fit(fcols)
+    pipe = Pipeline([ohe, sc], LogisticRegression(l1=0.01, steps=150),
+                    PipelineMetadata(name="delay", task="classification"))
+    pipe.fit(fcols, fy)
+    store.register_model("delay", pipe)
+    return store, fcols, fy, pipe

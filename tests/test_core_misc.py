@@ -1,0 +1,151 @@
+"""Model store, clustering, codegen runtimes, HLO analyzer units."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CrossOptimizer, ModelStore, OptimizerConfig,
+                        execute, parse_query)
+from repro.core.clustering import build_clustered_model, kmeans
+from repro.core.codegen import ExecutionConfig, compile_plan
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+# -- model store --------------------------------------------------------------
+
+def test_model_store_versioning(hospital_tree):
+    store, _, pipe = hospital_tree
+    s = ModelStore()
+    v1 = s.register_model("m", pipe)
+    v2 = s.register_model("m", pipe)
+    assert (v1, v2) == (1, 2)
+    assert s.get_model("m", version=1) is pipe
+    assert s.model_version("m") == 2
+
+
+def test_model_store_transaction_rollback(hospital_tree):
+    _, _, pipe = hospital_tree
+    s = ModelStore()
+    with pytest.raises(RuntimeError):
+        with s.transaction() as txn:
+            txn.register("m", pipe)
+            raise RuntimeError("boom")
+    assert s.model_version("m") == 0            # nothing committed
+    actions = [r.action for r in s.audit_log]
+    assert "rollback" in actions
+
+
+def test_model_store_audit_reads(hospital_tree):
+    _, _, pipe = hospital_tree
+    s = ModelStore()
+    s.register_model("m", pipe)
+    s.get_model("m")
+    actions = [r.action for r in s.audit_log]
+    assert actions == ["register", "read"]
+
+
+# -- clustering ---------------------------------------------------------------
+
+def test_kmeans_separates_blobs():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(50, 2)) + 10
+    b = rng.normal(size=(50, 2)) - 10
+    x = jnp.asarray(np.vstack([a, b]), jnp.float32)
+    cents, assign = kmeans(x, 2, seed=1)
+    assign = np.asarray(assign)
+    assert len(set(assign[:50])) == 1
+    assert len(set(assign[50:])) == 1
+    assert assign[0] != assign[-1]
+
+
+def test_clustered_model_exact_routing(flights):
+    store, fcols, fy, pipe = flights
+    cm = build_clustered_model(pipe, {k: v[:1500] for k, v in fcols.items()},
+                               k=4, cluster_columns=["origin", "dest",
+                                                     "carrier"])
+    cols = {k: jnp.asarray(v) for k, v in fcols.items()}
+    full = np.asarray(pipe.predict(cols))
+    routed = cm.predict_routed(cols)
+    assert (full == routed).mean() > 0.999
+    cost = cm.model_cost()
+    assert cost["mean_cluster_features"] <= cost["original_features"]
+
+
+# -- execution runtimes ----------------------------------------------------------
+
+def test_external_and_container_runtimes_match_native(hospital_tree):
+    store, _, _ = hospital_tree
+    sql = ("SELECT pid, PREDICT(MODEL='los') AS los FROM patient_info "
+           "JOIN blood_tests ON pid WHERE age > 60")
+    plan = parse_query(sql, store)
+    native = execute(plan, store).to_pydict()
+    for rt in ("external", "container"):
+        p2 = plan.copy()
+        for n in p2.nodes.values():
+            if n.op == "predict_model":
+                n.runtime = rt
+        got = execute(p2, store,
+                      config=ExecutionConfig(container_latency_s=0.0)
+                      ).to_pydict()
+        assert got["pid"] == native["pid"]
+        assert np.allclose(got["los"], native["los"], atol=1e-4)
+
+
+def test_unjitted_matches_jitted(hospital_tree):
+    store, _, _ = hospital_tree
+    sql = "SELECT pid, age FROM patient_info WHERE age > 70 LIMIT 10"
+    plan = parse_query(sql, store)
+    a = execute(plan, store, jit=True).to_pydict()
+    b = execute(plan, store, jit=False).to_pydict()
+    assert a == b
+
+
+# -- HLO analyzer ----------------------------------------------------------------
+
+def test_hlo_analyzer_loop_scaling():
+    """Analytic check on a hand-built scan: trip-count-aware flop total."""
+    import os
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+
+    def f(x, w):
+        def body(h, wl):
+            return h @ wl, None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    comp = jax.jit(f).lower(x, w).compile()
+    cost = analyze_hlo(comp.as_text())
+    expected = 5 * 2 * 32 * 64 * 64
+    assert abs(cost.flops - expected) / expected < 0.05
+    assert cost.total_collective_bytes == 0
+
+
+def test_hlo_analyzer_collectives_counted():
+    txt = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main.1 (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%p0), replica_groups={}
+  ROOT %copy.1 = f32[128,256]{1,0} copy(%all-reduce.1)
+}
+"""
+    cost = analyze_hlo(txt)
+    assert cost.collective_bytes["all-reduce"] == 128 * 256 * 4
+
+
+def test_hlo_analyzer_dus_in_place():
+    txt = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main.1 (p0: f32[1024,64], p1: f32[1,64], p2: s32[]) -> f32[1024,64] {
+  %p0 = f32[1024,64]{1,0} parameter(0)
+  %p1 = f32[1,64]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  ROOT %dynamic-update-slice.1 = f32[1024,64]{1,0} dynamic-update-slice(%p0, %p1, %p2, %p2)
+}
+"""
+    cost = analyze_hlo(txt)
+    assert cost.bytes == 2 * 64 * 4       # slice in/out, not the full buffer

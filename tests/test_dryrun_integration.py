@@ -1,0 +1,45 @@
+"""Dry-run integration: one real (arch x shape x mesh) cell lowered and
+compiled on 512 placeholder devices, in a subprocess (so this test session's
+jax stays at 1 CPU device)."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "granite-moe-1b-a400m", "--shape", "prefill_32k",
+           "--out", str(tmp_path)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=540,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:"
+                               "/usr/local/bin"},
+                          cwd=str(Path(__file__).resolve().parents[1]))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(
+        (tmp_path / "granite-moe-1b-a400m__prefill_32k__single.json")
+        .read_text())
+    assert out["status"] == "ok"
+    assert out["n_chips"] == 256
+    r = out["roofline"]
+    assert r["compute_s"] > 0 and r["memory_s"] > 0
+    assert out["hlo_cost_per_device"]["collective_bytes"]
+
+
+@pytest.mark.slow
+def test_dryrun_skip_cell_documented(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "gemma2-2b", "--shape", "long_500k",
+           "--out", str(tmp_path)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=120,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                          cwd=str(Path(__file__).resolve().parents[1]))
+    assert proc.returncode == 0
+    out = json.loads((tmp_path / "gemma2-2b__long_500k__single.json")
+                     .read_text())
+    assert out["status"] == "skipped"
+    assert "sub-quadratic" in out["reason"]

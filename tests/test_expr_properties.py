@@ -1,0 +1,80 @@
+"""Property tests: expression constant folding preserves semantics, and
+constraint extraction is sound (never claims a constraint the data can
+violate)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.relational.expr import (BinOp, CaseWhen, Col, Const, UnaryOp,
+                                   conjuncts, extract_constraints,
+                                   fold_constants)
+
+settings.register_profile("ci2", max_examples=40, deadline=None)
+settings.load_profile("ci2")
+
+_NUM = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@st.composite
+def exprs(draw, depth=0):
+    """Random expression over columns a (float) and b (int)."""
+    if depth > 3 or draw(st.booleans()):
+        return draw(st.sampled_from([
+            Col("a"), Col("b"), Const(draw(_NUM)),
+            Const(draw(st.integers(-5, 5)))]))
+    op = draw(st.sampled_from(["+", "-", "*", "<", "<=", ">", ">=", "==",
+                               "and", "or"]))
+    left = draw(exprs(depth=depth + 1))
+    right = draw(exprs(depth=depth + 1))
+    if op in ("and", "or"):
+        # boolean operands: wrap numerics in comparisons
+        left = BinOp("<", left, Const(draw(_NUM)))
+        right = BinOp(">", right, Const(draw(_NUM)))
+    return BinOp(op, left, right)
+
+
+@given(exprs(), st.lists(_NUM, min_size=3, max_size=8))
+def test_fold_constants_preserves_value(expr, vals):
+    cols = {"a": jnp.asarray(vals, jnp.float32),
+            "b": jnp.asarray(np.arange(len(vals)), jnp.int32)}
+    before = np.asarray(expr.evaluate(cols))
+    after = np.asarray(fold_constants(expr).evaluate(cols))
+    if before.dtype.kind == "b":
+        np.testing.assert_array_equal(before, after)
+    else:
+        np.testing.assert_allclose(before, after, rtol=1e-5, atol=1e-5)
+
+
+@given(st.lists(_NUM, min_size=5, max_size=20),
+       st.floats(-5, 5, allow_nan=False),
+       st.floats(-5, 5, allow_nan=False))
+def test_extract_constraints_sound(vals, lo, hi):
+    """Rows passing the predicate must satisfy every extracted constraint."""
+    pred = BinOp("and", BinOp(">", Col("a"), Const(lo)),
+                 BinOp("<=", Col("a"), Const(hi)))
+    cols = {"a": jnp.asarray(vals, jnp.float32)}
+    mask = np.asarray(pred.evaluate(cols))
+    cons = extract_constraints(pred)
+    arr = np.asarray(vals, np.float32)
+    for c in cons:
+        passing = arr[mask]
+        if c.kind == ">":
+            assert (passing > c.value).all()
+        elif c.kind == "<=":
+            assert (passing <= c.value).all()
+
+
+def test_case_when_dead_branch_elimination():
+    e = CaseWhen(((Const(False), Const(1.0)),
+                  (Const(True), Const(2.0)),
+                  (BinOp(">", Col("a"), Const(0)), Const(3.0))),
+                 Const(4.0))
+    folded = fold_constants(e)
+    # first branch dead, second always fires -> constant 2.0
+    assert isinstance(folded, Const) and folded.value == 2.0
+
+
+def test_conjuncts_flatten():
+    e = BinOp("and", BinOp("and", Col("a") > 1, Col("a") < 5), Col("b") == 2)
+    assert len(conjuncts(e)) == 3

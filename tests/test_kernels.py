@@ -1,0 +1,123 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import wkv6_scan_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.tree_gemm.ops import tree_gemm
+from repro.kernels.tree_gemm.ref import tree_gemm_ref
+from repro.ml import RandomForest, ensemble_to_gemm, predict_ensemble_gemm
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,dtype", [
+    (1, 128, 4, 2, 64, jnp.float32),
+    (2, 192, 4, 4, 64, jnp.float32),
+    (1, 128, 8, 2, 128, jnp.float32),
+    (2, 256, 2, 1, 64, jnp.bfloat16),
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 64, 0.0), (True, 0, 30.0), (False, 0, 0.0),
+])
+def test_flash_attention_sweep(b, s, h, kv, d, dtype, causal, window, cap):
+    key = jax.random.PRNGKey(b * 100 + s)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("b,t,h,kv,d", [
+    (2, 256, 8, 2, 64), (1, 300, 4, 4, 128), (3, 128, 8, 1, 64),
+])
+def test_decode_attention_sweep(b, t, h, kv, d):
+    key = jax.random.PRNGKey(t)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, t, kv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, t, kv, d), jnp.float32)
+    lens = jax.random.randint(ks[3], (b,), 1, t + 1)
+    out = decode_attention(q, kc, vc, lens, block_k=128)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,kk,chunk", [
+    (1, 32, 2, 64, 16), (2, 48, 4, 64, 16), (1, 40, 1, 64, 8),
+])
+def test_rwkv6_scan_sweep(b, s, h, kk, chunk):
+    key = jax.random.PRNGKey(s)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, kk)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, kk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, kk)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, kk))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, kk)) * 0.1
+    out = rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    ref = wkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4)
+
+
+def test_rwkv6_strong_decay_stable():
+    """Strong decays underflow but never overflow/NaN (the numerics that
+    forced the pairwise-chunk formulation)."""
+    b, s, h, kk = 1, 32, 2, 64
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    r = jax.random.normal(ks[0], (b, s, h, kk))
+    k = jax.random.normal(ks[1], (b, s, h, kk))
+    v = jax.random.normal(ks[2], (b, s, h, kk))
+    w = jnp.full((b, s, h, kk), 1e-6)      # near-total decay
+    u = jnp.zeros((h, kk))
+    out = rwkv6_scan(r, k, v, w, u, chunk=16)
+    ref = wkv6_scan_ref(r, k, v, w, u)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 32, 2, 8, 4, 16), (2, 64, 3, 16, 8, 16), (1, 48, 2, 8, 4, 8),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    key = jax.random.PRNGKey(s + p)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    out = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    ref = ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4)
+
+
+@pytest.mark.parametrize("n_trees,depth,n", [(3, 4, 200), (8, 5, 137)])
+def test_tree_gemm_kernel_vs_forest(n_trees, depth, n):
+    rng = np.random.default_rng(depth)
+    x = rng.normal(size=(500, 6)).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.int32)
+    rf = RandomForest(n_trees=n_trees, max_depth=depth).fit(x, y)
+    ens = ensemble_to_gemm(rf.trees, pad_to=128)
+    xs = jnp.asarray(x[:n])
+    got = np.asarray(tree_gemm(ens, xs))
+    ref = np.asarray(predict_ensemble_gemm(ens, xs))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    raw = np.asarray(tree_gemm_ref(
+        xs, jnp.asarray(ens.a), jnp.asarray(ens.b), jnp.asarray(ens.c),
+        jnp.asarray(ens.d), jnp.asarray(ens.e))) / ens.n_trees
+    np.testing.assert_allclose(raw, ref, atol=1e-5)

@@ -1,0 +1,129 @@
+"""Unit + property tests for the classical ML layer."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ml import (DecisionTree, GradientBoostedTrees, LinearRegression,
+                      LogisticRegression, MLP, OneHotEncoder, RandomForest,
+                      StandardScaler, ensemble_to_gemm, fit_tree_arrays,
+                      predict_ensemble_gemm, predict_gemm, tree_to_gemm)
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _toy(n=400, d=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = (x[:, 0] + 0.5 * x[:, 1] > 0).astype(np.int32)
+    return x, y
+
+
+def test_tree_jnp_matches_numpy_oracle():
+    x, y = _toy()
+    tree = fit_tree_arrays(x, y, "classification", max_depth=5)
+    got = np.asarray(tree.predict_jnp(jnp.asarray(x)))
+    ref = tree.predict_numpy(x)
+    assert np.allclose(got, ref, atol=1e-6)
+
+
+def test_tree_learns_signal():
+    x, y = _toy(800)
+    dt = DecisionTree(max_depth=5).fit(x, y)
+    acc = (np.asarray(dt.predict(jnp.asarray(x))) == y).mean()
+    assert acc > 0.9
+
+
+@given(st.integers(0, 1000))
+def test_gemm_translation_equivalence(seed):
+    x, y = _toy(200, seed=seed % 7)
+    tree = fit_tree_arrays(x, y, "classification", max_depth=4, min_leaf=5)
+    g = tree_to_gemm(tree)
+    ref = tree.predict_numpy(x)
+    got = np.asarray(predict_gemm(g, jnp.asarray(x)))
+    assert np.allclose(got, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("pad", [16, 128])
+def test_ensemble_gemm_padding_invariance(pad):
+    x, y = _toy(300)
+    rf = RandomForest(n_trees=4, max_depth=4).fit(x, y)
+    ens = ensemble_to_gemm(rf.trees, pad_to=pad)
+    got = np.asarray(predict_ensemble_gemm(ens, jnp.asarray(x)))
+    ref = np.asarray(rf.predict_scores(jnp.asarray(x)))
+    assert np.allclose(got, ref, atol=1e-5)
+
+
+def test_gbt_regression_fits():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 4)).astype(np.float32)
+    y = 2 * x[:, 0] - x[:, 1] + 0.1 * rng.normal(size=500)
+    gbt = GradientBoostedTrees(n_trees=25, max_depth=3).fit(x, y)
+    pred = np.asarray(gbt.predict(jnp.asarray(x)))
+    assert np.corrcoef(pred, y)[0, 1] > 0.9
+
+
+def test_l1_logistic_sparsity_monotone():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(600, 30)).astype(np.float32)
+    y = (x[:, 0] - x[:, 1] > 0).astype(np.float32)
+    s = []
+    for l1 in (0.001, 0.05, 0.2):
+        lr = LogisticRegression(l1=l1, steps=200).fit(x, y)
+        s.append(lr.sparsity())
+    assert s[0] <= s[1] <= s[2]
+    assert s[2] > 0.5
+
+
+def test_linear_regression_recovers_weights():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(800, 6)).astype(np.float32)
+    w_true = np.asarray([2.0, -1.0, 0.0, 0.0, 0.5, 0.0], np.float32)
+    y = x @ w_true + 3.0
+    lr = LinearRegression(l1=0.01, steps=600, lr=0.2).fit(x, y)
+    assert np.allclose(lr.weights, w_true, atol=0.15)
+    assert abs(lr.bias - 3.0) < 0.2
+    assert set(lr.zero_weight_features()) >= {2, 3}
+
+
+@given(st.integers(0, 50))
+def test_tree_pruning_sound_on_constrained_rows(seed):
+    """Pruned tree must agree with the original on every row satisfying the
+    constraint (the paper's soundness requirement for predicate pruning)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(300, 4)).astype(np.float32)
+    y = (x[:, 0] + x[:, 2] > 0).astype(np.int32)
+    tree = fit_tree_arrays(x, y, "classification", max_depth=5, min_leaf=5)
+    lo, hi = sorted(rng.normal(size=2).tolist())
+    pruned = tree.prune_with_constraints({0: (lo, hi)})
+    mask = (x[:, 0] >= lo) & (x[:, 0] <= hi)
+    if mask.sum() == 0:
+        return
+    assert np.allclose(pruned.predict_numpy(x[mask]),
+                       tree.predict_numpy(x[mask]), atol=1e-6)
+    assert pruned.n_nodes <= tree.n_nodes
+
+
+def test_onehot_restrict():
+    data = {"c": np.asarray([0, 1, 2, 1, 0])}
+    enc = OneHotEncoder(["c"]).fit(data)
+    full = np.asarray(enc.transform({"c": jnp.asarray(data["c"])}))
+    sub = enc.restrict([1])     # keep category "1" only
+    part = np.asarray(sub.transform({"c": jnp.asarray(data["c"])}))
+    assert part.shape == (5, 1)
+    assert np.allclose(part[:, 0], full[:, 1])
+
+
+def test_mlp_restrict_features_consistent():
+    x, y = _toy(300, d=6)
+    mlp = MLP(hidden=(16,), n_outputs=2, steps=40).fit(x, y)
+    keep = np.asarray([0, 1, 3])
+    sub = mlp.restrict_features(keep)
+    got = np.asarray(sub.predict_scores(jnp.asarray(x[:, keep])))
+    # restriction zero-imputes dropped features
+    x0 = x.copy()
+    x0[:, [2, 4, 5]] = 0.0
+    ref = np.asarray(mlp.predict_scores(jnp.asarray(x0)))
+    assert np.allclose(got, ref, atol=1e-4)

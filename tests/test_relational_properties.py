@@ -1,0 +1,113 @@
+"""Property-based tests: relational operators vs a numpy oracle.
+
+The system invariant: mask-carrying static-shape execution must agree with
+plain compacting numpy semantics (SQL bags) for every operator composition.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.relational import (Table, col, const, filter_, group_aggregate,
+                              join_unique, limit, order_by, union_all)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def table_data(draw, min_rows=1, max_rows=40):
+    n = draw(st.integers(min_rows, max_rows))
+    ints = draw(st.lists(st.integers(-5, 5), min_size=n, max_size=n))
+    floats = draw(st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    cats = draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+    return {"a": np.asarray(ints, np.int32),
+            "x": np.asarray(floats, np.float32),
+            "g": np.asarray(cats, np.int32)}
+
+
+@given(table_data(), st.integers(-5, 5))
+def test_filter_matches_numpy(data, threshold):
+    t = Table.from_pydict(data)
+    out = filter_(t, col("a") > threshold)
+    got = out.to_pydict()
+    keep = data["a"] > threshold
+    assert got["a"] == data["a"][keep].tolist()
+    assert np.allclose(got["x"], data["x"][keep], atol=1e-5)
+
+
+@given(table_data(), st.integers(-5, 5), st.integers(0, 3))
+def test_conjunctive_filter(data, thr_a, thr_g):
+    t = Table.from_pydict(data)
+    out = filter_(t, (col("a") > thr_a) & (col("g") == thr_g))
+    keep = (data["a"] > thr_a) & (data["g"] == thr_g)
+    assert out.to_pydict()["a"] == data["a"][keep].tolist()
+
+
+@given(table_data())
+def test_group_aggregate_matches_numpy(data):
+    t = Table.from_pydict(data)
+    out = group_aggregate(t, "g", {"s": ("sum", "x"), "n": ("count", None),
+                                   "m": ("avg", "x")}, num_groups=4)
+    got = out.to_pydict()
+    for i, gval in enumerate(got["g"]):
+        mask = data["g"] == gval
+        assert mask.sum() == got["n"][i]
+        assert np.isclose(got["s"][i], data["x"][mask].sum(), atol=1e-2)
+        assert np.isclose(got["m"][i], data["x"][mask].mean(), atol=1e-3)
+
+
+@given(table_data())
+def test_global_aggregate(data):
+    t = Table.from_pydict(data)
+    out = group_aggregate(t, None, {"mx": ("max", "x"), "mn": ("min", "x"),
+                                    "n": ("count", None)})
+    got = out.to_pydict()
+    assert got["n"] == [len(data["x"])]
+    assert np.isclose(got["mx"][0], data["x"].max(), atol=1e-5)
+    assert np.isclose(got["mn"][0], data["x"].min(), atol=1e-5)
+
+
+@given(table_data(min_rows=2))
+def test_order_by_limit(data):
+    t = Table.from_pydict(data)
+    out = limit(order_by(t, "x", descending=True), 3)
+    got = out.to_pydict()["x"]
+    ref = sorted(data["x"].tolist(), reverse=True)[:3]
+    assert np.allclose(sorted(got, reverse=True), ref, atol=1e-5)
+
+
+@given(st.integers(2, 30), st.integers(2, 30), st.integers(0, 100))
+def test_join_unique_matches_numpy(n_left, n_right, seed):
+    rng = np.random.default_rng(seed)
+    # right side: unique keys
+    rkeys = rng.permutation(50)[:n_right].astype(np.int32)
+    lkeys = rng.choice(50, n_left).astype(np.int32)
+    left = Table.from_pydict({"k": lkeys,
+                              "lv": np.arange(n_left, dtype=np.float32)})
+    right = Table.from_pydict({"k": rkeys,
+                               "rv": rng.normal(size=n_right)
+                               .astype(np.float32)})
+    out = join_unique(left, right, on="k").to_pydict()
+    rmap = {int(k): float(v) for k, v in zip(rkeys, right.to_pydict()["rv"])}
+    exp_keys = [int(k) for k in lkeys if int(k) in rmap]
+    assert out["k"] == exp_keys
+    assert np.allclose(out["rv"], [rmap[k] for k in exp_keys], atol=1e-5)
+
+
+@given(table_data(), table_data())
+def test_union_all_counts(d1, d2):
+    t = union_all(Table.from_pydict(d1), Table.from_pydict(d2))
+    assert int(t.num_valid()) == len(d1["a"]) + len(d2["a"])
+
+
+@given(table_data(), st.integers(-5, 5))
+def test_filter_after_union_commutes(data, thr):
+    t1 = Table.from_pydict(data)
+    t2 = Table.from_pydict(data)
+    pred = col("a") > thr
+    a = filter_(union_all(t1, t2), pred).to_pydict()
+    b = union_all(filter_(t1, pred), filter_(t2, pred)).to_pydict()
+    assert a["a"] == b["a"]

@@ -1,0 +1,44 @@
+"""Vocab-restricted decoding + the LLM-in-an-inference-query path
+(the bridge between the paper's PREDICT and the LM serving substrate)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import build_model
+from repro.serve import InferenceEngine, Request, ServeConfig
+from repro.serve.sampling import restrict_vocab, sample_token
+
+
+def test_restrict_vocab_masks():
+    logits = jnp.asarray([[1.0, 5.0, 3.0, 4.0]])
+    tok = sample_token(logits, 0.0, None, allowed=(0, 2))
+    assert int(tok[0]) == 2       # best allowed, not global argmax (1)
+
+
+def test_restricted_sampling_never_leaves_set():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (8, 100))
+    allowed = (3, 7, 42)
+    for i in range(5):
+        key, sub = jax.random.split(key)
+        toks = sample_token(logits, 1.0, sub, allowed=allowed)
+        assert set(np.asarray(toks).tolist()) <= set(allowed)
+
+
+def test_engine_vocab_restricted_request():
+    cfg = reduced_config(get_config("gemma2-2b"))
+    model = build_model(cfg, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = InferenceEngine(model, ServeConfig(n_slots=1, max_len=32,
+                                             eos_token=-1))
+    allowed = (10, 11, 12)
+    eng.submit(Request(rid=0,
+                       prompt=np.arange(5, dtype=np.int32),
+                       max_new_tokens=4, allowed_tokens=allowed))
+    eng.run_until_drained(params)
+    out = eng.completed[0].output
+    assert len(out) == 4
+    assert set(out) <= set(allowed)
