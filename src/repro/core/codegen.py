@@ -33,7 +33,8 @@ from ..relational import ops as rel_ops
 from ..relational.table import ColumnSchema, Schema, Table
 from .ir import Plan
 
-__all__ = ["compile_plan", "execute", "ExecutionConfig"]
+__all__ = ["compile_plan", "execute", "ExecutionConfig", "compile_stats",
+           "reset_compile_stats", "add_compile_listener"]
 
 
 class ExecutionConfig:
@@ -45,6 +46,29 @@ class ExecutionConfig:
         self.container_latency_s = container_latency_s
         self.external_latency_s = external_latency_s
         self.use_pallas_tree_gemm = use_pallas_tree_gemm
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for compiled-executable caching: two configs
+        with equal knobs produce identical executables."""
+        return (self.container_latency_s, self.external_latency_s,
+                self.use_pallas_tree_gemm)
+
+
+# Observability hook: every compile_plan() call counts here, so callers
+# (tests, the PredictionService cache) can assert that a warm path performed
+# zero plan compilations.
+compile_stats: Dict[str, int] = {"plans_compiled": 0}
+_compile_listeners: List[Callable[[Plan], None]] = []
+
+
+def reset_compile_stats() -> None:
+    compile_stats["plans_compiled"] = 0
+
+
+def add_compile_listener(fn: Callable[[Plan], None]) -> Callable[[], None]:
+    """Register a hook fired on every compile_plan; returns an unsubscriber."""
+    _compile_listeners.append(fn)
+    return lambda: _compile_listeners.remove(fn)
 
 
 def _model_scores(model, x: jnp.ndarray) -> jnp.ndarray:
@@ -108,6 +132,9 @@ def compile_plan(plan: Plan, catalog,
     jit-compatible as a whole.
     """
     config = config or ExecutionConfig()
+    compile_stats["plans_compiled"] += 1
+    for listener in list(_compile_listeners):
+        listener(plan)
     order = plan.topo_order()
     nodes = plan.nodes
 

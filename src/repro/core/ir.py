@@ -19,10 +19,11 @@ so the optimizer can type-check rewrites.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-__all__ = ["Category", "Node", "Plan"]
+__all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature"]
 
 
 class Category:
@@ -197,3 +198,55 @@ class Plan:
         for n in self.nodes.values():
             by_cat[n.category] = by_cat.get(n.category, 0) + 1
         return by_cat
+
+    def signature(self) -> str:
+        return plan_signature(self)
+
+
+# ---------------------------------------------------------------------------
+# Structural canonicalization + plan signature.
+#
+# Two plans that compute the same thing must hash identically even when their
+# auto-generated node ids differ (the global ``_ids`` counter makes ids
+# session-dependent) and regardless of attr-dict insertion order.  Node
+# identity is therefore *positional*: nodes are numbered by a deterministic
+# DFS from the output, attrs are canonicalized recursively (models and
+# featurizers by content digest — see ``model_store.content_fingerprint`` —
+# so the signature is sensitive to retrained weights but blind to Python
+# object identity).  The signature is the cache key half contributed by the
+# query; the serving layer combines it with table schemas + ExecutionConfig.
+# ---------------------------------------------------------------------------
+
+def canonical_form(plan: Plan) -> Tuple:
+    """Canonical structural form of the sub-DAG reachable from the output."""
+    from .model_store import _canon_value
+
+    if plan.output is None:
+        raise ValueError("cannot canonicalize a plan with no output")
+    order: List[str] = []
+    seen: Set[str] = set()
+
+    def visit(nid: str):
+        if nid in seen:
+            return
+        seen.add(nid)
+        for dep in plan.nodes[nid].inputs:
+            visit(dep)
+        order.append(nid)
+
+    visit(plan.output)
+    pos = {nid: i for i, nid in enumerate(order)}
+    entries = []
+    for nid in order:
+        n = plan.nodes[nid]
+        attrs = tuple(sorted(
+            (k, _canon_value(v)) for k, v in n.attrs.items()))
+        entries.append((n.op, n.category, n.runtime, n.out_kind,
+                        tuple(pos[i] for i in n.inputs), attrs))
+    return (tuple(entries), pos[plan.output])
+
+
+def plan_signature(plan: Plan) -> str:
+    """Stable hex signature of a plan's structure + embedded model content."""
+    return hashlib.sha256(
+        repr(canonical_form(plan)).encode("utf-8")).hexdigest()

@@ -20,8 +20,11 @@ and codegen.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import re
 import threading
 import time
+import weakref
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -29,7 +32,157 @@ import numpy as np
 from ..ml.pipeline import Pipeline
 from ..relational.table import Table
 
-__all__ = ["ColumnStats", "ModelStore", "AuditRecord"]
+__all__ = ["ColumnStats", "ModelStore", "AuditRecord", "content_fingerprint"]
+
+
+# ---------------------------------------------------------------------------
+# Content fingerprinting (plan-signature support).
+#
+# A model reference inside a cached query plan must be identified by *what the
+# model computes*, not by Python object identity: two registrations of
+# byte-identical pipelines should share one compiled executable, and
+# re-registering a retrained model must miss the cache.  ``content_fingerprint``
+# reduces an arbitrary model/featurizer/attr object to a stable canonical form
+# (arrays by byte digest, objects by their field contents) and hashes it.
+# ---------------------------------------------------------------------------
+
+_ADDR_RE = re.compile(r" at 0x[0-9a-fA-F]+")
+
+# Identity-keyed memo for the (expensive) object branch of _canon_value:
+# walking a fitted model hashes every weight array, and the serving layer
+# computes a plan signature per request.  Registered artifacts are immutable
+# by store contract (every register is a new version), so caching by object
+# identity is sound; a weakref finalizer evicts entries on GC before their
+# id can be reused.  In-place mutation of an already-fingerprinted object is
+# the one unsupported pattern (the stale digest would mask the change).
+_CANON_MEMO: Dict[int, Tuple[Any, Any]] = {}
+
+
+def _canon_object(obj: Any, seen: set) -> Any:
+    key = id(obj)
+    entry = _CANON_MEMO.get(key)
+    if entry is not None and entry[0]() is obj:
+        return entry[1]
+    # Only memoize traversal roots (seen holds just this object): an interior
+    # object's form can be truncated by a cycle marker relative to *this*
+    # root, and caching that form would collide objects whose cyclic partners
+    # differ.  Roots are what the signature path hits repeatedly anyway
+    # (plan attrs like the model object).
+    memoizable = len(seen) == 1
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        result = (type(obj).__name__, tuple(
+            (f.name, _canon_value(getattr(obj, f.name), seen))
+            for f in dataclasses.fields(obj)))
+    elif hasattr(obj, "__dict__"):
+        # Underscored attrs are fitted state too (e.g. Bucketizer._kept
+        # changes the feature layout) — only dunders are infrastructure.
+        result = (type(obj).__name__, tuple(
+            (k, _canon_value(v, seen))
+            for k, v in sorted(vars(obj).items())
+            if not k.startswith("__")))
+    else:
+        return ("repr", _ADDR_RE.sub("", repr(obj)))
+    if memoizable:
+        try:
+            _CANON_MEMO[key] = (
+                weakref.ref(obj, lambda _, k=key: _CANON_MEMO.pop(k, None)),
+                result)
+        except TypeError:
+            pass
+    return result
+
+
+def _canon_global(value: Any, seen: set) -> Any:
+    """Shallow canon for a callable's resolved globals — never walks whole
+    modules or deep library objects (``np`` in a UDF would otherwise pull
+    an entire package namespace into every fingerprint)."""
+    import types
+    if isinstance(value, types.ModuleType):
+        return ("module", value.__name__)
+    if callable(value) and hasattr(value, "__code__"):
+        return ("callable-ref",
+                getattr(value, "__qualname__", value.__name__),
+                _canon_code(value.__code__, seen))
+    if value is None or isinstance(value, (bool, int, float, str, bytes)):
+        return _canon_value(value, seen)
+    if hasattr(value, "dtype") and hasattr(value, "shape") \
+            and hasattr(value, "__array__"):
+        return _canon_value(value, seen)
+    return ("repr", _ADDR_RE.sub("", repr(value)))
+
+
+def _canon_code(code: Any, seen: set) -> Any:
+    """Canon of a code object, recursing into nested code objects in
+    co_consts (a nested lambda's constants live in *its* consts, not the
+    outer function's)."""
+    consts = tuple(
+        _canon_code(c, seen) if hasattr(c, "co_code")
+        else _canon_value(c, seen)
+        for c in code.co_consts)
+    return ("code", hashlib.sha256(code.co_code).hexdigest(),
+            tuple(code.co_names), consts)
+
+
+def _canon_callable(obj: Any, seen: set) -> Any:
+    """Callables hash code + constants + closure + defaults + referenced
+    globals: co_code alone cannot tell ``lambda x: x + 1`` from
+    ``lambda x: x + 2`` (the constant lives in co_consts), nor
+    ``abs(x)`` from ``len(x)`` (the name lives in co_names)."""
+    code = obj.__code__
+    closure = []
+    for cell in (obj.__closure__ or ()):
+        try:
+            closure.append(_canon_value(cell.cell_contents, seen))
+        except ValueError:            # empty cell
+            closure.append(("empty-cell",))
+    defaults = _canon_value(obj.__defaults__, seen)
+    fn_globals = getattr(obj, "__globals__", {}) or {}
+    bound_globals = tuple(
+        (name, _canon_global(fn_globals[name], seen))
+        for name in code.co_names if name in fn_globals)
+    return ("callable", getattr(obj, "__qualname__", obj.__name__),
+            _canon_code(code, seen), tuple(closure), defaults,
+            bound_globals)
+
+
+def _canon_value(obj: Any, seen: Optional[set] = None) -> Any:
+    seen = seen if seen is not None else set()
+    if obj is None or isinstance(obj, (bool, int, str, bytes)):
+        return obj
+    if isinstance(obj, float):
+        return ("f", repr(obj))
+    if isinstance(obj, np.generic):
+        return _canon_value(obj.item(), seen)
+    # arrays (numpy or jax) by dtype/shape/bytes digest
+    if hasattr(obj, "dtype") and hasattr(obj, "shape") \
+            and hasattr(obj, "__array__"):
+        arr = np.asarray(obj)
+        return ("ndarray", str(arr.dtype), tuple(arr.shape),
+                hashlib.sha256(np.ascontiguousarray(arr).tobytes())
+                .hexdigest())
+    if isinstance(obj, (list, tuple)):
+        return tuple(_canon_value(v, seen) for v in obj)
+    if isinstance(obj, dict):
+        return tuple(sorted(
+            (str(k), _canon_value(v, seen)) for k, v in obj.items()))
+    if isinstance(obj, (set, frozenset)):
+        return tuple(sorted(repr(_canon_value(v, seen)) for v in obj))
+    oid = id(obj)
+    if oid in seen:
+        return ("cycle", type(obj).__name__)
+    seen.add(oid)
+    try:
+        if callable(obj) and hasattr(obj, "__code__"):
+            return _canon_callable(obj, seen)
+        return _canon_object(obj, seen)
+    finally:
+        seen.discard(oid)
+
+
+def content_fingerprint(obj: Any) -> str:
+    """Stable hex digest of an object's *content* (see module note above)."""
+    return hashlib.sha256(
+        repr(_canon_value(obj)).encode("utf-8")).hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +235,7 @@ class ModelStore:
         self._tables: Dict[str, Table] = {}
         self._stats: Dict[str, Dict[str, ColumnStats]] = {}
         self._clusters: Dict[str, Any] = {}
+        self._digests: Dict[Tuple[str, int], str] = {}
         self._audit_log: List[AuditRecord] = []
         self._lock = threading.RLock()
         self.principal = principal
@@ -119,6 +273,21 @@ class ModelStore:
 
     def model_version(self, name: str) -> int:
         return len(self._models.get(name, []))
+
+    def model_digest(self, name: str, version: Optional[int] = None) -> str:
+        """Content digest of a registered pipeline version (memoized —
+        registered versions are immutable)."""
+        with self._lock:
+            versions = self._models.get(name)
+            if not versions:
+                raise KeyError(f"model {name!r} not found")
+            v = version or len(versions)
+            key = (name, v)
+            digest = self._digests.get(key)
+            if digest is None:
+                digest = content_fingerprint(versions[v - 1])
+                self._digests[key] = digest
+            return digest
 
     def transaction(self) -> _Txn:
         return _Txn(self)

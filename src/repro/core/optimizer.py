@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .ir import Plan
+from .ir import Plan, plan_signature
 
 __all__ = ["OptimizerConfig", "CrossOptimizer", "OptimizationReport"]
 
@@ -66,6 +66,11 @@ class OptimizerConfig:
 @dataclasses.dataclass
 class OptimizationReport:
     entries: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # Structural signatures of the plan before/after optimization (see
+    # ``ir.plan_signature``).  ``input_signature`` is the serving layer's
+    # cache key half; ``plan_signature`` identifies the optimized artifact.
+    input_signature: Optional[str] = None
+    plan_signature: Optional[str] = None
 
     def log(self, rule: str, detail: str):
         self.entries.append((rule, detail))
@@ -91,8 +96,10 @@ class CrossOptimizer:
                             predicate_pushdown, projection_pushdown,
                             runtime_selection, subplan_dedup)
         cfg = self.config
-        plan = plan.copy()
         report = OptimizationReport()
+        if plan.output is not None:
+            report.input_signature = plan_signature(plan)
+        plan = plan.copy()
         passes = [
             (True, subplan_dedup.apply),
             (cfg.enable_constant_folding, constant_folding.apply),
@@ -115,4 +122,6 @@ class CrossOptimizer:
                 plan.validate()
             if not changed:
                 break
+        if plan.output is not None:
+            report.plan_signature = plan_signature(plan)
         return plan, report

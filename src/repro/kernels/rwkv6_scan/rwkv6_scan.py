@@ -40,26 +40,41 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr, *,
     u = u_ref[0].astype(jnp.float32)                  # [1, K] -> broadcast
 
     logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), -60.0)
-    cum = jnp.cumsum(logw, axis=0)                    # [q, K] inclusive
-    cum_ex = cum - logw
+
+    # Every decay exponent is a *direct* sum of log-decays over its span
+    # (banded matmuls against logw).  Differencing two large running cumsums
+    # (cum_ex[t] - cum[s]) cancels catastrophically under strong decay
+    # (|cum| ~ chunk*|logw| with f32 rounding baked in); a banded sum has
+    # monotone same-sign partials, so its error scales with the *span* sum —
+    # tiny exactly where exp() is non-negligible.
+    t2 = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s2 = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lower = (s2 < t2).astype(jnp.float32)             # j <  t
+    upper = (s2 > t2).astype(jnp.float32)             # j >  t
+    cum_ex = jax.lax.dot(lower, logw,
+                         preferred_element_type=jnp.float32)   # sum_{j<t}
+    suff = jax.lax.dot(upper, logw,
+                       preferred_element_type=jnp.float32)     # sum_{j>t}
+    total = jnp.sum(logw, axis=0)                     # [K]
 
     st = state_scr[...]                               # [K, V]
     y_inter = jax.lax.dot(r * jnp.exp(cum_ex), st,
                           preferred_element_type=jnp.float32)
 
-    # pairwise decays (exponents <= 0; [q, q, K] stays in VMEM)
-    diff = cum_ex[:, None, :] - cum[None, :, :]
-    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
-    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
-    strict = (t_idx > s_idx)[:, :, None]
+    # pairwise decays: diff[t,s] = sum_{s<j<t} logw[j]  ([q, q, K] in VMEM)
+    tq = jax.lax.broadcasted_iota(jnp.int32, (chunk * chunk, chunk), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (chunk * chunk, chunk), 1)
+    band = ((jq > tq % chunk) & (jq < tq // chunk)).astype(jnp.float32)
+    diff = jax.lax.dot(band, logw, preferred_element_type=jnp.float32) \
+        .reshape(chunk, chunk, logw.shape[-1])
+    strict = (t2 > s2)[:, :, None]
     dec = jnp.where(strict, jnp.exp(diff), 0.0)
     att = jnp.sum(r[:, None, :] * k[None, :, :] * dec, axis=-1)  # [q, q]
     diag = jnp.sum(r * (u * k), axis=-1)              # [q]
     y_intra = jax.lax.dot(att, v, preferred_element_type=jnp.float32) \
         + diag[:, None] * v
 
-    total = cum[-1]                                   # [K]
-    k_dec = k * jnp.exp(total[None, :] - cum)
+    k_dec = k * jnp.exp(suff)
     state_scr[...] = st * jnp.exp(total)[:, None] + jax.lax.dot(
         k_dec.T, v, preferred_element_type=jnp.float32)
 

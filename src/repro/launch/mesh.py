@@ -17,11 +17,24 @@ import jax
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` across JAX versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist in newer releases; Auto is the
+    default there, so omitting the argument on old JAX is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            auto = (axis_type.Auto,) * len(axes)
+            return jax.make_mesh(shape, axes, axis_types=auto)
+        except TypeError:      # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -29,5 +42,4 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, max(1, n // data))
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return _make_mesh((data, model), ("data", "model"))

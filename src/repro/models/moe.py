@@ -29,6 +29,22 @@ from .layers import dense_init
 __all__ = ["moe_params", "moe_apply", "moe_apply_sharded", "moe_reference"]
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across JAX versions: new releases expose ``jax.shard_map``
+    with ``check_vma``; older ones have ``jax.experimental.shard_map`` with
+    ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def moe_params(cfg) -> Dict:
     d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
     p = {
@@ -131,11 +147,10 @@ def moe_apply_sharded(cfg, p: Dict, x: jnp.ndarray, mesh,
 
     spec_x = P(data_axes, None, None)
     spec_e = P(model_axis, None, None)
-    out = jax.shard_map(
-        block, mesh=mesh,
+    out = _shard_map(
+        block, mesh,
         in_specs=(spec_x, P(None, None), spec_e, spec_e, spec_e),
         out_specs=spec_x,
-        check_vma=False,
     )(x, p["router"], p["wi"], p["wg"], p["wo"])
     if cfg.n_shared_experts:
         out = out + _shared(cfg, p, x)
@@ -197,11 +212,10 @@ def moe_apply_sharded_a2a(cfg, p: Dict, x: jnp.ndarray, mesh,
 
     spec_x = P(data_axes, model_axis, None)
     spec_e = P(model_axis, None, None)
-    out = jax.shard_map(
-        block, mesh=mesh,
+    out = _shard_map(
+        block, mesh,
         in_specs=(spec_x, P(None, None), spec_e, spec_e, spec_e),
         out_specs=spec_x,
-        check_vma=False,
     )(x, p["router"], p["wi"], p["wg"], p["wo"])
     if cfg.n_shared_experts:
         out = out + _shared(cfg, p, x)

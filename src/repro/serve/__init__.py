@@ -1,6 +1,11 @@
-"""Serving: continuous-batching engine, sampling, prefix cache."""
+"""Serving: continuous-batching engine, sampling, prefix cache, and the
+prediction-query service with its plan-signature compile cache."""
 
 from .engine import InferenceEngine, Request, ServeConfig
+from .prediction_service import (CompiledPrediction, PredictionService,
+                                 PredictionTicket, ServiceStats)
 from .sampling import sample_token
 
-__all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token"]
+__all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
+           "PredictionService", "PredictionTicket", "CompiledPrediction",
+           "ServiceStats"]

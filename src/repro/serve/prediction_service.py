@@ -1,0 +1,440 @@
+"""Prediction-query serving layer: compile-once / serve-many (paper §5).
+
+The paper's biggest native-integration wins come from batch inference with
+model + inference-session caching inside the engine (up to 5.5x).  This
+module generalizes that idea from cached ONNX sessions to *whole optimized
+query plans*: a :class:`PredictionService` fronting the engine keyed by
+
+    (plan signature, scanned-table schemas, ExecutionConfig)
+
+so a repeated prediction query skips SQL parsing consequences, the cross
+optimizer, ``compile_plan`` *and* ``jax.jit`` re-tracing entirely — the warm
+path is a dict lookup plus one cached-executable call.  Three layers:
+
+- **plan-signature cache** — structural canonicalization in ``core.ir``
+  makes the key independent of node-id counters and attr ordering; model
+  references hash by content digest (``model_store.content_fingerprint``),
+  so re-registering a retrained model misses the cache while a byte-identical
+  re-registration hits it.  Entries are LRU-evicted beyond
+  ``max_cache_entries``.
+- **morsel (chunked) execution** — large scans split into fixed-size row
+  chunks with a tail-padding path (pad rows carry ``valid=False``), so XLA
+  compiles exactly one chunk-shaped executable regardless of table size.
+  Only row-local single-scan plans chunk; anything with joins/aggregation
+  falls back to whole-table execution.
+- **micro-batch admission** — concurrent requests sharing a plan signature
+  coalesce at ``flush()`` boundaries (the continuous-batching idiom of
+  ``serve.engine``, at query granularity): row-local plans stack their input
+  tables into one padded batch execution and split the results; requests
+  over identical catalog tables share a single execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.codegen import ExecutionConfig, compile_plan
+from ..core.ir import Plan, plan_signature
+from ..core.optimizer import (CrossOptimizer, OptimizationReport,
+                              OptimizerConfig)
+from ..core.sql_frontend import parse_query
+from ..relational.table import Schema, Table
+
+__all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
+           "CompiledPrediction"]
+
+
+# Ops whose output rows correspond 1:1 (positionally) to their input rows —
+# the precondition for both chunked execution and request stacking.  Joins,
+# aggregation, ordering, limits and unions break the correspondence; UDFs
+# are excluded conservatively (a host callback may inspect the whole batch).
+_ROW_LOCAL_OPS = frozenset({
+    "scan", "filter", "project", "rename", "map", "attach_column",
+    "featurize", "gather_features", "predict_model", "affine", "matmul_bias",
+    "sigmoid", "relu", "softmax", "argmax", "select_column", "threshold",
+    "tree_gemm", "constant_vector",
+})
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    cache_hits: int = 0
+    cache_misses: int = 0
+    evictions: int = 0
+    batch_executions: int = 0       # actual executions issued to the engine
+    coalesced_requests: int = 0     # requests served without their own execution
+    chunks_executed: int = 0
+
+
+@dataclasses.dataclass
+class CompiledPrediction:
+    """A cached, ready-to-serve query: optimized plan + jitted executable."""
+
+    key: Tuple
+    signature: str
+    plan: Plan
+    report: OptimizationReport
+    fn: Any                          # (tables dict) -> Table | array
+    scan_tables: Tuple[str, ...]
+    chunk_table: Optional[str]       # set iff the plan is row-local/chunkable
+    compile_time_s: float = 0.0
+    serves: int = 0
+
+
+class PredictionTicket:
+    """Handle for a submitted request; resolved at the next ``flush()``."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+
+    def _resolve(self, value: Any):
+        self._value = value
+        self._event.set()
+
+    def _fail(self, err: BaseException):
+        self._error = err
+        self._event.set()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("prediction not yet served; call flush()")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclasses.dataclass
+class _Pending:
+    plan: Plan
+    tables: Optional[Dict[str, Table]]
+    ticket: PredictionTicket
+
+
+# ---------------------------------------------------------------------------
+# Row plumbing: slicing, padding, stacking, splitting.
+# ---------------------------------------------------------------------------
+
+def _schema_sig(schema: Schema) -> Tuple:
+    """Order-insensitive schema identity (column order never changes what a
+    plan computes — columns are addressed by name)."""
+    return tuple(sorted((c.name, str(c.dtype), c.dictionary)
+                        for c in schema.columns))
+
+
+def _pad_table(table: Table, target: int) -> Table:
+    n = table.capacity
+    if n == target:
+        return table
+    pad = target - n
+    cols = {k: jnp.pad(v, [(0, pad)] + [(0, 0)] * (v.ndim - 1))
+            for k, v in table.columns.items()}
+    valid = jnp.pad(table.valid, (0, pad))        # False-padded
+    return Table(cols, valid, table.schema)
+
+
+def _slice_table(table: Table, start: int, size: int) -> Table:
+    end = min(start + size, table.capacity)
+    cols = {k: v[start:end] for k, v in table.columns.items()}
+    part = Table(cols, table.valid[start:end], table.schema)
+    return _pad_table(part, size)
+
+
+def _stack_tables(tables: List[Table]) -> Table:
+    base = tables[0]
+    cols = {k: jnp.concatenate([t.columns[k] for t in tables], axis=0)
+            for k in base.columns}
+    valid = jnp.concatenate([t.valid for t in tables], axis=0)
+    return Table(cols, valid, base.schema)
+
+
+def _trim_rows(out: Any, n: int) -> Any:
+    if isinstance(out, Table):
+        return Table({k: v[:n] for k, v in out.columns.items()},
+                     out.valid[:n], out.schema)
+    return out[:n]
+
+
+def _slice_rows(out: Any, start: int, end: int) -> Any:
+    if isinstance(out, Table):
+        return Table({k: v[start:end] for k, v in out.columns.items()},
+                     out.valid[start:end], out.schema)
+    return out[start:end]
+
+
+def _concat_outputs(pieces: List[Any]) -> Any:
+    if isinstance(pieces[0], Table):
+        base = pieces[0]
+        cols = {k: jnp.concatenate([p.columns[k] for p in pieces], axis=0)
+                for k in base.columns}
+        valid = jnp.concatenate([p.valid for p in pieces], axis=0)
+        return Table(cols, valid, base.schema)
+    return jnp.concatenate(pieces, axis=0)
+
+
+def _round_up(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+class PredictionService:
+    """Serves optimized prediction queries under repeated/concurrent load."""
+
+    def __init__(self, catalog,
+                 optimizer_config: Optional[OptimizerConfig] = None,
+                 execution_config: Optional[ExecutionConfig] = None,
+                 jit: bool = True,
+                 chunk_rows: int = 0,
+                 max_cache_entries: int = 64):
+        self.catalog = catalog
+        self.optimizer_config = optimizer_config or OptimizerConfig()
+        self.execution_config = execution_config or ExecutionConfig()
+        self.jit = jit
+        self.chunk_rows = int(chunk_rows)
+        self.max_cache_entries = int(max_cache_entries)
+        self.stats = ServiceStats()
+        self._cache: "Dict[Tuple, CompiledPrediction]" = {}
+        self._lru: List[Tuple] = []
+        self._queue: List[_Pending] = []
+        self._lock = threading.Lock()          # cache + queue
+        self._flush_lock = threading.Lock()    # serializes batch execution
+
+    # -- frontend -----------------------------------------------------------
+    def _to_plan(self, query: Union[str, Plan]) -> Plan:
+        if isinstance(query, Plan):
+            return query
+        return parse_query(query, self.catalog)
+
+    def _resolve_schema(self, name: str,
+                        tables: Optional[Dict[str, Table]]) -> Schema:
+        if tables and name in tables:
+            return tables[name].schema
+        return self.catalog.get_table(name).schema
+
+    def _cache_key(self, plan: Plan,
+                   tables: Optional[Dict[str, Table]]) -> Tuple[Tuple, str]:
+        sig = plan_signature(plan)
+        scans = tuple(sorted(n.attrs["table"] for n in plan.nodes.values()
+                             if n.op == "scan"))
+        schemas = tuple(_schema_sig(self._resolve_schema(t, tables))
+                        for t in scans)
+        overridden = tuple(t for t in scans if tables and t in tables)
+        # Stats-based pruning bakes catalog column stats into the optimized
+        # plan, so the key must track them: re-registering a table with new
+        # stats must miss, and caller-supplied tables (whose data the stats
+        # say nothing about) compile without stats pruning — see compile().
+        stats_fp = None
+        if self.optimizer_config.enable_stats_pruning and not overridden:
+            from ..core.model_store import content_fingerprint
+            stats_fp = content_fingerprint(tuple(
+                (t, tuple(sorted(self.catalog.get_stats(t).items())))
+                for t in scans))
+        return (sig, schemas, overridden, stats_fp,
+                self.execution_config.cache_key(), self.jit), sig
+
+    # -- compile cache -------------------------------------------------------
+    def compile(self, query: Union[str, Plan],
+                tables: Optional[Dict[str, Table]] = None,
+                _key: Optional[Tuple[Tuple, str]] = None
+                ) -> CompiledPrediction:
+        """Cache lookup; on miss, optimize + codegen + jit once.  ``_key``
+        lets flush() reuse the cache key it already computed for grouping
+        (key computation hashes the whole plan — not free on the warm
+        path)."""
+        plan = self._to_plan(query)
+        key, sig = _key if _key is not None \
+            else self._cache_key(plan, tables)
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                self._lru.remove(key)
+                self._lru.append(key)
+                return hit
+            self.stats.cache_misses += 1
+        # Compile outside the lock (it is slow); racing misses both compile,
+        # last one wins the slot — harmless and rare.
+        t0 = time.perf_counter()
+        opt_config = self.optimizer_config
+        if tables and any(n.attrs["table"] in tables
+                          for n in plan.nodes.values() if n.op == "scan"):
+            # Caller-supplied tables may violate catalog stats; stats-derived
+            # pruning would then silently mispredict.  WHERE-clause-derived
+            # pruning stays on (sound for any data).
+            opt_config = dataclasses.replace(opt_config,
+                                             enable_stats_pruning=False)
+        optimized, report = CrossOptimizer(
+            self.catalog, opt_config).optimize(plan)
+        fn = compile_plan(optimized, self.catalog, self.execution_config)
+        if self.jit:
+            fn = jax.jit(fn)
+        scans = tuple(sorted(n.attrs["table"]
+                             for n in optimized.nodes.values()
+                             if n.op == "scan"))
+        chunk_table = None
+        if len(scans) == 1 and all(n.op in _ROW_LOCAL_OPS
+                                   for n in optimized.nodes.values()):
+            chunk_table = scans[0]
+        compiled = CompiledPrediction(
+            key=key, signature=sig, plan=optimized, report=report, fn=fn,
+            scan_tables=scans, chunk_table=chunk_table,
+            compile_time_s=time.perf_counter() - t0)
+        with self._lock:
+            if key not in self._cache:
+                self._cache[key] = compiled
+                self._lru.append(key)
+                while len(self._lru) > max(self.max_cache_entries, 0):
+                    old = self._lru.pop(0)
+                    del self._cache[old]
+                    self.stats.evictions += 1
+            # max_cache_entries=0 means "no caching": the fresh compile was
+            # evicted immediately above, so fall back to it.
+            compiled = self._cache.get(key, compiled)
+        return compiled
+
+    def cache_info(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"entries": len(self._cache),
+                    "hits": self.stats.cache_hits,
+                    "misses": self.stats.cache_misses,
+                    "evictions": self.stats.evictions}
+
+    # -- execution -----------------------------------------------------------
+    def _input_tables(self, compiled: CompiledPrediction,
+                      tables: Optional[Dict[str, Table]]
+                      ) -> Dict[str, Table]:
+        tabs: Dict[str, Table] = {}
+        for name in compiled.scan_tables:
+            if tables and name in tables:
+                tabs[name] = tables[name]
+            else:
+                tabs[name] = self.catalog.get_table(name)
+        return tabs
+
+    def _execute(self, compiled: CompiledPrediction,
+                 tables: Optional[Dict[str, Table]]) -> Any:
+        tabs = self._input_tables(compiled, tables)
+        compiled.serves += 1
+        self.stats.batch_executions += 1
+        if (self.chunk_rows and compiled.chunk_table is not None
+                and tabs[compiled.chunk_table].capacity > self.chunk_rows):
+            out = self._execute_chunked(compiled, tabs)
+        else:
+            out = compiled.fn(tabs)
+        # A served result is a *ready* result: external/container plans run
+        # host callbacks under async dispatch, and letting those trail the
+        # ticket resolution deadlocks against the caller's next dispatch.
+        return jax.block_until_ready(out)
+
+    def _execute_chunked(self, compiled: CompiledPrediction,
+                         tabs: Dict[str, Table]) -> Any:
+        """Morsel execution: every chunk (tail included, via padding) has the
+        same static shape, so XLA compiles one chunk executable total."""
+        name = compiled.chunk_table
+        table = tabs[name]
+        n = table.capacity
+        pieces = []
+        for start in range(0, n, self.chunk_rows):
+            chunk = _slice_table(table, start, self.chunk_rows)
+            pieces.append(compiled.fn({**tabs, name: chunk}))
+            self.stats.chunks_executed += 1
+        return _trim_rows(_concat_outputs(pieces), n)
+
+    def run(self, query: Union[str, Plan],
+            tables: Optional[Dict[str, Table]] = None) -> Any:
+        """Synchronous serve.  Goes through the admission queue, so requests
+        issued concurrently from other threads coalesce with this one."""
+        ticket = self.submit(query, tables)
+        self.flush()
+        return ticket.result()
+
+    # -- micro-batch admission -----------------------------------------------
+    def submit(self, query: Union[str, Plan],
+               tables: Optional[Dict[str, Table]] = None) -> PredictionTicket:
+        ticket = PredictionTicket()
+        pending = _Pending(self._to_plan(query), tables, ticket)
+        with self._lock:
+            self._queue.append(pending)
+        return ticket
+
+    def flush(self) -> int:
+        """Drain the admission queue, coalescing requests that share a cache
+        key into single batched executions.  Returns #requests served."""
+        with self._flush_lock:
+            with self._lock:
+                pending, self._queue = self._queue, []
+            if not pending:
+                return 0
+            groups: Dict[Tuple, List[_Pending]] = {}
+            for p in pending:
+                try:
+                    key, _ = self._cache_key(p.plan, p.tables)
+                except Exception as err:            # e.g. unknown table
+                    p.ticket._fail(err)
+                    continue
+                groups.setdefault(key, []).append(p)
+            served = 0
+            for key, group in groups.items():
+                served += self._serve_group(key, group)
+            return served
+
+    def _serve_group(self, key: Tuple, group: List[_Pending]) -> int:
+        head = group[0]
+        try:
+            # key[0] is the plan signature (first component of _cache_key)
+            compiled = self.compile(head.plan, head.tables,
+                                    _key=(key, key[0]))
+        except Exception as err:
+            for p in group:
+                p.ticket._fail(err)
+            return 0
+        try:
+            if len(group) == 1:
+                head.ticket._resolve(self._execute(compiled, head.tables))
+            elif all(not p.tables for p in group):
+                # identical inputs (catalog tables): one execution, fanned out
+                out = self._execute(compiled, None)
+                for p in group:
+                    p.ticket._resolve(out)
+                self.stats.coalesced_requests += len(group) - 1
+            elif compiled.chunk_table is not None:
+                self._serve_stacked(compiled, group)
+            else:
+                for p in group:
+                    p.ticket._resolve(self._execute(compiled, p.tables))
+        except Exception as err:
+            for p in group:
+                if not p.ticket.done:
+                    p.ticket._fail(err)
+            return 0
+        return len(group)
+
+    def _serve_stacked(self, compiled: CompiledPrediction,
+                       group: List[_Pending]):
+        """Row-local plans: stack every request's input rows into one padded
+        execution, then split the output back by request offsets."""
+        name = compiled.chunk_table
+        inputs = [self._input_tables(compiled, p.tables)[name]
+                  for p in group]
+        sizes = [t.capacity for t in inputs]
+        stacked = _stack_tables(inputs)
+        total = stacked.capacity
+        # Pad to a shape bucket so arrival patterns don't multiply compiles.
+        bucket = self.chunk_rows if self.chunk_rows else 256
+        stacked = _pad_table(stacked, _round_up(total, bucket))
+        out = _trim_rows(self._execute(compiled, {name: stacked}), total)
+        off = 0
+        for p, size in zip(group, sizes):
+            p.ticket._resolve(_slice_rows(out, off, off + size))
+            off += size
+        self.stats.coalesced_requests += len(group) - 1

@@ -4,6 +4,9 @@ violate)."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.relational.expr import (BinOp, CaseWhen, Col, Const, UnaryOp,

@@ -4,6 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.decode_attention.ref import decode_attention_ref

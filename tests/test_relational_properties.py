@@ -6,6 +6,9 @@ plain compacting numpy semantics (SQL bags) for every operator composition.
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.relational import (Table, col, const, filter_, group_aggregate,
