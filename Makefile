@@ -1,0 +1,12 @@
+.PHONY: verify verify-tier1 bench-subplan
+
+# Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").
+verify:
+	sh scripts/verify.sh
+
+# Just the serving-layer battery (signatures, result cache, eviction).
+verify-tier1:
+	sh scripts/verify.sh -m tier1
+
+bench-subplan:
+	PYTHONPATH=src python -m benchmarks.subplan_reuse

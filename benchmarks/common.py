@@ -23,6 +23,20 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def assert_tables_bit_exact(got, want) -> None:
+    """Bit-exact table comparison for benchmark acceptance checks (the test
+    suite's twin lives in tests/conftest.py as the assert_tables_equal
+    fixture)."""
+    vg, vw = np.asarray(got.valid), np.asarray(want.valid)
+    assert (vg == vw).all(), "validity mask diverged"
+    assert set(got.columns) == set(want.columns), \
+        f"columns diverged: {set(got.columns)} vs {set(want.columns)}"
+    for k in want.columns:
+        assert (np.asarray(got.columns[k])
+                == np.asarray(want.columns[k])).all(), \
+            f"column {k} not bit-exact"
+
+
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall seconds per call (warm)."""
     for _ in range(warmup):

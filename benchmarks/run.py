@@ -22,7 +22,7 @@ def main() -> int:
 
     from . import (fig2a_projection_pushdown, fig2b_clustering,
                    fig2c_inlining, fig2d_nn_translation, fig3_integration,
-                   lossy_pushdown, plan_cache, pruning)
+                   lossy_pushdown, plan_cache, pruning, subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -41,6 +41,8 @@ def main() -> int:
             n_rows=min(n, 100_000))),
         ("plan_cache", lambda: plan_cache.run(
             n_rows=10_000 if args.quick else 50_000)),
+        ("subplan_reuse", lambda: subplan_reuse.run(
+            n_rows=20_000 if args.quick else 100_000)),
     ]
     failures = 0
     for name, job in jobs:

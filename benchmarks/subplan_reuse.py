@@ -1,0 +1,160 @@
+"""Cross-query materialized sub-plan reuse (serving layer, result-cache tier).
+
+PR 1's executable cache removes *compile* cost from repeat queries; this
+benchmark measures the next tier (ROADMAP "cross-query result reuse",
+paper §5's cached-inference-session idea pushed to sub-plan granularity):
+two *different* queries sharing a ``featurize -> predict_model`` prefix
+over the same catalog table, where the second query splices the first
+query's materialized subtree result instead of re-running inference.
+
+Reported rows:
+
+- ``subplan_reuse/first_query_cold`` — query A, cold: optimize + compile +
+  execute; its inference subtree is captured into the result cache as a
+  free by-product of execution.
+- ``subplan_reuse/second_query_cold{,_nocache}`` — query B, cold, with and
+  without the result cache: both pay B's compile, but the cached service
+  splices A's materialized subtree and skips model inference.
+- ``subplan_reuse/warm{,_nocache}`` — steady-state serve of B (executable
+  cache warm in both services): residual-only execution vs full inference.
+  The derived column carries the speedup (acceptance: >= 2x).
+
+``run()`` also asserts the correctness half of the acceptance criteria:
+bit-exact outputs vs an uncached service, result-cache bytes staying under
+budget across inserts, and ``register_model`` of the referenced model
+forcing a miss on the next request.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ModelStore
+from repro.ml import (Pipeline, PipelineMetadata, RandomForest,
+                      StandardScaler)
+from repro.serve import PredictionService
+
+from .common import (assert_tables_bit_exact, emit, hospital_store,
+                     time_fn)
+
+_FEATS = ["age", "gender", "pregnant", "rcount"]   # patient_info-resident
+# Same inference prefix (identical featurize -> predict over patient_info),
+# different query-specific cosmetics above it.
+_SQL_A = "SELECT pid, PREDICT(MODEL='risk') AS score FROM patient_info"
+_SQL_B = ("SELECT pid, age, rcount, PREDICT(MODEL='risk') AS score "
+          "FROM patient_info")
+
+
+def _make_store(n_rows: int, n_trees: int = 48) -> ModelStore:
+    store, data = hospital_store(n_rows)
+    sc = StandardScaler(_FEATS).fit(data)
+    pipe = Pipeline([sc],
+                    RandomForest(n_trees=n_trees, task="regression",
+                                 max_depth=8, min_leaf=10),
+                    PipelineMetadata(name="risk", task="regression"))
+    pipe.fit({k: data[k] for k in _FEATS}, data["length_of_stay"])
+    store.register_model("risk", pipe)
+    return store
+
+
+def bench_cross_query(n_rows: int = 100_000) -> float:
+    store = _make_store(n_rows)
+    shared = PredictionService(store)
+    nocache = PredictionService(store, enable_result_cache=False)
+
+    t0 = time.perf_counter()
+    shared.run(_SQL_A)
+    emit("subplan_reuse/first_query_cold", (time.perf_counter() - t0) * 1e6,
+         f"rows={n_rows} result_puts={shared.stats.result_puts}")
+    assert shared.stats.result_puts == 1, "query A did not populate the cache"
+
+    t0 = time.perf_counter()
+    out_b = shared.run(_SQL_B)
+    cold_cached = time.perf_counter() - t0
+    assert shared.stats.result_hits == 1, "query B did not splice"
+
+    t0 = time.perf_counter()
+    want_b = nocache.run(_SQL_B)
+    cold_nocache = time.perf_counter() - t0
+    emit("subplan_reuse/second_query_cold", cold_cached * 1e6,
+         f"spliced=1 speedup_vs_nocache={cold_nocache / cold_cached:.2f}x")
+    emit("subplan_reuse/second_query_cold_nocache", cold_nocache * 1e6, "")
+
+    assert_tables_bit_exact(out_b, want_b)          # acceptance: bit-exact splice
+
+    warm_cached = time_fn(lambda: shared.run(_SQL_B).valid)
+    warm_nocache = time_fn(lambda: nocache.run(_SQL_B).valid)
+    speedup = warm_nocache / warm_cached
+    emit("subplan_reuse/warm", warm_cached * 1e6,
+         f"speedup={speedup:.2f}x")
+    emit("subplan_reuse/warm_nocache", warm_nocache * 1e6, "")
+    assert_tables_bit_exact(shared.run(_SQL_B), nocache.run(_SQL_B))
+    return speedup
+
+
+def bench_bytes_budget(n_rows: int = 20_000) -> None:
+    """Result cache honours its bytes budget on every insert: distinct
+    prediction queries with distinct subtree signatures stream through a
+    budget sized for roughly two materialized results."""
+    store = _make_store(n_rows, n_trees=8)
+    one_result_bytes = None
+    probe = PredictionService(store)
+    probe.run(_SQL_A)
+    one_result_bytes = probe.cache_info()["result_bytes"]
+    budget = int(2.5 * one_result_bytes)
+    svc = PredictionService(store, result_cache_bytes=budget)
+    queries = [
+        _SQL_A,
+        _SQL_B,
+        "SELECT pid, age, PREDICT(MODEL='risk') AS s FROM patient_info "
+        "WHERE age > 30",
+        "SELECT pid, age, PREDICT(MODEL='risk') AS s FROM patient_info "
+        "WHERE age > 50",
+        "SELECT pid, PREDICT(MODEL='risk') AS s FROM patient_info "
+        "WHERE rcount > 2",
+    ]
+    peak = 0
+    for q in queries:
+        svc.run(q)
+        used = svc.cache_info()["result_bytes"]
+        peak = max(peak, used)
+        assert used <= budget, f"result cache {used}B over budget {budget}B"
+    emit("subplan_reuse/bytes_budget", float(peak),
+         f"budget={budget} evictions={svc.stats.result_evictions}")
+    assert svc.stats.result_evictions > 0, \
+        "workload was meant to overflow the budget"
+
+
+def bench_invalidation(n_rows: int = 20_000) -> None:
+    """register_model of the referenced model forces a miss on the next
+    request even for a byte-identical re-registration (the content digest
+    alone would *hit* — the hook must evict)."""
+    store = _make_store(n_rows, n_trees=8)
+    svc = PredictionService(store)
+    svc.run(_SQL_A)
+    svc.run(_SQL_A)
+    assert svc.stats.cache_hits == 1
+    misses_before = svc.stats.cache_misses
+    store.register_model("risk", store.get_model("risk"))   # same bytes
+    assert svc.cache_info()["entries"] == 0
+    assert svc.cache_info()["result_entries"] == 0
+    t0 = time.perf_counter()
+    svc.run(_SQL_A)
+    recompile_s = time.perf_counter() - t0
+    assert svc.stats.cache_misses == misses_before + 1, \
+        "re-registration did not force a miss"
+    emit("subplan_reuse/post_invalidation_cold", recompile_s * 1e6,
+         f"evicted={svc.stats.invalidation_evictions}")
+
+
+def run(n_rows: int = 100_000) -> None:
+    speedup = bench_cross_query(n_rows)
+    assert speedup >= 2.0, \
+        f"spliced serve only {speedup:.2f}x faster than full inference"
+    bench_bytes_budget(min(n_rows, 20_000))
+    bench_invalidation(min(n_rows, 20_000))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

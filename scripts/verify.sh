@@ -1,0 +1,8 @@
+#!/usr/bin/env sh
+# Tier-1 verification: the whole test suite, fail-fast, exactly as the
+# ROADMAP specifies.  Extra pytest args pass through (e.g.
+# `scripts/verify.sh -m tier1` for just the serving battery).
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
+    -W error::pytest.PytestUnknownMarkWarning "$@"

@@ -122,7 +122,8 @@ def _external_predict(model, task: str, proba: bool, latency_s: float):
 
 
 def compile_plan(plan: Plan, catalog,
-                 config: Optional[ExecutionConfig] = None
+                 config: Optional[ExecutionConfig] = None,
+                 capture: Optional[str] = None
                  ) -> Callable[[Dict[str, Table]], Any]:
     """Build the executable closure for ``plan``.
 
@@ -130,6 +131,16 @@ def compile_plan(plan: Plan, catalog,
     embedded as constants — they are part of the *compiled query*, which is
     exactly the paper's model+inference-session caching) and is therefore
     jit-compatible as a whole.
+
+    ``capture`` names a node whose intermediate value the caller wants
+    alongside the output: the function then returns ``(output, captured)``.
+    The serving layer uses this to materialize a sub-plan's result for its
+    cross-query result cache *during* normal execution — the first query
+    pays nothing beyond returning one extra array from the fused program.
+
+    Plans may contain ``materialized`` nodes (see
+    ``serve.prediction_service``): leaves that read a previously captured
+    value injected through the tables dict under ``attrs['slot']``.
     """
     config = config or ExecutionConfig()
     compile_stats["plans_compiled"] += 1
@@ -147,6 +158,8 @@ def compile_plan(plan: Plan, catalog,
             a = n.attrs
             if op == "scan":
                 env[nid] = tables[a["table"]]
+            elif op == "materialized":
+                env[nid] = tables[a["slot"]]
             elif op == "filter":
                 env[nid] = rel_ops.filter_(ins[0], a["predicate"])
             elif op == "project":
@@ -248,6 +261,8 @@ def compile_plan(plan: Plan, catalog,
                         lambda v: np.asarray(fn(v), out_dtype), shape, x)
             else:
                 raise ValueError(f"codegen: unknown op {op}")
+        if capture is not None:
+            return env[plan.output], env[capture]
         return env[plan.output]
 
     return run

@@ -23,7 +23,8 @@ import hashlib
 import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
-__all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature"]
+__all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature",
+           "subtree_signatures", "subtree_nodes", "is_deterministic_subtree"]
 
 
 class Category:
@@ -223,18 +224,7 @@ def canonical_form(plan: Plan) -> Tuple:
 
     if plan.output is None:
         raise ValueError("cannot canonicalize a plan with no output")
-    order: List[str] = []
-    seen: Set[str] = set()
-
-    def visit(nid: str):
-        if nid in seen:
-            return
-        seen.add(nid)
-        for dep in plan.nodes[nid].inputs:
-            visit(dep)
-        order.append(nid)
-
-    visit(plan.output)
+    order = subtree_nodes(plan, plan.output)
     pos = {nid: i for i, nid in enumerate(order)}
     entries = []
     for nid in order:
@@ -250,3 +240,67 @@ def plan_signature(plan: Plan) -> str:
     """Stable hex signature of a plan's structure + embedded model content."""
     return hashlib.sha256(
         repr(canonical_form(plan)).encode("utf-8")).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Per-subtree signatures (cross-query sub-plan reuse).
+#
+# The serving layer's result cache needs to recognize that two *different*
+# queries share a sub-plan (e.g. the same ``featurize -> predict_model``
+# prefix over the same scan).  A node's subtree signature is, by
+# construction, exactly ``plan_signature`` of the plan truncated at that
+# node, so a sub-plan materialized under one query is addressable from any
+# other plan containing a structurally identical subtree.  The expensive
+# attr canonicalization (model weights etc.) is memoized per object in
+# ``model_store._CANON_MEMO``, so the whole-plan sweep stays cheap.
+# ---------------------------------------------------------------------------
+
+def subtree_signatures(plan: Plan) -> Dict[str, str]:
+    """Signature of the sub-DAG rooted at every node reachable from the
+    output.  ``subtree_signatures(p)[p.output] == plan_signature(p)``.
+
+    O(n) truncated-plan hashes, i.e. O(n^2) node visits — fine at current
+    plan sizes (tens of nodes; model attrs, the expensive part, are
+    memoized in ``model_store._CANON_MEMO``).  If plans grow to hundreds of
+    nodes, switch to a bottom-up Merkle construction (child signatures
+    hashed into the parent) — that changes signature *values*, which is
+    safe for caches (pure identity) but must land in one PR with this
+    truncation equivalence redefined accordingly."""
+    if plan.output is None:
+        raise ValueError("cannot sign a plan with no output")
+    return {nid: plan_signature(Plan(plan.nodes, output=nid))
+            for nid in subtree_nodes(plan, plan.output)}
+
+
+def subtree_nodes(plan: Plan, root: str) -> List[str]:
+    """Node ids reachable from ``root`` (the sub-plan it denotes), in a
+    deterministic DFS post-order."""
+    order: List[str] = []
+    seen: Set[str] = set()
+
+    def visit(nid: str):
+        if nid in seen:
+            return
+        seen.add(nid)
+        for dep in plan.nodes[nid].inputs:
+            visit(dep)
+        order.append(nid)
+
+    visit(root)
+    return order
+
+
+# Ops whose output is a pure function of their inputs + attrs.  ``udf`` is
+# excluded: an opaque host callable may consult state the content
+# fingerprint cannot see (RNG, files, wall clock), so UDF subtrees are never
+# merged across invocations nor result-cached.
+_NONDETERMINISTIC_OPS = frozenset({"udf"})
+
+
+def is_deterministic_subtree(plan: Plan, root: str) -> bool:
+    """True iff every op under ``root`` is deterministic and side-effect
+    free — the precondition for merging duplicate subtrees within a plan
+    (subplan_dedup) and for materializing a subtree's result across queries
+    (the serving layer's result cache)."""
+    return all(plan.nodes[nid].op not in _NONDETERMINISTIC_OPS
+               for nid in subtree_nodes(plan, root))

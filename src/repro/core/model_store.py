@@ -221,6 +221,8 @@ class _Txn:
                 for name, pipeline in self.staged:
                     self.store._do_register(name, pipeline)
                 self.store._audit("commit", f"txn[{len(self.staged)}]", None)
+            for name, _ in self.staged:
+                self.store._notify_invalidation("model", name)
         else:
             self.store._audit("rollback", f"txn[{len(self.staged)}]", None)
         self.active = False
@@ -233,12 +235,32 @@ class ModelStore:
     def __init__(self, principal: str = "system"):
         self._models: Dict[str, List[Pipeline]] = {}
         self._tables: Dict[str, Table] = {}
+        self._table_versions: Dict[str, int] = {}
         self._stats: Dict[str, Dict[str, ColumnStats]] = {}
         self._clusters: Dict[str, Any] = {}
         self._digests: Dict[Tuple[str, int], str] = {}
         self._audit_log: List[AuditRecord] = []
+        self._invalidation_listeners: List[Any] = []
         self._lock = threading.RLock()
         self.principal = principal
+
+    # -- invalidation hooks ---------------------------------------------------
+    def add_invalidation_listener(self, fn) -> "Any":
+        """Register ``fn(kind, name)`` to fire after every ``register_model``
+        (kind='model') or ``register_table`` (kind='table').  Caches keyed by
+        artifact content use this to *free* entries that reference the
+        re-registered name — content digests already make stale entries
+        unreachable, but without eviction they still occupy slots/bytes.
+        Returns an unsubscriber."""
+        self._invalidation_listeners.append(fn)
+        return lambda: self._invalidation_listeners.remove(fn)
+
+    def _notify_invalidation(self, kind: str, name: str) -> None:
+        # Fired outside self._lock: listeners typically take their own cache
+        # locks, and holding the store lock across foreign locks invites
+        # lock-order inversions.
+        for fn in list(self._invalidation_listeners):
+            fn(kind, name)
 
     # -- audit ----------------------------------------------------------------
     def _audit(self, action: str, subject: str, version: Optional[int]):
@@ -252,7 +274,9 @@ class ModelStore:
     # -- models -----------------------------------------------------------------
     def register_model(self, name: str, pipeline: Pipeline) -> int:
         with self._lock:
-            return self._do_register(name, pipeline)
+            version = self._do_register(name, pipeline)
+        self._notify_invalidation("model", name)
+        return version
 
     def _do_register(self, name: str, pipeline: Pipeline) -> int:
         versions = self._models.setdefault(name, [])
@@ -306,6 +330,7 @@ class ModelStore:
                        max_distinct: int = 64) -> None:
         with self._lock:
             self._tables[name] = table
+            self._table_versions[name] = self._table_versions.get(name, 0) + 1
             stats: Dict[str, ColumnStats] = {}
             valid = np.asarray(table.valid)
             for cname in table.names:
@@ -319,6 +344,13 @@ class ModelStore:
                     distinct_values=tuple(float(v) for v in uniq)
                     if uniq.size <= max_distinct else None)
             self._stats[name] = stats
+        self._notify_invalidation("table", name)
+
+    def table_version(self, name: str) -> int:
+        """Monotone per-name registration counter.  Materialized-result
+        caches key on it: a sub-plan's *signature* identifies what the plan
+        computes, the table version identifies the data it read."""
+        return self._table_versions.get(name, 0)
 
     def get_table(self, name: str) -> Table:
         if name not in self._tables:

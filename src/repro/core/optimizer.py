@@ -32,7 +32,22 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ir import Plan, plan_signature
 
-__all__ = ["OptimizerConfig", "CrossOptimizer", "OptimizationReport"]
+__all__ = ["OptimizerConfig", "CrossOptimizer", "OptimizationReport",
+           "referenced_models"]
+
+
+def referenced_models(plan: Plan) -> Tuple[str, ...]:
+    """Model/pipeline names a plan references (rewrite rules preserve
+    ``model_name``/``pipeline_name`` attrs through inlining and NN
+    translation).  Cache invalidation keys on these: re-registering any of
+    them must evict entries compiled against the plan."""
+    names = set()
+    for n in plan.nodes.values():
+        for attr in ("model_name", "pipeline_name"):
+            v = n.attrs.get(attr)
+            if isinstance(v, str):
+                names.add(v)
+    return tuple(sorted(names))
 
 
 @dataclasses.dataclass
@@ -71,6 +86,10 @@ class OptimizationReport:
     # cache key half; ``plan_signature`` identifies the optimized artifact.
     input_signature: Optional[str] = None
     plan_signature: Optional[str] = None
+    # Union of model names referenced before/after rewriting (rules may
+    # replace predict_model nodes but keep the name attr; the serving layer
+    # tags cache entries with these for register_model invalidation).
+    referenced_models: Tuple[str, ...] = ()
 
     def log(self, rule: str, detail: str):
         self.entries.append((rule, detail))
@@ -99,6 +118,7 @@ class CrossOptimizer:
         report = OptimizationReport()
         if plan.output is not None:
             report.input_signature = plan_signature(plan)
+        report.referenced_models = referenced_models(plan)
         plan = plan.copy()
         passes = [
             (True, subplan_dedup.apply),
@@ -124,4 +144,6 @@ class CrossOptimizer:
                 break
         if plan.output is not None:
             report.plan_signature = plan_signature(plan)
+        report.referenced_models = tuple(sorted(
+            set(report.referenced_models) | set(referenced_models(plan))))
         return plan, report

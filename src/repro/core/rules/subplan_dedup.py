@@ -3,16 +3,26 @@ paper names multi-query optimization as future work in §1/§6).
 
 Two invocations that share work — e.g. ``PREDICT(MODEL='m')`` in the SELECT
 list and ``PREDICT_PROBA(MODEL='m')`` in the WHERE clause — each build their
-own featurize (and sometimes predict) chain.  This rule canonicalizes:
-featurize nodes with the same (input, pipeline) merge; predict nodes with
-the same (input, model object, task, proba) merge.  Downstream rules then
-optimize the shared chain once, and the generated XLA program computes the
-feature matrix a single time.
+own featurize (and sometimes predict) chain.  Merging happens in two layers:
+
+- **semantic merges** — featurize nodes whose effective input matches after
+  skipping attach_column/map nodes that add columns the featurizer never
+  reads; predict nodes with the same (input, model, task, proba).
+- **structural CSE** — any two deterministic nodes whose *subtree
+  signatures* (``ir.subtree_signatures``) coincide compute bit-identical
+  results and merge.  Signatures hash model/featurizer attrs by content
+  (``model_store.content_fingerprint``), so two distinct-but-byte-identical
+  model objects still merge — stronger than the ``id()``-keyed semantic
+  pass.  UDF subtrees are excluded (``ir.is_deterministic_subtree``).
+
+The same subtree-signature machinery identifies shared sub-plans *across*
+queries in the serving layer's materialized result cache
+(``serve.prediction_service``); this rule is the within-plan instance.
 """
 
 from __future__ import annotations
 
-from ..ir import Plan
+from ..ir import Plan, is_deterministic_subtree, subtree_signatures
 
 
 def _effective_input(plan: Plan, nid: str, needed_cols) -> str:
@@ -39,7 +49,7 @@ def _predict_key(n):
             n.attrs.get("proba"), n.attrs.get("task"), n.runtime)
 
 
-def apply(plan: Plan, catalog, cfg, report) -> bool:
+def _semantic_pass(plan: Plan, report) -> bool:
     changed = False
     again = True
     while again:
@@ -60,4 +70,39 @@ def apply(plan: Plan, catalog, cfg, report) -> bool:
                 changed = again = True
                 break
             seen[key] = n.id
+    return changed
+
+
+def _structural_cse(plan: Plan, report) -> bool:
+    """Merge any two deterministic nodes with identical subtree signatures
+    (they compute bit-identical results by construction).
+
+    One signature sweep suffices: rewiring a duplicate onto its keeper
+    never changes any other node's *structural* signature (the keeper's
+    subtree is canonically identical to the one it replaced), so every
+    duplicate group found in the initial sweep can be merged in place.
+    """
+    if plan.output is None:
+        return False
+    changed = False
+    keeper = {}
+    for nid, sig in subtree_signatures(plan).items():   # post-order
+        first = keeper.setdefault(sig, nid)
+        if first == nid:
+            continue
+        if not is_deterministic_subtree(plan, nid):
+            continue
+        plan.rewire(nid, first)
+        report.log("subplan_dedup",
+                   f"merged structurally identical "
+                   f"{plan.nodes[first].op} subtree {nid} -> {first}")
+        changed = True
+    if changed:
+        plan.prune_dead()
+    return changed
+
+
+def apply(plan: Plan, catalog, cfg, report) -> bool:
+    changed = _semantic_pass(plan, report)
+    changed |= _structural_cse(plan, report)
     return changed

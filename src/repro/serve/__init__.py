@@ -1,11 +1,15 @@
 """Serving: continuous-batching engine, sampling, prefix cache, and the
-prediction-query service with its plan-signature compile cache."""
+prediction-query service with its three-tier cache (plan-signature
+executable cache -> cross-query materialized result cache -> cost-aware
+eviction/invalidation)."""
 
+from .cache import CacheEntry, CostAwareCache, value_nbytes
 from .engine import InferenceEngine, Request, ServeConfig
 from .prediction_service import (CompiledPrediction, PredictionService,
-                                 PredictionTicket, ServiceStats)
+                                 PredictionTicket, ServiceStats, SubplanRef)
 from .sampling import sample_token
 
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
-           "ServiceStats"]
+           "ServiceStats", "SubplanRef", "CostAwareCache", "CacheEntry",
+           "value_nbytes"]

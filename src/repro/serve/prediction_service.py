@@ -3,28 +3,58 @@
 The paper's biggest native-integration wins come from batch inference with
 model + inference-session caching inside the engine (up to 5.5x).  This
 module generalizes that idea from cached ONNX sessions to *whole optimized
-query plans*: a :class:`PredictionService` fronting the engine keyed by
+query plans* and their *materialized sub-results*.  Three cache tiers, each
+feeding the next:
 
-    (plan signature, scanned-table schemas, ExecutionConfig)
+1. **executable cache** — ``(plan signature, scanned-table schemas,
+   ExecutionConfig)`` -> optimized plan + jitted executable.  Structural
+   canonicalization in ``core.ir`` makes the key independent of node-id
+   counters and attr ordering; model references hash by content digest
+   (``model_store.content_fingerprint``), so re-registering a retrained
+   model misses while a byte-identical re-registration hits.
+2. **materialized result cache** — cross-query sub-plan reuse.  Each
+   compiled plan designates its most expensive *cacheable* subtree (see
+   below); executing the plan also returns that subtree's value (a
+   ``capture`` output of the fused program — the first query pays nothing
+   beyond one extra array), which is stored under the subtree's structural
+   signature (``ir.subtree_signatures``) + the versions of the catalog
+   tables it read.  When a *different* query later compiles and one of its
+   subtrees carries a cached signature, the service **splices**: the
+   subtree is replaced by a ``materialized`` leaf and only the residual
+   plan executes — the shared ``featurize -> predict_model`` prefix is
+   never recomputed.  If the cached value was evicted meanwhile, the
+   subtree plan kept alongside the residual re-materializes it on demand.
+   A query that compiled *before* its subtree was cached upgrades on a
+   later warm hit: when a different query has since materialized the
+   subtree (result entries carry a producer tag), the entry recompiles to
+   its residual once and splices from then on — the producer itself stays
+   fused, preserving the zero-compile warm-repeat guarantee.
+3. **cost-aware eviction + invalidation** — both caches share the
+   :class:`~repro.serve.cache.CostAwareCache` policy: victim = lowest
+   ``observed cost x hit count`` under slot and bytes budgets (bytes
+   measured from cached array sizes).  A ``ModelStore`` invalidation hook
+   fires on ``register_model`` / ``register_table`` and evicts exactly the
+   entries whose plans reference the re-registered name — content digests
+   already make stale entries unreachable, the hook frees their budget.
 
-so a repeated prediction query skips SQL parsing consequences, the cross
-optimizer, ``compile_plan`` *and* ``jax.jit`` re-tracing entirely — the warm
-path is a dict lookup plus one cached-executable call.  Three layers:
+**When is result splicing legal?**  Only for subtrees that are (a)
+deterministic and side-effect free (every op pure; UDFs excluded — an
+opaque host callable may consult hidden state), (b) reading only
+*registered catalog tables*, never caller-supplied request tables (the
+cache key pins each table's registration version), and (c) bit-exact:
+the cached value is the output of the same XLA-compiled computation the
+uncached plan would run, so splicing can never change results — only skip
+recomputing them.
 
-- **plan-signature cache** — structural canonicalization in ``core.ir``
-  makes the key independent of node-id counters and attr ordering; model
-  references hash by content digest (``model_store.content_fingerprint``),
-  so re-registering a retrained model misses the cache while a byte-identical
-  re-registration hits it.  Entries are LRU-evicted beyond
-  ``max_cache_entries``.
+Execution tiers below the caches are unchanged from PR 1:
+
 - **morsel (chunked) execution** — large scans split into fixed-size row
   chunks with a tail-padding path (pad rows carry ``valid=False``), so XLA
   compiles exactly one chunk-shaped executable regardless of table size.
   Only row-local single-scan plans chunk; anything with joins/aggregation
   falls back to whole-table execution.
 - **micro-batch admission** — concurrent requests sharing a plan signature
-  coalesce at ``flush()`` boundaries (the continuous-batching idiom of
-  ``serve.engine``, at query granularity): row-local plans stack their input
+  coalesce at ``flush()`` boundaries: row-local plans stack their input
   tables into one padded batch execution and split the results; requests
   over identical catalog tables share a single execution.
 """
@@ -34,20 +64,23 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple, Union
+import weakref
+from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..core.codegen import ExecutionConfig, compile_plan
-from ..core.ir import Plan, plan_signature
+from ..core.ir import (Node, Plan, is_deterministic_subtree, plan_signature,
+                       subtree_nodes, subtree_signatures)
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
-                              OptimizerConfig)
+                              OptimizerConfig, referenced_models)
 from ..core.sql_frontend import parse_query
 from ..relational.table import Schema, Table
+from .cache import CostAwareCache, value_nbytes
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
-           "CompiledPrediction"]
+           "CompiledPrediction", "SubplanRef"]
 
 
 # Ops whose output rows correspond 1:1 (positionally) to their input rows —
@@ -61,15 +94,51 @@ _ROW_LOCAL_OPS = frozenset({
     "tree_gemm", "constant_vector",
 })
 
+# Subtrees worth materializing across queries: anything doing model
+# inference or feature construction, plus anything that leaves the process
+# (external/container runtimes pay a per-execution hop).
+_EXPENSIVE_OPS = frozenset({
+    "featurize", "predict_model", "tree_gemm", "matmul_bias",
+    "gather_features",
+})
+
 
 @dataclasses.dataclass
 class ServiceStats:
     cache_hits: int = 0
     cache_misses: int = 0
-    evictions: int = 0
+    evictions: int = 0              # executable-cache budget evictions
     batch_executions: int = 0       # actual executions issued to the engine
     coalesced_requests: int = 0     # requests served without their own execution
     chunks_executed: int = 0
+    # result-cache tier
+    result_hits: int = 0            # spliced executions served from cache
+    result_misses: int = 0          # spliced executions that re-materialized
+    result_puts: int = 0
+    result_evictions: int = 0       # result-cache budget evictions
+    spliced_executions: int = 0
+    splice_upgrades: int = 0        # capture-compiled entries re-wired to
+                                    # splice when another query materialized
+                                    # their subtree after they compiled
+    rematerializations: int = 0
+    invalidation_evictions: int = 0  # entries freed by register_* hooks
+
+
+@dataclasses.dataclass
+class SubplanRef:
+    """Identity of a materializable sub-plan inside a compiled query."""
+
+    sig: str                         # structural signature of the subtree
+    slot: str                        # tables-dict key the value is injected as
+    subtree_plan: Plan               # standalone copy (re-materialization)
+    scan_tables: Tuple[str, ...]     # catalog tables the subtree reads
+    tags: Tuple[Any, ...]            # ("model", name) / ("table", name)
+    n_nodes: int
+    _fn: Any = None                  # lazily compiled subtree executable
+
+    def describe(self) -> str:
+        root = self.subtree_plan.nodes[self.subtree_plan.output]
+        return f"{root.op}[{self.n_nodes} nodes] over {self.scan_tables}"
 
 
 @dataclasses.dataclass
@@ -78,17 +147,25 @@ class CompiledPrediction:
 
     key: Tuple
     signature: str
-    plan: Plan
+    plan: Plan                       # executed plan (residual when spliced)
     report: OptimizationReport
     fn: Any                          # (tables dict) -> Table | array
     scan_tables: Tuple[str, ...]
     chunk_table: Optional[str]       # set iff the plan is row-local/chunkable
     compile_time_s: float = 0.0
     serves: int = 0
+    model_names: Tuple[str, ...] = ()
+    capture: Optional[SubplanRef] = None   # fn returns (out, captured value)
+    splice: Optional[SubplanRef] = None    # fn reads capture via slot input
 
 
 class PredictionTicket:
-    """Handle for a submitted request; resolved at the next ``flush()``."""
+    """Handle for a submitted request; resolved at the next ``flush()``.
+
+    ``result(timeout=...)`` raises :class:`TimeoutError` on expiry — it
+    never returns ``None`` for an unserved request (a silent ``None`` is
+    indistinguishable from a legitimate null result downstream).
+    """
 
     def __init__(self):
         self._event = threading.Event()
@@ -131,7 +208,6 @@ def _schema_sig(schema: Schema) -> Tuple:
     plan computes — columns are addressed by name)."""
     return tuple(sorted((c.name, str(c.dtype), c.dictionary)
                         for c in schema.columns))
-
 
 def _pad_table(table: Table, target: int) -> Table:
     n = table.capacity
@@ -187,6 +263,40 @@ def _round_up(n: int, multiple: int) -> int:
     return ((n + multiple - 1) // multiple) * multiple
 
 
+# ---------------------------------------------------------------------------
+# Plan introspection for the result-cache tier.
+# ---------------------------------------------------------------------------
+
+def _scan_names(plan: Plan, nids=None) -> Tuple[str, ...]:
+    nodes = [plan.nodes[i] for i in nids] if nids is not None \
+        else list(plan.nodes.values())
+    return tuple(sorted({n.attrs["table"] for n in nodes if n.op == "scan"}))
+
+
+def _artifact_nbytes(plan: Plan) -> int:
+    """Bytes of array constants baked into a plan (model weights, folded
+    literals) — the dominant, measurable share of a cached executable's
+    footprint."""
+    seen: Set[int] = set()
+
+    def walk(v: Any, depth: int = 0) -> int:
+        if v is None or depth > 4 or id(v) in seen:
+            return 0
+        if hasattr(v, "nbytes"):
+            seen.add(id(v))
+            return int(v.nbytes)
+        if isinstance(v, dict):
+            return sum(walk(x, depth + 1) for x in v.values())
+        if isinstance(v, (list, tuple)):
+            return sum(walk(x, depth + 1) for x in v)
+        if hasattr(v, "__dict__"):
+            seen.add(id(v))
+            return sum(walk(x, depth + 1) for x in vars(v).values())
+        return 0
+
+    return sum(walk(n.attrs) for n in plan.nodes.values())
+
+
 class PredictionService:
     """Serves optimized prediction queries under repeated/concurrent load."""
 
@@ -195,7 +305,11 @@ class PredictionService:
                  execution_config: Optional[ExecutionConfig] = None,
                  jit: bool = True,
                  chunk_rows: int = 0,
-                 max_cache_entries: int = 64):
+                 max_cache_entries: int = 64,
+                 exec_cache_bytes: int = 0,
+                 result_cache_entries: int = 128,
+                 result_cache_bytes: int = 256 << 20,
+                 enable_result_cache: bool = True):
         self.catalog = catalog
         self.optimizer_config = optimizer_config or OptimizerConfig()
         self.execution_config = execution_config or ExecutionConfig()
@@ -203,11 +317,61 @@ class PredictionService:
         self.chunk_rows = int(chunk_rows)
         self.max_cache_entries = int(max_cache_entries)
         self.stats = ServiceStats()
-        self._cache: "Dict[Tuple, CompiledPrediction]" = {}
-        self._lru: List[Tuple] = []
+        self._exec_cache = CostAwareCache(max_entries=max_cache_entries,
+                                          max_bytes=exec_cache_bytes)
+        self._result_cache: Optional[CostAwareCache] = (
+            CostAwareCache(max_entries=result_cache_entries,
+                           max_bytes=result_cache_bytes)
+            if enable_result_cache else None)
         self._queue: List[_Pending] = []
-        self._lock = threading.Lock()          # cache + queue
+        self._lock = threading.Lock()          # stats + queue
         self._flush_lock = threading.Lock()    # serializes batch execution
+        self._unsubscribe_invalidation = None
+        if hasattr(catalog, "add_invalidation_listener"):
+            # weakref so a long-lived ModelStore does not pin every service
+            # ever constructed against it; the GC finalizer (or close())
+            # removes the hook from the store's listener list so discarded
+            # services do not accumulate dead entries there
+            unsub_cell: List[Any] = []
+
+            def _detach(_ref, cell=unsub_cell):
+                if cell:
+                    try:
+                        cell.pop()()
+                    except ValueError:
+                        pass             # already unsubscribed via close()
+
+            wself = weakref.ref(self, _detach)
+
+            def _hook(kind: str, name: str):
+                svc = wself()
+                if svc is not None:
+                    svc._on_artifact_registered(kind, name)
+
+            unsub_cell.append(catalog.add_invalidation_listener(_hook))
+            self._unsubscribe_invalidation = unsub_cell[0]
+
+    def close(self) -> None:
+        """Detach from the catalog's invalidation hook (also happens
+        automatically when the service is garbage collected)."""
+        if self._unsubscribe_invalidation is not None:
+            try:
+                self._unsubscribe_invalidation()
+            except ValueError:
+                pass
+            self._unsubscribe_invalidation = None
+
+    # -- invalidation ---------------------------------------------------------
+    def _on_artifact_registered(self, kind: str, name: str) -> None:
+        """ModelStore hook: free cache entries referencing a re-registered
+        model/table.  Content digests already guarantee the *next* lookup
+        misses; this reclaims the budget stale entries occupy."""
+        tag = (kind, name)
+        evicted = len(self._exec_cache.evict_by_tag(tag))
+        if self._result_cache is not None:
+            evicted += len(self._result_cache.evict_by_tag(tag))
+        with self._lock:
+            self.stats.invalidation_evictions += evicted
 
     # -- frontend -----------------------------------------------------------
     def _to_plan(self, query: Union[str, Plan]) -> Plan:
@@ -242,6 +406,99 @@ class PredictionService:
         return (sig, schemas, overridden, stats_fp,
                 self.execution_config.cache_key(), self.jit), sig
 
+    # -- result-cache plumbing ------------------------------------------------
+    def _table_version(self, name: str) -> int:
+        getter = getattr(self.catalog, "table_version", None)
+        return getter(name) if getter is not None else 0
+
+    def _result_key(self, ref: SubplanRef) -> Tuple:
+        """The subtree signature says *what* was computed; table versions
+        pin *which data* it was computed over; the execution config pins
+        the kernel choice (e.g. Pallas vs reference tree-GEMM need not be
+        bit-identical)."""
+        return (ref.sig,
+                tuple((t, self._table_version(t)) for t in ref.scan_tables),
+                self.execution_config.cache_key(), self.jit)
+
+    def _subplan_ref(self, plan: Plan, nid: str, sig: str) -> SubplanRef:
+        nids = subtree_nodes(plan, nid)
+        sub = Plan({i: plan.nodes[i].copy() for i in nids}, output=nid)
+        scans = _scan_names(plan, nids)
+        tags = tuple(("model", m) for m in referenced_models(sub)) \
+            + tuple(("table", t) for t in scans)
+        return SubplanRef(sig=sig, slot=f"__subplan__{sig[:16]}",
+                          subtree_plan=sub, scan_tables=scans, tags=tags,
+                          n_nodes=len(nids))
+
+    def _subplan_candidates(self, plan: Plan,
+                            overridden: Tuple[str, ...]
+                            ) -> List[Tuple[str, int]]:
+        """Materializable subtree roots, largest first: deterministic,
+        containing at least one expensive (inference/featurization or
+        off-process) op, and reading only non-overridden catalog tables."""
+        if plan.output is None or self._result_cache is None:
+            return []
+        out: List[Tuple[str, int]] = []
+        for nid in subtree_nodes(plan, plan.output):
+            nids = subtree_nodes(plan, nid)
+            if len(nids) < 2:
+                continue
+            nodes = [plan.nodes[i] for i in nids]
+            if not any(n.op in _EXPENSIVE_OPS or n.runtime != "native"
+                       for n in nodes):
+                continue
+            scans = _scan_names(plan, nids)
+            if any(t in overridden for t in scans):
+                continue
+            if not is_deterministic_subtree(plan, nid):
+                continue
+            out.append((nid, len(nids)))
+        out.sort(key=lambda pair: -pair[1])
+        return out
+
+    def _store_result(self, ref: SubplanRef, value: Any, cost_s: float,
+                      producer: Any) -> None:
+        """``producer`` identifies who materialized the value (the exec-cache
+        key of the capturing query, or a rematerialization marker): a
+        capture-compiled entry on its warm hit path upgrades to splicing
+        only when *someone else* produced the value — upgrading onto its own
+        capture would trade the zero-compile warm guarantee for nothing.
+
+        ``cost_s`` from the capture path is the *whole query's* execution
+        time — an upper-bound proxy for the subtree (the fused program does
+        not time ops individually).  While the entry stays resident the
+        proxy stands (the early return below skips re-puts to avoid bytes
+        churn on every warm capture run); once the entry cycles through
+        eviction, the rematerialization that repopulates it times the
+        subtree alone and inserts the tight value."""
+        if self._result_cache is None:
+            return
+        rkey = self._result_key(ref)
+        if rkey in self._result_cache:
+            return                       # identical by construction
+        evicted = self._result_cache.put(
+            rkey, value, cost_s=cost_s,
+            tags=ref.tags + (("producer", producer),))
+        with self._lock:
+            self.stats.result_puts += 1
+            self.stats.result_evictions += len(evicted)
+
+    def _materialize(self, ref: SubplanRef) -> Any:
+        """Execute the subtree plan standalone (result-cache miss after
+        eviction/invalidation) and repopulate the cache."""
+        if ref._fn is None:
+            fn = compile_plan(ref.subtree_plan, self.catalog,
+                              self.execution_config)
+            ref._fn = jax.jit(fn) if self.jit else fn
+        tabs = {t: self.catalog.get_table(t) for t in ref.scan_tables}
+        t0 = time.perf_counter()
+        value = jax.block_until_ready(ref._fn(tabs))
+        self._store_result(ref, value, time.perf_counter() - t0,
+                           producer=("rematerialized", ref.sig))
+        with self._lock:
+            self.stats.rematerializations += 1
+        return value
+
     # -- compile cache -------------------------------------------------------
     def compile(self, query: Union[str, Plan],
                 tables: Optional[Dict[str, Table]] = None,
@@ -254,15 +511,15 @@ class PredictionService:
         plan = self._to_plan(query)
         key, sig = _key if _key is not None \
             else self._cache_key(plan, tables)
-        with self._lock:
-            hit = self._cache.get(key)
-            if hit is not None:
+        hit = self._exec_cache.get(key)
+        if hit is not None:
+            with self._lock:
                 self.stats.cache_hits += 1
-                self._lru.remove(key)
-                self._lru.append(key)
-                return hit
+            upgraded = self._maybe_upgrade_to_splice(key, hit)
+            return upgraded if upgraded is not None else hit
+        with self._lock:
             self.stats.cache_misses += 1
-        # Compile outside the lock (it is slow); racing misses both compile,
+        # Compile outside any lock (it is slow); racing misses both compile,
         # last one wins the slot — harmless and rare.
         t0 = time.perf_counter()
         opt_config = self.optimizer_config
@@ -275,39 +532,144 @@ class PredictionService:
                                              enable_stats_pruning=False)
         optimized, report = CrossOptimizer(
             self.catalog, opt_config).optimize(plan)
-        fn = compile_plan(optimized, self.catalog, self.execution_config)
+        model_names = report.referenced_models
+        full_scans = _scan_names(optimized)
+        overridden = key[2]
+
+        # -- result-cache tier: splice a cached subtree, or mark one for
+        #    capture so this query populates the cache for later ones.
+        capture_ref: Optional[SubplanRef] = None
+        splice_ref: Optional[SubplanRef] = None
+        exec_plan = optimized
+        candidates = self._subplan_candidates(optimized, overridden)
+        if candidates:
+            sigs = subtree_signatures(optimized)
+            for nid, _ in candidates:          # largest shared subtree wins
+                ref = self._subplan_ref(optimized, nid, sigs[nid])
+                if self._result_key(ref) in self._result_cache:
+                    splice_ref = ref
+                    exec_plan = self._residual_plan(optimized, nid, ref)
+                    report.log("result_cache",
+                               f"spliced cached subtree {ref.describe()}")
+                    break
+            if splice_ref is None:
+                # Prefer a proper subtree over the whole plan, and a root
+                # below the alias-bearing cosmetics: rename/project nodes
+                # embed output aliases in their attrs, so capturing above
+                # them would make `... AS score` and `... AS s` miss each
+                # other even though their inference prefixes are identical.
+                # Fall back progressively when the query *is* the chain.
+                proper = [c for c in candidates if c[0] != optimized.output]
+                aliased = ("rename", "project")
+                alias_free = [c for c in proper
+                              if optimized.nodes[c[0]].op not in aliased]
+                pick = (alias_free or proper or candidates)[0]
+                capture_ref = self._subplan_ref(optimized, pick[0],
+                                                sigs[pick[0]])
+                report.log("result_cache",
+                           f"capturing subtree {capture_ref.describe()}")
+
+        fn = compile_plan(exec_plan, self.catalog, self.execution_config,
+                          capture=capture_ref.subtree_plan.output
+                          if capture_ref is not None else None)
         if self.jit:
             fn = jax.jit(fn)
-        scans = tuple(sorted(n.attrs["table"]
-                             for n in optimized.nodes.values()
-                             if n.op == "scan"))
+        scans = _scan_names(exec_plan)
         chunk_table = None
         if len(scans) == 1 and all(n.op in _ROW_LOCAL_OPS
-                                   for n in optimized.nodes.values()):
+                                   for n in exec_plan.nodes.values()):
             chunk_table = scans[0]
+        compile_time = time.perf_counter() - t0
         compiled = CompiledPrediction(
-            key=key, signature=sig, plan=optimized, report=report, fn=fn,
+            key=key, signature=sig, plan=exec_plan, report=report, fn=fn,
             scan_tables=scans, chunk_table=chunk_table,
-            compile_time_s=time.perf_counter() - t0)
+            compile_time_s=compile_time, model_names=model_names,
+            capture=capture_ref, splice=splice_ref)
+        tags = tuple(("model", m) for m in model_names) \
+            + tuple(("table", t) for t in full_scans)
+        evicted = self._exec_cache.put(
+            key, compiled, cost_s=compile_time,
+            nbytes=_artifact_nbytes(optimized), tags=tags)
         with self._lock:
-            if key not in self._cache:
-                self._cache[key] = compiled
-                self._lru.append(key)
-                while len(self._lru) > max(self.max_cache_entries, 0):
-                    old = self._lru.pop(0)
-                    del self._cache[old]
-                    self.stats.evictions += 1
-            # max_cache_entries=0 means "no caching": the fresh compile was
-            # evicted immediately above, so fall back to it.
-            compiled = self._cache.get(key, compiled)
+            self.stats.evictions += len(evicted)
+        entry = self._exec_cache.entry(key)
+        # max_cache_entries=0 means "no caching": the fresh compile was
+        # evicted immediately above, so fall back to it.
+        return entry.value if entry is not None else compiled
+
+    def _maybe_upgrade_to_splice(self, key: Tuple, hit: CompiledPrediction
+                                 ) -> Optional[CompiledPrediction]:
+        """Warm-hit path: a capture-compiled entry whose subtree was since
+        materialized by a *different* query recompiles to its residual once,
+        so it too stops paying for inference.  Entries whose cached value
+        they produced themselves stay fused (keeps the zero-compile warm
+        guarantee for the producer)."""
+        if hit.capture is None or self._result_cache is None:
+            return None
+        ref = hit.capture
+        entry = self._result_cache.entry(self._result_key(ref))
+        if entry is None or ("producer", key) in entry.tags:
+            return None
+        t0 = time.perf_counter()
+        residual = self._residual_plan(hit.plan, ref.subtree_plan.output, ref)
+        fn = compile_plan(residual, self.catalog, self.execution_config)
+        if self.jit:
+            fn = jax.jit(fn)
+        hit.report.log("result_cache",
+                       f"upgraded to spliced {ref.describe()}")
+        compiled = CompiledPrediction(
+            key=key, signature=hit.signature, plan=residual,
+            report=hit.report, fn=fn, scan_tables=_scan_names(residual),
+            chunk_table=None,
+            compile_time_s=hit.compile_time_s + time.perf_counter() - t0,
+            model_names=hit.model_names, capture=None, splice=ref)
+        # The entry may have vanished between get() and here (concurrent
+        # invalidation/eviction); rebuild tags + bytes from the hit rather
+        # than re-inserting an untagged, unbudgeted executable.
+        old = self._exec_cache.entry(key)
+        tags = old.tags if old is not None else (
+            tuple(("model", m) for m in hit.model_names)
+            + tuple(("table", t) for t in _scan_names(hit.plan)))
+        nbytes = old.nbytes if old is not None \
+            else _artifact_nbytes(hit.plan)
+        evicted = self._exec_cache.put(
+            key, compiled, cost_s=compiled.compile_time_s,
+            nbytes=nbytes, tags=tags)
+        with self._lock:
+            self.stats.splice_upgrades += 1
+            self.stats.evictions += len(evicted)
         return compiled
+
+    def _residual_plan(self, plan: Plan, nid: str, ref: SubplanRef) -> Plan:
+        """Replace the subtree rooted at ``nid`` with a ``materialized``
+        leaf reading the cached value from ``ref.slot``."""
+        root = plan.nodes[nid]
+        residual = plan.copy()
+        leaf = Node(op="materialized", category=root.category, inputs=[],
+                    attrs={"slot": ref.slot, "sig": ref.sig},
+                    out_kind=root.out_kind)
+        residual.replace(nid, leaf)
+        residual.prune_dead()
+        return residual
 
     def cache_info(self) -> Dict[str, Any]:
         with self._lock:
-            return {"entries": len(self._cache),
+            info = {"entries": len(self._exec_cache),
+                    "bytes": self._exec_cache.bytes_in_use,
                     "hits": self.stats.cache_hits,
                     "misses": self.stats.cache_misses,
-                    "evictions": self.stats.evictions}
+                    "evictions": self.stats.evictions,
+                    "invalidation_evictions":
+                        self.stats.invalidation_evictions}
+            if self._result_cache is not None:
+                info.update({
+                    "result_entries": len(self._result_cache),
+                    "result_bytes": self._result_cache.bytes_in_use,
+                    "result_hits": self.stats.result_hits,
+                    "result_misses": self.stats.result_misses,
+                    "result_evictions": self.stats.result_evictions,
+                })
+            return info
 
     # -- execution -----------------------------------------------------------
     def _input_tables(self, compiled: CompiledPrediction,
@@ -322,32 +684,80 @@ class PredictionService:
         return tabs
 
     def _execute(self, compiled: CompiledPrediction,
-                 tables: Optional[Dict[str, Table]]) -> Any:
+                 tables: Optional[Dict[str, Table]],
+                 store_capture: bool = True) -> Any:
+        """``store_capture=False`` executes a capture-compiled plan without
+        populating the result cache — used when the inputs are not the
+        catalog tables the cache key would claim (stacked micro-batches)."""
         tabs = self._input_tables(compiled, tables)
         compiled.serves += 1
-        self.stats.batch_executions += 1
-        if (self.chunk_rows and compiled.chunk_table is not None
+        with self._lock:
+            self.stats.batch_executions += 1
+        if compiled.splice is not None:
+            out = self._execute_spliced(compiled, tabs)
+        elif (self.chunk_rows and compiled.chunk_table is not None
                 and tabs[compiled.chunk_table].capacity > self.chunk_rows):
-            out = self._execute_chunked(compiled, tabs)
+            out = self._execute_chunked(compiled, tabs, store_capture)
         else:
-            out = compiled.fn(tabs)
+            t0 = time.perf_counter()
+            raw = compiled.fn(tabs)
+            raw = jax.block_until_ready(raw)
+            if compiled.capture is not None:
+                out, captured = raw
+                if store_capture:
+                    self._store_result(compiled.capture, captured,
+                                       time.perf_counter() - t0,
+                                       producer=compiled.key)
+            else:
+                out = raw
         # A served result is a *ready* result: external/container plans run
         # host callbacks under async dispatch, and letting those trail the
         # ticket resolution deadlocks against the caller's next dispatch.
         return jax.block_until_ready(out)
 
-    def _execute_chunked(self, compiled: CompiledPrediction,
+    def _execute_spliced(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table]) -> Any:
+        ref = compiled.splice
+        value = self._result_cache.get(self._result_key(ref)) \
+            if self._result_cache is not None else None
+        with self._lock:
+            self.stats.spliced_executions += 1
+            if value is None:
+                self.stats.result_misses += 1
+            else:
+                self.stats.result_hits += 1
+        if value is None:       # evicted since compile: rebuild, repopulate
+            value = self._materialize(ref)
+        return compiled.fn({**tabs, ref.slot: value})
+
+    def _execute_chunked(self, compiled: CompiledPrediction,
+                         tabs: Dict[str, Table],
+                         store_capture: bool = True) -> Any:
         """Morsel execution: every chunk (tail included, via padding) has the
         same static shape, so XLA compiles one chunk executable total."""
         name = compiled.chunk_table
         table = tabs[name]
         n = table.capacity
-        pieces = []
+        pieces, captured = [], []
+        t0 = time.perf_counter()
         for start in range(0, n, self.chunk_rows):
             chunk = _slice_table(table, start, self.chunk_rows)
-            pieces.append(compiled.fn({**tabs, name: chunk}))
-            self.stats.chunks_executed += 1
+            raw = compiled.fn({**tabs, name: chunk})
+            if compiled.capture is not None:
+                pieces.append(raw[0])
+                captured.append(raw[1])
+            else:
+                pieces.append(raw)
+            with self._lock:
+                self.stats.chunks_executed += 1
+        if compiled.capture is not None and captured and store_capture:
+            # chunk_table plans are row-local end to end, so chunked capture
+            # concatenates to exactly the whole-table subtree value
+            cap = jax.block_until_ready(
+                _trim_rows(_concat_outputs(captured), n))
+            self._store_result(compiled.capture, cap,
+                               time.perf_counter() - t0,
+                               producer=compiled.key)
         return _trim_rows(_concat_outputs(pieces), n)
 
     def run(self, query: Union[str, Plan],
@@ -406,7 +816,8 @@ class PredictionService:
                 out = self._execute(compiled, None)
                 for p in group:
                     p.ticket._resolve(out)
-                self.stats.coalesced_requests += len(group) - 1
+                with self._lock:
+                    self.stats.coalesced_requests += len(group) - 1
             elif compiled.chunk_table is not None:
                 self._serve_stacked(compiled, group)
             else:
@@ -432,9 +843,12 @@ class PredictionService:
         # Pad to a shape bucket so arrival patterns don't multiply compiles.
         bucket = self.chunk_rows if self.chunk_rows else 256
         stacked = _pad_table(stacked, _round_up(total, bucket))
-        out = _trim_rows(self._execute(compiled, {name: stacked}), total)
+        out = _trim_rows(
+            self._execute(compiled, {name: stacked}, store_capture=False),
+            total)
         off = 0
         for p, size in zip(group, sizes):
             p.ticket._resolve(_slice_rows(out, off, off + size))
             off += size
-        self.stats.coalesced_requests += len(group) - 1
+        with self._lock:
+            self.stats.coalesced_requests += len(group) - 1

@@ -6,6 +6,21 @@ import pytest
 
 
 @pytest.fixture(scope="session")
+def assert_tables_equal():
+    """Bit-exact table comparison shared by the serving-layer tests."""
+
+    def check(a, b):
+        assert (np.asarray(a.valid) == np.asarray(b.valid)).all()
+        assert set(a.columns) == set(b.columns)
+        for k in a.columns:
+            assert (np.asarray(a.columns[k])
+                    == np.asarray(b.columns[k])).all(), \
+                f"column {k} diverged"
+
+    return check
+
+
+@pytest.fixture(scope="session")
 def hospital():
     from repro.core import ModelStore
     from repro.data import hospital_tables

@@ -12,6 +12,7 @@ Key guarantees under test:
 """
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -264,6 +265,7 @@ def test_optimizer_report_carries_signatures(store):
     _, report = CrossOptimizer(store).optimize(plan)
     assert report.input_signature == plan_signature(plan)
     assert report.plan_signature is not None
+    assert report.referenced_models == ("los_pi",)
 
 
 # ---------------------------------------------------------------------------
@@ -379,3 +381,69 @@ def test_failed_request_reports_error(store):
     service.flush()
     with pytest.raises(KeyError):
         ticket.result()
+
+
+def test_ticket_result_timeout_raises(store):
+    """Regression: an unserved ticket must raise TimeoutError on expiry,
+    never silently return None (indistinguishable from a null result)."""
+    service = PredictionService(store)
+    ticket = service.submit(SQL)          # queued, deliberately not flushed
+    t0 = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        ticket.result(timeout=0.05)
+    assert time.perf_counter() - t0 < 5.0
+    assert not ticket.done
+    service.flush()                       # same ticket still serveable after
+    out = ticket.result(timeout=30.0)
+    assert np.asarray(out.valid).any()
+
+
+def test_concurrent_submit_flush_stress(store):
+    """N threads submitting and flushing against one service: no deadlock,
+    every ticket resolves, and the stats ledger balances —
+    hits + misses == compile-cache lookups == executions issued, and
+    executions + coalesced == requests served."""
+    service = PredictionService(store)
+    queries = [
+        SQL,
+        "SELECT pid, age, PREDICT(MODEL='los_pi') AS los "
+        "FROM patient_info WHERE age > 45",
+        "SELECT pid, PREDICT(MODEL='los_pi') AS los FROM patient_info",
+    ]
+    n_threads, per_thread = 8, 6
+    before_compiles = codegen.compile_stats["plans_compiled"]
+    results, errors = {}, []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=30)
+            for i in range(per_thread):
+                ticket = service.submit(queries[(tid + i) % len(queries)])
+                service.flush()
+                results[(tid, i)] = ticket.result(timeout=60.0)
+        except Exception as e:            # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "worker deadlocked"
+    assert not errors
+    assert len(results) == n_threads * per_thread
+    for out in results.values():
+        assert np.asarray(out.valid).any()
+
+    s = service.stats
+    # every group serve performs exactly one cache lookup and one execution
+    assert s.cache_hits + s.cache_misses == s.batch_executions
+    assert s.batch_executions + s.coalesced_requests \
+        == n_threads * per_thread
+    # every plan compile is accounted for: one per miss, plus any splice
+    # upgrades / rematerializations (none expected for disjoint prefixes)
+    assert codegen.compile_stats["plans_compiled"] - before_compiles \
+        == s.cache_misses + s.splice_upgrades + s.rematerializations
+    assert s.rematerializations == 0

@@ -1,0 +1,172 @@
+"""Property-based serving-layer battery (hypothesis).
+
+Three guarantees the serving layer leans on, tested as *properties* rather
+than single examples:
+
+(a) ``plan_signature`` is a pure function of plan *structure + content*:
+    invariant under node-id renumbering and attr-dict insertion order,
+    sensitive to model-content (weight) changes;
+(b) chunked/morsel execution is bit-exact vs whole-table execution for any
+    row count — empty tables, exact chunk multiples, single-row tails;
+(c) stacked micro-batch execution equals per-request sequential execution
+    for randomized same-signature request groups.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import ModelStore
+from repro.core.ir import Category, Node, Plan, plan_signature
+from repro.core.model_store import content_fingerprint
+from repro.data import hospital_tables
+from repro.ml import DecisionTree, Pipeline, PipelineMetadata, StandardScaler
+from repro.relational.expr import col
+from repro.relational.table import Table
+from repro.serve import PredictionService
+
+pytestmark = pytest.mark.tier1
+
+N_ROWS = 600
+FEATS = ["age", "gender", "pregnant", "rcount"]
+SQL = "SELECT pid, PREDICT(MODEL='m') AS p FROM patient_info WHERE age > 30"
+
+
+@pytest.fixture(scope="module")
+def base():
+    full = hospital_tables(N_ROWS, seed=7)["patient_info"]
+    data = {c: np.asarray(full.column(c)) for c in full.names}
+    sc = StandardScaler(FEATS).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression", max_depth=5),
+                    PipelineMetadata(name="m", task="regression"))
+    pipe.fit({k: data[k] for k in FEATS}, data["length_of_stay"])
+    return full, pipe
+
+
+def _sub_table(full: Table, lo: int, n: int) -> Table:
+    return Table({k: v[lo:lo + n] for k, v in full.columns.items()},
+                 full.valid[lo:lo + n], full.schema)
+
+
+# ---------------------------------------------------------------------------
+# (a) plan-signature properties
+# ---------------------------------------------------------------------------
+
+class _Model:
+    """Minimal model-like artifact: content is one weight array."""
+
+    def __init__(self, w):
+        self.w = np.asarray(w, np.float32)
+
+
+def _build_plan(ids, attr_order, threshold, weights) -> Plan:
+    """The same logical plan under caller-chosen node ids and attr-dict
+    insertion orders."""
+    plan = Plan()
+    scan = plan.add(Node("scan", Category.RA, [],
+                         {"table": "patient_info"}, "table", id=ids[0]))
+    filt = plan.add(Node("filter", Category.RA, [scan],
+                         {"predicate": col("age") > threshold}, "table",
+                         id=ids[1]))
+    attrs = {"model": _Model(weights), "task": "regression", "proba": False}
+    if attr_order:
+        attrs = dict(reversed(list(attrs.items())))
+    pred = plan.add(Node("predict_model", Category.MLD, [filt], attrs,
+                         "vector", id=ids[2]))
+    plan.output = pred
+    return plan
+
+
+@settings(max_examples=25, deadline=None)
+@given(alias=st.text(alphabet="abcxyz", min_size=1, max_size=6),
+       offset=st.integers(0, 1000),
+       reorder=st.booleans(),
+       threshold=st.integers(-5, 90),
+       w=st.lists(st.integers(-100, 100), min_size=1, max_size=4))
+def test_signature_invariant_to_ids_and_attr_order(alias, offset, reorder,
+                                                   threshold, w):
+    ids_a = [f"{alias}_{i}" for i in range(3)]
+    ids_b = [f"zz_{alias}_{i + offset}" for i in range(3)]
+    p1 = _build_plan(ids_a, False, threshold, w)
+    p2 = _build_plan(ids_b, reorder, threshold, w)
+    assert plan_signature(p1) == plan_signature(p2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(threshold=st.integers(-5, 90),
+       w=st.lists(st.integers(-100, 100), min_size=1, max_size=4),
+       idx=st.integers(0, 3), delta=st.integers(1, 7))
+def test_signature_sensitive_to_model_content(threshold, w, idx, delta):
+    p1 = _build_plan(["a", "b", "c"], False, threshold, w)
+    w2 = list(w)
+    w2[idx % len(w2)] += delta          # guaranteed content change
+    p2 = _build_plan(["a", "b", "c"], False, threshold, w2)
+    assert plan_signature(p1) != plan_signature(p2)
+    assert content_fingerprint(_Model(w)) != content_fingerprint(_Model(w2))
+
+
+# ---------------------------------------------------------------------------
+# (b) chunked == whole-table, bit-exact, any row count
+# ---------------------------------------------------------------------------
+
+CHUNK = 16
+
+
+def _chunk_pair(full, pipe, n):
+    store = ModelStore()
+    store.register_table("patient_info", _sub_table(full, 0, n))
+    store.register_model("m", pipe)
+    whole = PredictionService(store, jit=False)
+    chunked = PredictionService(store, jit=False, chunk_rows=CHUNK)
+    return whole.run(SQL), chunked.run(SQL), chunked
+
+
+@pytest.mark.parametrize("n", [0, 1, CHUNK - 1, CHUNK, CHUNK + 1,
+                               3 * CHUNK, 3 * CHUNK + 1])
+def test_chunked_bit_exact_named_edges(base, assert_tables_equal, n):
+    """Empty table, single row, exact chunk multiples, single-row tails."""
+    full, pipe = base
+    o1, o2, chunked = _chunk_pair(full, pipe, n)
+    assert_tables_equal(o1, o2)
+    expected_chunks = 0 if n <= CHUNK else -(-n // CHUNK)
+    assert chunked.stats.chunks_executed == expected_chunks
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(0, 6 * CHUNK + 1))
+def test_chunked_bit_exact_random_row_counts(base, assert_tables_equal, n):
+    full, pipe = base
+    o1, o2, _ = _chunk_pair(full, pipe, n)
+    assert_tables_equal(o1, o2)
+
+
+# ---------------------------------------------------------------------------
+# (c) stacked micro-batch == sequential per-request execution
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stack_service(base):
+    full, pipe = base
+    store = ModelStore()
+    store.register_table("patient_info", full)
+    store.register_model("m", pipe)
+    return PredictionService(store, jit=False), full
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(spans=st.lists(st.tuples(st.integers(0, N_ROWS - 60),
+                                st.integers(1, 60)),
+                      min_size=1, max_size=5))
+def test_stacked_equals_sequential(stack_service, assert_tables_equal, spans):
+    service, full = stack_service
+    tables = [{"patient_info": _sub_table(full, lo, n)} for lo, n in spans]
+    tickets = [service.submit(SQL, t) for t in tables]
+    assert service.flush() == len(tickets)
+    stacked = [t.result() for t in tickets]
+    sequential = [service.run(SQL, t) for t in tables]
+    for got, want in zip(stacked, sequential):
+        assert_tables_equal(got, want)
