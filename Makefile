@@ -1,12 +1,18 @@
-.PHONY: verify verify-tier1 bench-subplan
+.PHONY: verify verify-tier1 bench-subplan bench-batching
 
-# Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").
+# Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").  verify.sh
+# exports REPRO_TEST_TIMEOUT so the threaded admission-loop tests fail
+# fast (all-thread tracebacks) instead of hanging the gate.
 verify:
 	sh scripts/verify.sh
 
-# Just the serving-layer battery (signatures, result cache, eviction).
+# Just the serving-layer battery (signatures, result cache, eviction,
+# continuous batching).
 verify-tier1:
 	sh scripts/verify.sh -m tier1
 
 bench-subplan:
 	PYTHONPATH=src python -m benchmarks.subplan_reuse
+
+bench-batching:
+	PYTHONPATH=src python -m benchmarks.continuous_batching

@@ -1,0 +1,203 @@
+"""Continuous batching vs sequential serving under concurrent load.
+
+The paper's §5 lesson — batch inference beats tuple-at-a-time, and the
+win grows with any per-invocation fixed cost — applied at *request*
+granularity with nobody calling ``flush()``: a background admission loop
+coalesces in-flight same-signature requests within a latency budget and
+executes them as one stacked, power-of-two-padded batch on a cached
+shape-bucketed executable.
+
+Reported rows (``concurrency=8``):
+
+- ``continuous_batching/sequential`` — one worker serving every request
+  back to back (each pays the full per-execution cost; for the external
+  runtime that includes the out-of-process hop).
+- ``continuous_batching/continuous`` — 8 threads submitting the same
+  requests against a live admission loop; derived column carries the
+  throughput speedup (acceptance: >= 2x), the coalesce rate, and the p95
+  queue latency (bounded by ~budget + one batch execution).
+- ``continuous_batching/native_*`` — same comparison on the fused
+  in-process path, where only dispatch overhead amortizes.
+
+Acceptance (asserted in ``run()``): >= 2x throughput at concurrency 8 on
+the external path, bit-exact outputs vs sequential, and executable-cache
+compiles bounded by the pow-2 bucket count (O(log max_batch)), with
+signature misses and shape compiles reported separately.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ExecutionConfig, ModelStore, OptimizerConfig
+from repro.ml import (LogisticRegression, Pipeline, PipelineMetadata,
+                      StandardScaler)
+from repro.relational.table import Table
+from repro.serve import AdmissionConfig, PredictionService
+
+from .common import assert_tables_bit_exact, emit, hospital_store
+
+_SQL = ("SELECT pid, PREDICT(MODEL='los_pi') AS los "
+        "FROM patient_info WHERE age > 30")
+_FEATS = ["age", "gender", "pregnant", "rcount"]
+# request sizes cycle through several pow-2 buckets (16..256)
+_REQUEST_ROWS = [16, 40, 100, 150]
+
+
+def _make_store(n_rows: int, external: bool) -> ModelStore:
+    store, data = hospital_store(n_rows)
+    sc = StandardScaler(_FEATS).fit(data)
+    flavor = "external" if external else "native"
+    pipe = Pipeline([sc], LogisticRegression(steps=50),
+                    PipelineMetadata(name="los_pi", task="classification",
+                                     flavor=flavor))
+    pipe.fit({k: data[k] for k in _FEATS},
+             (data["length_of_stay"] > 7).astype(np.int32))
+    store.register_model("los_pi", pipe)
+    return store
+
+
+def _requests(store: ModelStore, n: int) -> List[Dict[str, Table]]:
+    pi = store.get_table("patient_info")
+    out = []
+    for i in range(n):
+        rows = _REQUEST_ROWS[i % len(_REQUEST_ROWS)]
+        lo = (i * 37) % (pi.capacity - rows)
+        out.append({"patient_info": Table(
+            {c: v[lo:lo + rows] for c, v in pi.columns.items()},
+            pi.valid[lo:lo + rows], pi.schema)})
+    return out
+
+
+def _service(store: ModelStore, external: bool,
+             admission: AdmissionConfig = None) -> PredictionService:
+    opt = OptimizerConfig(enable_model_inlining=not external,
+                          enable_nn_translation=not external)
+    return PredictionService(
+        store, optimizer_config=opt,
+        execution_config=ExecutionConfig(external_latency_s=2e-3),
+        admission=admission)
+
+
+def _run_sequential(svc: PredictionService,
+                    reqs: List[Dict[str, Table]]) -> List:
+    return [svc.run(_SQL, r) for r in reqs]
+
+
+def _run_concurrent(svc: PredictionService, reqs: List[Dict[str, Table]],
+                    concurrency: int) -> List:
+    results: List = [None] * len(reqs)
+    barrier = threading.Barrier(concurrency)
+
+    def worker(wid: int):
+        barrier.wait(timeout=60)
+        for i in range(wid, len(reqs), concurrency):
+            ticket = svc.submit(_SQL, reqs[i])
+            results[i] = ticket.result(timeout=120)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "benchmark worker wedged"
+    return results
+
+
+def _warm_buckets(svc: PredictionService, store: ModelStore,
+                  max_total: int) -> None:
+    """Trace every pow-2 bucket a stacked batch could land in, one
+    single-request execution per bucket.  Coalesced group totals depend on
+    nondeterministic arrival timing, so a plain warm sweep can leave a
+    bucket cold and let a ~100ms trace fall inside the timed window —
+    flaking the speedup assertion on a non-regression."""
+    pi = store.get_table("patient_info")
+    b = 16
+    while True:
+        n = min(b, pi.capacity)
+        svc.run(_SQL, {"patient_info": Table(
+            {c: v[:n] for c, v in pi.columns.items()},
+            pi.valid[:n], pi.schema)})
+        if b >= max_total:
+            break
+        b <<= 1
+
+
+def bench_mode(external: bool, n_rows: int, n_requests: int,
+               concurrency: int, budget_s: float) -> float:
+    tag = "ext" if external else "native"
+    store = _make_store(n_rows, external)
+    reqs = _requests(store, n_requests)
+    max_total = concurrency * max(_REQUEST_ROWS)
+
+    # Warm both modes deterministically (signature compile + every
+    # reachable bucket trace): those are the *bounded* cold costs this
+    # benchmark separately asserts on — the throughput comparison is about
+    # the steady state both modes reach afterwards.
+    seq = _service(store, external)
+    _warm_buckets(seq, store, max_total)
+    _run_sequential(seq, reqs)
+    t0 = time.perf_counter()
+    seq_out = _run_sequential(seq, reqs)
+    seq_s = time.perf_counter() - t0
+
+    cont = _service(store, external, admission=AdmissionConfig(
+        latency_budget_s=budget_s, min_bucket_rows=16, max_queue=256))
+    _warm_buckets(cont, store, max_total)
+    _run_concurrent(cont, reqs, concurrency)
+    t0 = time.perf_counter()
+    cont_out = _run_concurrent(cont, reqs, concurrency)
+    cont_s = time.perf_counter() - t0
+    info = cont.admission_info()
+    cont.close()
+
+    for got, want in zip(cont_out, seq_out):
+        assert_tables_bit_exact(got, want)
+
+    speedup = seq_s / cont_s
+    rps_seq = n_requests / seq_s
+    rps_cont = n_requests / cont_s
+    emit(f"continuous_batching/sequential_{tag}",
+         seq_s / n_requests * 1e6, f"requests_per_s={rps_seq:.0f}")
+    emit(f"continuous_batching/continuous_{tag}",
+         cont_s / n_requests * 1e6,
+         f"requests_per_s={rps_cont:.0f} speedup={speedup:.2f}x "
+         f"coalesce_rate={info['coalesce_rate']:.2f} "
+         f"queue_p95_ms={info['queue_p95_ms']:.1f} "
+         f"bucket_compiles={info['bucket_compiles']} "
+         f"jit_traces={info['jit_traces']}")
+
+    # compile discipline: shape compiles bounded by the pow-2 bucket count
+    # for the largest possible stacked batch (every one of which the warm
+    # phase traced), counted apart from the single signature miss
+    bound = int(math.log2(max(max_total // 16, 1))) + 2
+    assert cont.stats.cache_misses == 1, \
+        f"signature misses leaked shape recompiles: {cont.stats.cache_misses}"
+    assert cont.stats.bucket_compiles <= bound, \
+        f"bucket compiles {cont.stats.bucket_compiles} > O(log n) bound {bound}"
+    assert info["queue_p95_ms"] <= (budget_s + 2.0) * 1e3, \
+        f"p95 queue latency {info['queue_p95_ms']:.1f}ms blew the budget"
+    return speedup
+
+
+def run(n_rows: int = 4_000, n_requests: int = 64,
+        concurrency: int = 8) -> None:
+    speedup = bench_mode(external=True, n_rows=n_rows,
+                         n_requests=n_requests, concurrency=concurrency,
+                         budget_s=4e-3)
+    bench_mode(external=False, n_rows=n_rows, n_requests=n_requests,
+               concurrency=concurrency, budget_s=4e-3)
+    assert speedup >= 2.0, \
+        f"continuous batching only {speedup:.2f}x over sequential at " \
+        f"concurrency {concurrency} (need >= 2x)"
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -20,9 +20,10 @@ def main() -> int:
                     help="smaller row counts (CI-sized)")
     args = ap.parse_args()
 
-    from . import (fig2a_projection_pushdown, fig2b_clustering,
-                   fig2c_inlining, fig2d_nn_translation, fig3_integration,
-                   lossy_pushdown, plan_cache, pruning, subplan_reuse)
+    from . import (continuous_batching, fig2a_projection_pushdown,
+                   fig2b_clustering, fig2c_inlining, fig2d_nn_translation,
+                   fig3_integration, lossy_pushdown, plan_cache, pruning,
+                   subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -43,6 +44,9 @@ def main() -> int:
             n_rows=10_000 if args.quick else 50_000)),
         ("subplan_reuse", lambda: subplan_reuse.run(
             n_rows=20_000 if args.quick else 100_000)),
+        ("continuous_batching", lambda: continuous_batching.run(
+            n_rows=2_000 if args.quick else 4_000,
+            n_requests=32 if args.quick else 64)),
     ]
     failures = 0
     for name, job in jobs:

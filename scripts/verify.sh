@@ -4,5 +4,10 @@
 # `scripts/verify.sh -m tier1` for just the serving battery).
 set -e
 cd "$(dirname "$0")/.."
+# Watchdog cap for tests marked timeout_guard (the threaded admission-loop
+# battery): a wedged background loop dumps all-thread tracebacks and fails
+# the run instead of hanging tier-1.  See tests/conftest.py.
+REPRO_TEST_TIMEOUT="${REPRO_TEST_TIMEOUT:-300}"
+export REPRO_TEST_TIMEOUT
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q \
     -W error::pytest.PytestUnknownMarkWarning "$@"

@@ -34,7 +34,8 @@ from ..relational.table import ColumnSchema, Schema, Table
 from .ir import Plan
 
 __all__ = ["compile_plan", "execute", "ExecutionConfig", "compile_stats",
-           "reset_compile_stats", "add_compile_listener"]
+           "reset_compile_stats", "add_compile_listener", "pow2_bucket",
+           "count_jit_trace"]
 
 
 class ExecutionConfig:
@@ -54,15 +55,46 @@ class ExecutionConfig:
                 self.use_pallas_tree_gemm)
 
 
-# Observability hook: every compile_plan() call counts here, so callers
-# (tests, the PredictionService cache) can assert that a warm path performed
-# zero plan compilations.
-compile_stats: Dict[str, int] = {"plans_compiled": 0}
+# Observability hooks: every compile_plan() call counts under
+# ``plans_compiled`` and every jit *trace* of a serving executable under
+# ``jit_traces`` (the serving layer calls ``count_jit_trace`` from inside
+# its jitted closures — the increment is a Python side effect, so it runs
+# exactly once per trace, i.e. once per distinct input shape XLA compiles
+# for).  Plan compiles measure signature misses; jit traces measure
+# shape-driven recompiles.  The two are deliberately separate counters —
+# conflating them hides unbounded shape-specialized recompilation behind a
+# flat "compiles" number (see ServiceStats.bucket_compiles).
+compile_stats: Dict[str, int] = {"plans_compiled": 0, "jit_traces": 0}
 _compile_listeners: List[Callable[[Plan], None]] = []
 
 
 def reset_compile_stats() -> None:
     compile_stats["plans_compiled"] = 0
+    compile_stats["jit_traces"] = 0
+
+
+def count_jit_trace() -> None:
+    """Record one jit trace (one shape-specialized XLA compilation)."""
+    compile_stats["jit_traces"] += 1
+
+
+def pow2_bucket(n: int, min_rows: int = 1, max_rows: int = 0) -> int:
+    """Row-count shape bucket: the smallest power-of-two >= ``n`` clamped
+    to ``[min_rows, max_rows]``.  Padding batches to bucketed shapes keeps
+    the number of distinct executables XLA compiles for a query at
+    O(log max_rows/min_rows) no matter how batch sizes vary; beyond
+    ``max_rows`` the bucket grows in ``max_rows`` multiples (compile count
+    then linear in overflow factor, which bounded queues keep small)."""
+    b = max(int(min_rows), 1)
+    if max_rows and n > max_rows:
+        return ((n + max_rows - 1) // max_rows) * max_rows
+    while b < n:
+        b <<= 1
+    # clamp: with a non-power-of-two max_rows the doubling can overshoot
+    # the cap even though n fits under it (still >= n in this branch)
+    if max_rows:
+        b = min(b, max_rows)
+    return b
 
 
 def add_compile_listener(fn: Callable[[Plan], None]) -> Callable[[], None]:

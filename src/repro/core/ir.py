@@ -24,7 +24,8 @@ import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 __all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature",
-           "subtree_signatures", "subtree_nodes", "is_deterministic_subtree"]
+           "subtree_signatures", "subtree_nodes", "is_deterministic_subtree",
+           "bucketed_signature"]
 
 
 class Category:
@@ -237,9 +238,24 @@ def canonical_form(plan: Plan) -> Tuple:
 
 
 def plan_signature(plan: Plan) -> str:
-    """Stable hex signature of a plan's structure + embedded model content."""
+    """Stable hex signature of a plan's structure + embedded model content.
+
+    Signatures are deliberately **shape-agnostic**: no row count or table
+    cardinality enters the hash, only structure, attrs and model content.
+    That is what lets the serving layer map one signature onto a small
+    family of shape-specialized executables (see :func:`bucketed_signature`)
+    instead of recompiling per batch size."""
     return hashlib.sha256(
         repr(canonical_form(plan)).encode("utf-8")).hexdigest()
+
+
+def bucketed_signature(sig: str, bucket_rows: int) -> str:
+    """Identity of a shape-specialized executable: the (shape-agnostic)
+    structural signature extended with the padded row bucket it was jitted
+    for.  The serving layer keys bucket executables in its cost-aware
+    cache under this, so varying batch sizes hit one of O(log max_batch)
+    entries rather than forcing a recompile per distinct size."""
+    return f"{sig}@rows{int(bucket_rows)}"
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,11 @@
 """Serving: continuous-batching engine, sampling, prefix cache, and the
 prediction-query service with its three-tier cache (plan-signature
 executable cache -> cross-query materialized result cache -> cost-aware
-eviction/invalidation)."""
+eviction/invalidation) plus continuous-batching admission (latency-budget
+coalescing over shape-bucketed executables)."""
 
+from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
+                        Batcher, Clock, ManualClock, ReadyGroup, SystemClock)
 from .cache import CacheEntry, CostAwareCache, value_nbytes
 from .engine import InferenceEngine, Request, ServeConfig
 from .prediction_service import (CompiledPrediction, PredictionService,
@@ -12,4 +15,6 @@ from .sampling import sample_token
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
            "ServiceStats", "SubplanRef", "CostAwareCache", "CacheEntry",
-           "value_nbytes"]
+           "value_nbytes", "AdmissionConfig", "AdmissionLoop",
+           "AdmissionQueueFull", "Batcher", "Clock", "ManualClock",
+           "ReadyGroup", "SystemClock"]

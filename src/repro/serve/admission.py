@@ -1,0 +1,363 @@
+"""Admission control for continuous prediction-query batching.
+
+``serve/engine.py`` runs continuous batching for *tokens*: a background
+loop refills fixed decode slots from an admission queue at every step
+boundary.  This module is the same idea for *prediction queries*: requests
+accumulate in a bounded queue, group by executable-cache key, and a group
+flushes when any of
+
+- the **latency budget** of its oldest request is about to expire
+  (``AdmissionConfig.latency_budget_s``),
+- the group reached ``max_batch_requests`` (no point waiting longer), or
+- a caller forces a drain (explicit ``flush()`` / service ``close()``).
+
+Everything here is deliberately free of JAX and of the service itself —
+the :class:`Batcher` holds opaque *items* grouped under opaque *keys*, and
+the :class:`AdmissionLoop` thread only talks to the batcher plus a
+``serve`` callback.  Two seams make the loop testable without real sleeps:
+
+- an injectable :class:`Clock` — :class:`SystemClock` in production,
+  :class:`ManualClock` in tests (time only moves when the test calls
+  ``advance``; waits return immediately so nothing ever blocks on a fake
+  timestamp);
+- **event hooks** — ``Batcher.on_admit(item)`` and ``Batcher.on_flush(key,
+  items, reason)`` fire synchronously at admission and at group pop, so a
+  test can observe exactly which requests coalesced and *why* a group was
+  released (reason is one of ``"deadline" | "full" | "drain"``).
+
+Backpressure: ``Batcher.offer`` blocks while the queue holds
+``max_queue`` items (producers slow to the service's drain rate).  With
+``block_on_full=False`` — or when ``offer_timeout_s`` expires — it raises
+:class:`AdmissionQueueFull` instead, so callers can shed load rather than
+pile up unbounded work behind a wedged executor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["AdmissionConfig", "AdmissionLoop", "AdmissionQueueFull",
+           "Batcher", "Clock", "ManualClock", "ReadyGroup", "SystemClock"]
+
+
+class AdmissionQueueFull(RuntimeError):
+    """The bounded admission queue stayed full past the offer timeout."""
+
+
+# ---------------------------------------------------------------------------
+# Clock seam.
+# ---------------------------------------------------------------------------
+
+class Clock:
+    """Time source + condition-wait used by the batcher and loop.  The
+    indirection exists so deadline logic can be driven by a test-controlled
+    timestamp instead of ``time.monotonic`` + real sleeps."""
+
+    def monotonic(self) -> float:
+        raise NotImplementedError
+
+    def wait(self, cond: threading.Condition, timeout: float) -> bool:
+        """Wait on ``cond`` (held by the caller) up to ``timeout`` seconds.
+        Returns True if notified before the timeout."""
+        raise NotImplementedError
+
+
+class SystemClock(Clock):
+    def monotonic(self) -> float:
+        return time.monotonic()
+
+    def wait(self, cond: threading.Condition, timeout: float) -> bool:
+        return cond.wait(timeout)
+
+
+class ManualClock(Clock):
+    """Deterministic clock: ``monotonic()`` returns a test-set value and
+    only ``advance()``/``set_time()`` move it.  ``wait`` yields the lock
+    briefly (never sleeping out the fake timeout), so a loop accidentally
+    run against a ManualClock degrades to polling instead of hanging."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._lock = threading.Lock()
+
+    def monotonic(self) -> float:
+        with self._lock:
+            return self._now
+
+    def advance(self, dt: float) -> float:
+        with self._lock:
+            self._now += float(dt)
+            return self._now
+
+    def set_time(self, t: float) -> None:
+        with self._lock:
+            self._now = float(t)
+
+    def wait(self, cond: threading.Condition, timeout: float) -> bool:
+        return cond.wait(min(timeout, 0.005))
+
+
+# ---------------------------------------------------------------------------
+# Configuration.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Continuous-batching knobs (see ``PredictionService`` docstring).
+
+    - ``latency_budget_s`` — how long an admitted request may wait for
+      batch-mates before its group is flushed.  The p95 queue latency is
+      bounded by roughly this plus one batch execution.
+    - ``max_queue`` — bound on queued requests across all groups; at the
+      bound ``offer`` blocks (backpressure) or raises
+      :class:`AdmissionQueueFull` (``block_on_full=False`` / timeout).
+    - ``max_batch_requests`` — a group this large flushes immediately.
+    - ``min_bucket_rows`` / ``max_bucket_rows`` — row-bucket policy for
+      shape-bucketed executables: stacked batches pad to the next
+      power-of-two bucket in ``[min, max]``, so any batch size maps to one
+      of O(log max/min) compiled shapes.
+    - ``background`` — start the :class:`AdmissionLoop` thread.  Off for
+      deterministic tests that drive ``admission_tick`` by hand.
+    """
+
+    latency_budget_s: float = 0.002
+    max_queue: int = 1024
+    max_batch_requests: int = 64
+    min_bucket_rows: int = 64
+    max_bucket_rows: int = 1 << 20
+    block_on_full: bool = True
+    offer_timeout_s: float = 30.0
+    background: bool = True
+
+
+@dataclasses.dataclass
+class _Admitted:
+    key: Any
+    item: Any
+    admitted_at: float
+    chunk: bool = True        # False: group must release whole (see offer)
+
+
+@dataclasses.dataclass
+class ReadyGroup:
+    """A coalesced batch released by the batcher, plus why it released."""
+
+    key: Any
+    items: List[Any]
+    reason: str                        # "deadline" | "full" | "drain"
+    admitted_at: Tuple[float, ...] = ()
+
+
+# ---------------------------------------------------------------------------
+# Batcher.
+# ---------------------------------------------------------------------------
+
+class Batcher:
+    """Bounded, key-grouped admission queue shared by the explicit-flush
+    path and the background loop.  Thread-safe; all waiting happens on
+    ``self.cond`` (one condition for producers awaiting space, the loop
+    awaiting work, and ``stop`` wakeups — predicates are re-checked after
+    every wait, so ``notify_all`` keeps everyone honest)."""
+
+    def __init__(self, config: AdmissionConfig, clock: Optional[Clock] = None):
+        self.config = config
+        self.clock = clock or SystemClock()
+        # RLock so the loop can call next_deadline()/has_ready() while
+        # already holding cond (single source of truth for readiness)
+        self.cond = threading.Condition(threading.RLock())
+        self._queue: List[_Admitted] = []
+        self._closed = False
+        # test/observability seams — called synchronously, outside cond
+        self.on_admit: Optional[Callable[[Any], None]] = None
+        self.on_flush: Optional[Callable[[Any, List[Any], str], None]] = None
+
+    def __len__(self) -> int:
+        with self.cond:
+            return len(self._queue)
+
+    # -- producer side -------------------------------------------------------
+    def offer(self, key: Any, item: Any, chunk: bool = True) -> None:
+        """Admit ``item`` under ``key``; blocks while the queue is full
+        (raises :class:`AdmissionQueueFull` on timeout / non-blocking).
+        The offer timeout runs on *wall* time, not the injectable clock:
+        backpressure bounds how long a producer really blocks, and a
+        ManualClock that never advances must not turn a full queue into an
+        unbounded spin.
+
+        ``chunk=False`` marks requests whose group must release whole
+        regardless of ``max_batch_requests`` — identical-catalog-table
+        prediction requests all share ONE execution however many coalesce,
+        so splitting them only multiplies full-plan executions.  The cap
+        still *triggers* their flush; it just never splits them."""
+        cfg = self.config
+        deadline = time.monotonic() + cfg.offer_timeout_s
+        with self.cond:
+            while len(self._queue) >= max(cfg.max_queue, 1) \
+                    and not self._closed:
+                remaining = deadline - time.monotonic()
+                if not cfg.block_on_full or remaining <= 0:
+                    raise AdmissionQueueFull(
+                        f"admission queue full ({cfg.max_queue} pending)")
+                self.clock.wait(self.cond, remaining)
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._queue.append(
+                _Admitted(key, item, self.clock.monotonic(), chunk=chunk))
+            self.cond.notify_all()       # wake the loop to re-plan its wait
+        if self.on_admit is not None:
+            self.on_admit(item)
+
+    def close(self) -> None:
+        """Refuse further offers (pending items stay drainable)."""
+        with self.cond:
+            self._closed = True
+            self.cond.notify_all()
+
+    # -- consumer side -------------------------------------------------------
+    def next_deadline(self) -> Optional[float]:
+        with self.cond:
+            if not self._queue:
+                return None
+            oldest = min(a.admitted_at for a in self._queue)
+            return oldest + self.config.latency_budget_s
+
+    def _grouped(self) -> Dict[Any, List[_Admitted]]:
+        groups: Dict[Any, List[_Admitted]] = {}
+        for a in self._queue:
+            groups.setdefault(a.key, []).append(a)
+        return groups
+
+    def has_ready(self, now: float) -> bool:
+        with self.cond:
+            return any(self._ready_reason(g, now) is not None
+                       for g in self._grouped().values())
+
+    def _ready_reason(self, group: List[_Admitted],
+                      now: float) -> Optional[str]:
+        if len(group) >= self.config.max_batch_requests:
+            return "full"
+        oldest = min(a.admitted_at for a in group)
+        if now >= oldest + self.config.latency_budget_s:
+            return "deadline"
+        return None
+
+    def pop_ready(self, now: Optional[float] = None,
+                  force: bool = False) -> List[ReadyGroup]:
+        """Atomically remove and return every group that is due at ``now``
+        (every group, reason ``"drain"``, when ``force``).  Groups larger
+        than ``max_batch_requests`` release as multiple capped chunks:
+        the cap bounds *execution* batch size, not just flush timing — a
+        burst that piled up behind one slow execution must not stack into
+        a single giant padded batch."""
+        if now is None:
+            now = self.clock.monotonic()
+        cap = max(self.config.max_batch_requests, 1)
+        ready: List[ReadyGroup] = []
+        with self.cond:
+            popped_ids = set()
+            for key, group in self._grouped().items():
+                reason = "drain" if force else self._ready_reason(group, now)
+                if reason is None:
+                    continue
+                # a group is homogeneous in chunkability (same key)
+                step = cap if group[0].chunk else len(group)
+                for lo in range(0, len(group), step):
+                    chunk = group[lo:lo + step]
+                    ready.append(ReadyGroup(
+                        key=key, items=[a.item for a in chunk],
+                        reason=reason,
+                        admitted_at=tuple(a.admitted_at for a in chunk)))
+                popped_ids.update(id(a) for a in group)
+            if ready:
+                # survivors keep their admission order
+                self._queue = [a for a in self._queue
+                               if id(a) not in popped_ids]
+                self.cond.notify_all()   # space freed: unblock producers
+        if self.on_flush is not None:
+            for g in ready:
+                self.on_flush(g.key, g.items, g.reason)
+        return ready
+
+    def drain(self) -> List[ReadyGroup]:
+        """Pop everything regardless of deadlines (explicit ``flush()``)."""
+        return self.pop_ready(force=True)
+
+
+# ---------------------------------------------------------------------------
+# Background loop.
+# ---------------------------------------------------------------------------
+
+class AdmissionLoop:
+    """Daemon thread that sleeps until the oldest pending request's
+    deadline (waking early on new admissions, which may complete a full
+    group) and serves due groups via the injected callback.  On ``stop()``
+    it drains the queue before exiting, so no admitted ticket is lost."""
+
+    def __init__(self, batcher: Batcher,
+                 serve: Callable[[ReadyGroup], None],
+                 name: str = "prediction-admission",
+                 on_error: Optional[Callable[[ReadyGroup, BaseException],
+                                             None]] = None):
+        self.batcher = batcher
+        self.clock = batcher.clock
+        self._serve = serve
+        self._on_error = on_error
+        self._stop = threading.Event()
+        self.last_error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+
+    def start(self) -> "AdmissionLoop":
+        self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    def stop(self, join_timeout: float = 30.0) -> None:
+        self._stop.set()
+        with self.batcher.cond:
+            self.batcher.cond.notify_all()
+        # may be called from a GC finalizer, which can run on any thread —
+        # including this loop's own (joining oneself raises)
+        if self._thread.is_alive() \
+                and threading.current_thread() is not self._thread:
+            self._thread.join(join_timeout)
+
+    def _run(self) -> None:
+        batcher, clock = self.batcher, self.clock
+        while not self._stop.is_set():
+            with batcher.cond:
+                if self._stop.is_set():
+                    break
+                deadline = batcher.next_deadline()
+                if deadline is None:               # queue empty: block until
+                    batcher.cond.wait()            # offer()/stop() notify
+                    continue
+                now = clock.monotonic()
+                if deadline > now and not batcher.has_ready(now):
+                    clock.wait(batcher.cond, deadline - now)
+            for group in batcher.pop_ready(clock.monotonic()):
+                self._serve_safely(group)
+        for group in batcher.drain():                  # drain on stop
+            self._serve_safely(group)
+
+    def _serve_safely(self, group: ReadyGroup) -> None:
+        """The serve callback fails individual tickets itself; anything
+        escaping it is a harness bug — record it, hand the group to
+        ``on_error`` so its callers are failed rather than stranded in
+        ``result()`` forever, and keep the loop alive rather than leaving
+        every future request behind a dead thread."""
+        try:
+            self._serve(group)
+        except BaseException as err:
+            self.last_error = err
+            if self._on_error is not None:
+                try:
+                    self._on_error(group, err)
+                except Exception:       # pragma: no cover - defensive
+                    pass

@@ -91,13 +91,23 @@ class CostAwareCache:
         self.bytes_in_use = 0
 
     # -- lookup ---------------------------------------------------------------
-    def get(self, key: Any) -> Optional[Any]:
+    def get(self, key: Any, count: bool = True) -> Optional[Any]:
+        """Lookup with recency/eviction-weight bump.  ``count=False`` keeps
+        the lookup out of the cache's ``hits``/``misses`` ledger: the
+        serving layer uses it for *shape-bucket* executable lookups, whose
+        hit rate is a different signal (bucket reuse) than signature hit
+        rate (query reuse) — folding both into one pair of counters is
+        exactly the stats conflation the service's split
+        ``bucket_hits``/``bucket_compiles`` counters exist to avoid.  The
+        entry's own ``hits`` (eviction weight) still bumps either way."""
         with self._lock:
             e = self._entries.get(key)
             if e is None:
-                self.misses += 1
+                if count:
+                    self.misses += 1
                 return None
-            self.hits += 1
+            if count:
+                self.hits += 1
             e.hits += 1
             self._seq += 1
             e.seq = self._seq

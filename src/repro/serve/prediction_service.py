@@ -54,13 +54,43 @@ Execution tiers below the caches are unchanged from PR 1:
   Only row-local single-scan plans chunk; anything with joins/aggregation
   falls back to whole-table execution.
 - **micro-batch admission** — concurrent requests sharing a plan signature
-  coalesce at ``flush()`` boundaries: row-local plans stack their input
-  tables into one padded batch execution and split the results; requests
-  over identical catalog tables share a single execution.
+  coalesce: row-local plans stack their input tables into one padded batch
+  execution and split the results; requests over identical catalog tables
+  share a single execution.  Coalescing happens at explicit ``flush()``
+  boundaries, or continuously when an admission loop is configured (below).
+
+**Continuous batching** (``admission=AdmissionConfig(...)``): a background
+admission thread — modeled on ``serve/engine.py``'s token loop — coalesces
+in-flight same-signature requests inside a latency budget instead of
+waiting for an explicit ``flush()``.  Both the explicit-flush path and the
+loop drain the same :class:`~repro.serve.admission.Batcher`.  The knobs
+(see :class:`~repro.serve.admission.AdmissionConfig`):
+
+- ``latency_budget_s`` — how long an admitted request may wait for
+  batch-mates; the loop flushes a group early when its *oldest* request's
+  deadline is about to expire, so p95 queue latency stays bounded by
+  roughly budget + one batch execution.
+- ``max_queue`` — backpressure: ``submit()`` blocks while this many
+  requests are pending (or raises ``AdmissionQueueFull`` with
+  ``block_on_full=False`` / on ``offer_timeout_s`` expiry), so producers
+  degrade to the service's drain rate instead of queueing unboundedly.
+- ``max_batch_requests`` — a group this large flushes immediately.
+- ``min_bucket_rows`` / ``max_bucket_rows`` — **shape-bucket policy**:
+  stacked batches pad to the next power-of-two row bucket, and the bucket
+  is part of the executable-cache key (``ir.bucketed_signature``), so any
+  batch size hits one of O(log max_batch) compiled executables — bit-exact
+  after unpadding, with compile counts independent of arrival patterns.
+- ``background`` — start the loop thread; ``False`` plus an injected
+  :class:`~repro.serve.admission.ManualClock` gives a deterministic
+  harness (tests drive ``admission_tick()`` with a fake clock, no sleeps).
+
+``close()`` stops the loop, drains every in-flight request (no ticket is
+lost), and detaches the catalog invalidation hook.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -69,14 +99,19 @@ from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.codegen import ExecutionConfig, compile_plan
-from ..core.ir import (Node, Plan, is_deterministic_subtree, plan_signature,
+from ..core.codegen import (ExecutionConfig, compile_plan, count_jit_trace,
+                            pow2_bucket)
+from ..core.ir import (Node, Plan, bucketed_signature,
+                       is_deterministic_subtree, plan_signature,
                        subtree_nodes, subtree_signatures)
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
                               OptimizerConfig, referenced_models)
 from ..core.sql_frontend import parse_query
 from ..relational.table import Schema, Table
+from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
+                        Batcher, Clock, ReadyGroup, SystemClock)
 from .cache import CostAwareCache, value_nbytes
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
@@ -105,6 +140,12 @@ _EXPENSIVE_OPS = frozenset({
 
 @dataclasses.dataclass
 class ServiceStats:
+    # ``cache_hits``/``cache_misses`` count *signature* lookups only: a
+    # miss here means a query structure the service had not compiled.
+    # Shape-driven executable builds (a known signature re-jitted for a
+    # new row bucket) count under ``bucket_compiles`` instead — folding
+    # them into ``cache_misses`` would hide unbounded shape recompilation
+    # behind a healthy-looking signature hit rate (and vice versa).
     cache_hits: int = 0
     cache_misses: int = 0
     evictions: int = 0              # executable-cache budget evictions
@@ -122,6 +163,16 @@ class ServiceStats:
                                     # their subtree after they compiled
     rematerializations: int = 0
     invalidation_evictions: int = 0  # entries freed by register_* hooks
+    # continuous-batching tier
+    submitted: int = 0              # tickets admitted to the batcher
+    bucket_compiles: int = 0        # shape-bucket executables built (re-jits
+                                    # of a cached signature for a new bucket)
+    bucket_hits: int = 0            # stacked executions reusing a bucket
+    jit_traces: int = 0             # actual shape-specialized XLA traces
+    deadline_flushes: int = 0       # groups released by the latency budget
+    size_flushes: int = 0           # groups released by max_batch_requests
+    drain_flushes: int = 0          # groups released by flush()/close()
+    queue_rejections: int = 0       # submits refused by backpressure
 
 
 @dataclasses.dataclass
@@ -157,6 +208,10 @@ class CompiledPrediction:
     model_names: Tuple[str, ...] = ()
     capture: Optional[SubplanRef] = None   # fn returns (out, captured value)
     splice: Optional[SubplanRef] = None    # fn reads capture via slot input
+    raw_fn: Any = None               # unjitted closure; shape-bucket entries
+                                     # re-jit it rather than re-running
+                                     # optimize + codegen
+    bucket_rows: Optional[int] = None      # set on shape-bucket entries
 
 
 class PredictionTicket:
@@ -173,10 +228,16 @@ class PredictionTicket:
         self._error: Optional[BaseException] = None
 
     def _resolve(self, value: Any):
+        # a double resolution would mean two executions raced for one
+        # request — surface it instead of silently overwriting
+        if self._event.is_set():
+            raise RuntimeError("ticket resolved twice")
         self._value = value
         self._event.set()
 
     def _fail(self, err: BaseException):
+        if self._event.is_set():
+            raise RuntimeError("ticket resolved twice")
         self._error = err
         self._event.set()
 
@@ -227,12 +288,59 @@ def _slice_table(table: Table, start: int, size: int) -> Table:
     return _pad_table(part, size)
 
 
-def _stack_tables(tables: List[Table]) -> Table:
+def _stack_pad_host(tables: List[Table], target: int) -> Table:
+    """Stack request tables and pad to ``target`` rows **host-side**
+    (numpy memcpy + one device upload per column).  Device-side
+    ``jnp.concatenate``/``pad`` would re-trace for every distinct group
+    composition — with varying request sizes that is an unbounded compile
+    stream, exactly what shape bucketing exists to prevent.  Pure data
+    movement: bit-exact by construction; pad rows carry ``valid=False``."""
     base = tables[0]
-    cols = {k: jnp.concatenate([t.columns[k] for t in tables], axis=0)
-            for k in base.columns}
-    valid = jnp.concatenate([t.valid for t in tables], axis=0)
-    return Table(cols, valid, base.schema)
+    n = sum(t.capacity for t in tables)
+    pad = max(0, target - n)
+    if len(tables) == 1 and pad == 0:
+        return base                    # already bucket-shaped: zero copies
+    cols = {}
+    for k in base.columns:
+        arrs = [np.asarray(t.columns[k]) for t in tables]
+        col = arrs[0] if len(arrs) == 1 else np.concatenate(arrs, axis=0)
+        if pad:
+            col = np.pad(col, [(0, pad)] + [(0, 0)] * (col.ndim - 1))
+        cols[k] = jnp.asarray(col)
+    valid = np.concatenate([np.asarray(t.valid) for t in tables])
+    if pad:
+        valid = np.pad(valid, (0, pad))
+    return Table(cols, jnp.asarray(valid), base.schema)
+
+
+def _rows_of(out: Any) -> int:
+    if isinstance(out, Table):
+        return out.capacity
+    return out.shape[0]
+
+
+def _split_output_host(out: Any, sizes: List[int]) -> List[Any]:
+    """Split a stacked output back into per-request results host-side:
+    one device->host transfer for the whole batch, then per-request numpy
+    slices re-uploaded as device arrays — device-side slicing would
+    compile per (offset, size) pattern.  The re-upload copies, so a
+    caller keeping one small result alive never pins the whole padded
+    batch's buffers, and every serving path hands back the same
+    device-array-backed tables PR 1 did, whatever the row count."""
+    if len(sizes) == 1 and _rows_of(out) == sizes[0]:
+        return [out]                   # unpadded single request: as-is
+    bounds = np.cumsum([0] + list(sizes))
+    if isinstance(out, Table):
+        cols = {k: np.asarray(v) for k, v in out.columns.items()}
+        valid = np.asarray(out.valid)
+        return [Table({k: jnp.asarray(v[bounds[i]:bounds[i + 1]])
+                       for k, v in cols.items()},
+                      jnp.asarray(valid[bounds[i]:bounds[i + 1]]),
+                      out.schema)
+                for i in range(len(sizes))]
+    arr = np.asarray(out)
+    return [jnp.asarray(arr[bounds[i]:bounds[i + 1]])
+            for i in range(len(sizes))]
 
 
 def _trim_rows(out: Any, n: int) -> Any:
@@ -240,13 +348,6 @@ def _trim_rows(out: Any, n: int) -> Any:
         return Table({k: v[:n] for k, v in out.columns.items()},
                      out.valid[:n], out.schema)
     return out[:n]
-
-
-def _slice_rows(out: Any, start: int, end: int) -> Any:
-    if isinstance(out, Table):
-        return Table({k: v[start:end] for k, v in out.columns.items()},
-                     out.valid[start:end], out.schema)
-    return out[start:end]
 
 
 def _concat_outputs(pieces: List[Any]) -> Any:
@@ -309,7 +410,9 @@ class PredictionService:
                  exec_cache_bytes: int = 0,
                  result_cache_entries: int = 128,
                  result_cache_bytes: int = 256 << 20,
-                 enable_result_cache: bool = True):
+                 enable_result_cache: bool = True,
+                 admission: Optional[AdmissionConfig] = None,
+                 clock: Optional[Clock] = None):
         self.catalog = catalog
         self.optimizer_config = optimizer_config or OptimizerConfig()
         self.execution_config = execution_config or ExecutionConfig()
@@ -323,9 +426,44 @@ class PredictionService:
             CostAwareCache(max_entries=result_cache_entries,
                            max_bytes=result_cache_bytes)
             if enable_result_cache else None)
-        self._queue: List[_Pending] = []
-        self._lock = threading.Lock()          # stats + queue
+        self._lock = threading.Lock()          # stats
         self._flush_lock = threading.Lock()    # serializes batch execution
+        # Admission: explicit-flush mode and the background loop share one
+        # Batcher — ``admission=None`` keeps the PR-1 contract (requests
+        # wait for flush(), queue effectively unbounded since only the
+        # submitter's own flush can drain it), a config turns on
+        # continuous batching with a real bound.
+        self.clock = clock or SystemClock()
+        self.admission_config = admission
+        self.batcher = Batcher(
+            admission or AdmissionConfig(background=False,
+                                         max_queue=1 << 62),
+            clock=self.clock)
+        self._queue_latencies: collections.deque = collections.deque(
+            maxlen=4096)               # seconds waited in admission, per req
+        self._loop: Optional[AdmissionLoop] = None
+        self._loop_finalizer = None
+        if admission is not None and admission.background:
+            # Weak trampolines: the loop thread must not pin the service
+            # against GC (bound methods would), and a finalizer stops the
+            # thread when the last external reference drops — close() is
+            # still the orderly path (it drains), but a forgotten service
+            # leaks neither its caches nor a daemon thread.
+            wsvc = weakref.ref(self)
+
+            def _serve_cb(group, _w=wsvc):
+                svc = _w()
+                if svc is not None:
+                    svc._serve_ready(group)
+
+            def _fail_cb(group, err, _w=wsvc):
+                svc = _w()
+                if svc is not None:
+                    svc._fail_group(group, err)
+
+            self._loop = AdmissionLoop(self.batcher, _serve_cb,
+                                       on_error=_fail_cb).start()
+            self._loop_finalizer = weakref.finalize(self, self._loop.stop)
         self._unsubscribe_invalidation = None
         if hasattr(catalog, "add_invalidation_listener"):
             # weakref so a long-lived ModelStore does not pin every service
@@ -352,8 +490,22 @@ class PredictionService:
             self._unsubscribe_invalidation = unsub_cell[0]
 
     def close(self) -> None:
-        """Detach from the catalog's invalidation hook (also happens
-        automatically when the service is garbage collected)."""
+        """Stop the admission loop (if any), drain every in-flight request
+        so no ticket is left unresolved, and detach from the catalog's
+        invalidation hook.  Garbage collection of an unclosed service also
+        stops the loop thread and detaches the hook (weak trampolines +
+        finalizer), but only ``close()`` guarantees queued tickets resolve
+        — callers holding tickets should close, not drop, the service."""
+        self.batcher.close()           # refuse new submits, keep drainable
+        if self._loop_finalizer is not None:
+            self._loop_finalizer.detach()
+            self._loop_finalizer = None
+        if self._loop is not None:
+            self._loop.stop()          # loop's exit path drains the queue
+            self._loop = None
+        # catch anything admitted after the loop's final drain (or queued
+        # in explicit-flush mode)
+        self.admission_tick(force=True)
         if self._unsubscribe_invalidation is not None:
             try:
                 self._unsubscribe_invalidation()
@@ -499,6 +651,23 @@ class PredictionService:
             self.stats.rematerializations += 1
         return value
 
+    def _jit(self, fn):
+        """jax.jit with trace accounting: the counter bumps run as Python
+        side effects inside the traced closure, i.e. exactly once per
+        distinct input shape XLA compiles — that is the number the
+        shape-bucket tests bound (``jit_traces <= #buckets + #signatures``).
+        With ``jit=False`` nothing traces, so nothing counts."""
+        if not self.jit:
+            return fn
+
+        def traced(tables):
+            count_jit_trace()
+            with self._lock:
+                self.stats.jit_traces += 1
+            return fn(tables)
+
+        return jax.jit(traced)
+
     # -- compile cache -------------------------------------------------------
     def compile(self, query: Union[str, Plan],
                 tables: Optional[Dict[str, Table]] = None,
@@ -569,11 +738,10 @@ class PredictionService:
                 report.log("result_cache",
                            f"capturing subtree {capture_ref.describe()}")
 
-        fn = compile_plan(exec_plan, self.catalog, self.execution_config,
-                          capture=capture_ref.subtree_plan.output
-                          if capture_ref is not None else None)
-        if self.jit:
-            fn = jax.jit(fn)
+        raw_fn = compile_plan(exec_plan, self.catalog, self.execution_config,
+                              capture=capture_ref.subtree_plan.output
+                              if capture_ref is not None else None)
+        fn = self._jit(raw_fn)
         scans = _scan_names(exec_plan)
         chunk_table = None
         if len(scans) == 1 and all(n.op in _ROW_LOCAL_OPS
@@ -584,7 +752,7 @@ class PredictionService:
             key=key, signature=sig, plan=exec_plan, report=report, fn=fn,
             scan_tables=scans, chunk_table=chunk_table,
             compile_time_s=compile_time, model_names=model_names,
-            capture=capture_ref, splice=splice_ref)
+            capture=capture_ref, splice=splice_ref, raw_fn=raw_fn)
         tags = tuple(("model", m) for m in model_names) \
             + tuple(("table", t) for t in full_scans)
         evicted = self._exec_cache.put(
@@ -612,9 +780,8 @@ class PredictionService:
             return None
         t0 = time.perf_counter()
         residual = self._residual_plan(hit.plan, ref.subtree_plan.output, ref)
-        fn = compile_plan(residual, self.catalog, self.execution_config)
-        if self.jit:
-            fn = jax.jit(fn)
+        raw_fn = compile_plan(residual, self.catalog, self.execution_config)
+        fn = self._jit(raw_fn)
         hit.report.log("result_cache",
                        f"upgraded to spliced {ref.describe()}")
         compiled = CompiledPrediction(
@@ -622,7 +789,8 @@ class PredictionService:
             report=hit.report, fn=fn, scan_tables=_scan_names(residual),
             chunk_table=None,
             compile_time_s=hit.compile_time_s + time.perf_counter() - t0,
-            model_names=hit.model_names, capture=None, splice=ref)
+            model_names=hit.model_names, capture=None, splice=ref,
+            raw_fn=raw_fn)
         # The entry may have vanished between get() and here (concurrent
         # invalidation/eviction); rebuild tags + bytes from the hit rather
         # than re-inserting an untagged, unbudgeted executable.
@@ -670,6 +838,45 @@ class PredictionService:
                     "result_evictions": self.stats.result_evictions,
                 })
             return info
+
+    def admission_info(self) -> Dict[str, Any]:
+        """Continuous-batching ledger: coalesce rate, bucket hit rate, and
+        p50/p95 queue latency (seconds each admitted request waited between
+        ``submit`` and its group's release, measured on the injected
+        clock)."""
+        depth = len(self.batcher)
+        with self._lock:
+            s = self.stats
+            lats = sorted(self._queue_latencies)
+            served = s.batch_executions + s.coalesced_requests
+            bucket_lookups = s.bucket_hits + s.bucket_compiles
+
+            def pct(p: float) -> float:
+                if not lats:
+                    return 0.0
+                return lats[min(len(lats) - 1, round(p * (len(lats) - 1)))]
+
+            return {
+                "queue_depth": depth,
+                "submitted": s.submitted,
+                "served": served,
+                "coalesce_rate": s.coalesced_requests / served
+                if served else 0.0,
+                "bucket_compiles": s.bucket_compiles,
+                "bucket_hit_rate": s.bucket_hits / bucket_lookups
+                if bucket_lookups else 0.0,
+                "jit_traces": s.jit_traces,
+                "queue_p50_ms": pct(0.50) * 1e3,
+                "queue_p95_ms": pct(0.95) * 1e3,
+                "deadline_flushes": s.deadline_flushes,
+                "size_flushes": s.size_flushes,
+                "drain_flushes": s.drain_flushes,
+                "queue_rejections": s.queue_rejections,
+                "background_loop": self._loop is not None
+                and self._loop.running,
+                "loop_error": self._loop.last_error
+                if self._loop is not None else None,
+            }
 
     # -- execution -----------------------------------------------------------
     def _input_tables(self, compiled: CompiledPrediction,
@@ -763,40 +970,85 @@ class PredictionService:
     def run(self, query: Union[str, Plan],
             tables: Optional[Dict[str, Table]] = None) -> Any:
         """Synchronous serve.  Goes through the admission queue, so requests
-        issued concurrently from other threads coalesce with this one."""
+        issued concurrently from other threads coalesce with this one.
+        Under a background admission loop the request is served within the
+        latency budget; otherwise this flushes immediately."""
         ticket = self.submit(query, tables)
-        self.flush()
+        if self._loop is None:
+            self.flush()
         return ticket.result()
 
     # -- micro-batch admission -----------------------------------------------
     def submit(self, query: Union[str, Plan],
                tables: Optional[Dict[str, Table]] = None) -> PredictionTicket:
+        """Admit one request.  Blocks under backpressure (bounded queue);
+        raises :class:`~repro.serve.admission.AdmissionQueueFull` when the
+        queue stays full past the offer timeout (or immediately with
+        ``block_on_full=False``).  A request whose cache key cannot be
+        computed (e.g. unknown table) fails its ticket instead of
+        poisoning the batch it would have joined."""
         ticket = PredictionTicket()
-        pending = _Pending(self._to_plan(query), tables, ticket)
+        plan = self._to_plan(query)
+        try:
+            key, _ = self._cache_key(plan, tables)
+        except Exception as err:
+            ticket._fail(err)
+            return ticket
+        try:
+            # key[2] is the overridden-tables tuple: only override-table
+            # requests stack (batch size matters); identical-catalog
+            # groups share one execution and must never be split
+            self.batcher.offer(key, _Pending(plan, tables, ticket),
+                               chunk=bool(key[2]))
+        except AdmissionQueueFull:
+            with self._lock:
+                self.stats.queue_rejections += 1
+            raise
         with self._lock:
-            self._queue.append(pending)
+            self.stats.submitted += 1
         return ticket
 
     def flush(self) -> int:
-        """Drain the admission queue, coalescing requests that share a cache
-        key into single batched executions.  Returns #requests served."""
+        """Drain the admission queue regardless of deadlines, coalescing
+        requests that share a cache key into single batched executions.
+        Returns #requests served."""
+        return self.admission_tick(force=True)
+
+    def admission_tick(self, force: bool = False) -> int:
+        """Serve every group that is due at the current (injectable) clock
+        reading — the deterministic seam the background loop and the fake-
+        clock tests share.  ``force`` serves everything (explicit flush)."""
+        served = 0
+        groups = self.batcher.drain() if force \
+            else self.batcher.pop_ready(self.clock.monotonic())
+        for group in groups:
+            served += self._serve_ready(group)
+        return served
+
+    def _serve_ready(self, group: ReadyGroup) -> int:
+        """Account for one released group (flush reason + queue latency),
+        then serve it.  Called by the loop thread, ``flush()``, and
+        ``admission_tick``; ``_flush_lock`` serializes the execution."""
+        now = self.clock.monotonic()
+        with self._lock:
+            if group.reason == "deadline":
+                self.stats.deadline_flushes += 1
+            elif group.reason == "full":
+                self.stats.size_flushes += 1
+            else:
+                self.stats.drain_flushes += 1
+            for t in group.admitted_at:
+                self._queue_latencies.append(max(0.0, now - t))
         with self._flush_lock:
-            with self._lock:
-                pending, self._queue = self._queue, []
-            if not pending:
-                return 0
-            groups: Dict[Tuple, List[_Pending]] = {}
-            for p in pending:
-                try:
-                    key, _ = self._cache_key(p.plan, p.tables)
-                except Exception as err:            # e.g. unknown table
-                    p.ticket._fail(err)
-                    continue
-                groups.setdefault(key, []).append(p)
-            served = 0
-            for key, group in groups.items():
-                served += self._serve_group(key, group)
-            return served
+            return self._serve_group(group.key, group.items)
+
+    def _fail_group(self, group: ReadyGroup, err: BaseException) -> None:
+        """Loop escape hatch: an error that got past ``_serve_group``'s own
+        handlers must still fail the group's tickets — a caller blocked in
+        ``result()`` with no timeout would otherwise hang forever."""
+        for p in group.items:
+            if not p.ticket.done:
+                p.ticket._fail(err)
 
     def _serve_group(self, key: Tuple, group: List[_Pending]) -> int:
         head = group[0]
@@ -806,19 +1058,22 @@ class PredictionService:
                                     _key=(key, key[0]))
         except Exception as err:
             for p in group:
-                p.ticket._fail(err)
+                if not p.ticket.done:
+                    p.ticket._fail(err)
             return 0
         try:
-            if len(group) == 1:
-                head.ticket._resolve(self._execute(compiled, head.tables))
-            elif all(not p.tables for p in group):
-                # identical inputs (catalog tables): one execution, fanned out
+            if all(not p.tables for p in group):
+                # identical inputs (catalog tables): one execution at the
+                # catalog's natural (fixed) shape, fanned out to every ticket
                 out = self._execute(compiled, None)
                 for p in group:
                     p.ticket._resolve(out)
                 with self._lock:
                     self.stats.coalesced_requests += len(group) - 1
             elif compiled.chunk_table is not None:
+                # caller-supplied row counts vary request to request, so
+                # even a group of one goes through the shape-bucketed
+                # stacked path — arrival patterns must not multiply compiles
                 self._serve_stacked(compiled, group)
             else:
                 for p in group:
@@ -830,25 +1085,101 @@ class PredictionService:
             return 0
         return len(group)
 
+    def _bucket_rows(self, n: int) -> int:
+        cfg = self.batcher.config
+        return pow2_bucket(n, cfg.min_bucket_rows, cfg.max_bucket_rows)
+
+    def _bucket_executable(self, compiled: CompiledPrediction, bucket: int
+                           ) -> Tuple[CompiledPrediction, bool, Tuple]:
+        """Shape-specialized twin of ``compiled``: same optimized plan and
+        codegen closure, its own ``jax.jit`` wrapper, cached under the
+        (cache key, bucketed signature) pair so each row bucket compiles at
+        most once while it stays resident.  Returns ``(executable, fresh,
+        tags)`` — ``fresh`` lets the caller time the first (tracing)
+        execution and re-put the observed cost (with the same ``tags``, so
+        a twin whose zero-cost initial insert self-evicted is re-created
+        tagged and stays reachable by invalidation), giving eviction an
+        honest replacement price instead of the near-zero closure-wrapping
+        time."""
+        bkey = (compiled.key,
+                bucketed_signature(compiled.signature, bucket))
+        hit = self._exec_cache.get(bkey, count=False)
+        if hit is not None:
+            with self._lock:
+                self.stats.bucket_hits += 1
+            return hit, False, ()
+        with self._lock:
+            self.stats.bucket_compiles += 1
+        derived = dataclasses.replace(
+            compiled, key=bkey, fn=self._jit(compiled.raw_fn),
+            bucket_rows=bucket, serves=0)
+        base = self._exec_cache.entry(compiled.key)
+        tags = base.tags if base is not None else (
+            tuple(("model", m) for m in compiled.model_names)
+            + tuple(("table", t) for t in compiled.scan_tables))
+        # nbytes=0: the twin shares the base entry's plan artifacts, and
+        # its true footprint (the XLA executable) is invisible from here
+        evicted = self._exec_cache.put(bkey, derived, cost_s=0.0,
+                                       nbytes=0, tags=tags)
+        with self._lock:
+            self.stats.evictions += len(evicted)
+        entry = self._exec_cache.entry(bkey)
+        return (entry.value if entry is not None else derived), True, tags
+
+    def _execute_direct(self, compiled: CompiledPrediction,
+                        tabs: Dict[str, Table]) -> Any:
+        """Execute a shape-bucket executable on already-padded inputs: no
+        chunk split (the bucket *is* the static shape) and no capture store
+        (a padded stack is not the catalog data the result-cache key would
+        claim)."""
+        compiled.serves += 1
+        with self._lock:
+            self.stats.batch_executions += 1
+        raw = compiled.fn(tabs)
+        if compiled.capture is not None:
+            raw = raw[0]
+        return jax.block_until_ready(raw)
+
     def _serve_stacked(self, compiled: CompiledPrediction,
                        group: List[_Pending]):
         """Row-local plans: stack every request's input rows into one padded
-        execution, then split the output back by request offsets."""
+        execution, then split the output back by request offsets.  Padding
+        goes to a power-of-two row bucket with its own cached executable
+        (bit-exact after unpadding: pad rows carry ``valid=False`` and
+        row-local ops never mix rows), so however batch sizes vary, at most
+        O(log max_batch) shapes ever reach XLA."""
         name = compiled.chunk_table
         inputs = [self._input_tables(compiled, p.tables)[name]
                   for p in group]
         sizes = [t.capacity for t in inputs]
-        stacked = _stack_tables(inputs)
-        total = stacked.capacity
-        # Pad to a shape bucket so arrival patterns don't multiply compiles.
-        bucket = self.chunk_rows if self.chunk_rows else 256
-        stacked = _pad_table(stacked, _round_up(total, bucket))
-        out = _trim_rows(
-            self._execute(compiled, {name: stacked}, store_capture=False),
-            total)
-        off = 0
-        for p, size in zip(group, sizes):
-            p.ticket._resolve(_slice_rows(out, off, off + size))
-            off += size
+        total = sum(sizes)
+        if self.chunk_rows and total > self.chunk_rows:
+            # morsel execution already fixes the shape at chunk_rows (one
+            # chunk-shaped executable total): pad to a chunk multiple
+            stacked = _stack_pad_host(inputs,
+                                      _round_up(total, self.chunk_rows))
+            out = self._execute(compiled, {name: stacked},
+                                store_capture=False)
+        else:
+            bucket = self._bucket_rows(total)
+            bcompiled, fresh, btags = self._bucket_executable(compiled,
+                                                              bucket)
+            stacked = _stack_pad_host(inputs, bucket)
+            t0 = time.perf_counter()
+            out = self._execute_direct(bcompiled, {name: stacked})
+            if fresh:
+                # record the observed trace+compile cost for eviction;
+                # tags repeated so that, if the zero-cost insert above
+                # self-evicted under a full cache, the entry re-created
+                # here stays reachable by model/table invalidation
+                evicted = self._exec_cache.put(
+                    bcompiled.key, bcompiled,
+                    cost_s=time.perf_counter() - t0, nbytes=0, tags=btags)
+                with self._lock:
+                    self.stats.evictions += len(evicted)
+        # no device-side trim: the host-side split only reads rows up to
+        # sum(sizes), so the padded tail is simply never referenced
+        for p, piece in zip(group, _split_output_host(out, sizes)):
+            p.ticket._resolve(piece)
         with self._lock:
             self.stats.coalesced_requests += len(group) - 1

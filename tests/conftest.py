@@ -1,8 +1,35 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device
 (the 512-device override belongs exclusively to launch/dryrun.py)."""
 
+import faulthandler
+import os
+
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True)
+def _timeout_guard(request):
+    """Fail-fast guard for tests that run background threads (the serving
+    admission loop): a wedged loop must kill the run with stack traces
+    from every thread instead of hanging tier-1 forever.  Opt in with
+    ``@pytest.mark.timeout_guard(seconds)``; ``REPRO_TEST_TIMEOUT``
+    (exported by scripts/verify.sh) caps the budget suite-wide.  Uses
+    ``faulthandler.dump_traceback_later`` — no extra dependency, and the
+    dump shows exactly which lock the loop wedged on."""
+    marker = request.node.get_closest_marker("timeout_guard")
+    if marker is None:
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 120.0
+    env_cap = os.environ.get("REPRO_TEST_TIMEOUT")
+    if env_cap:
+        seconds = min(seconds, float(env_cap))
+    faulthandler.dump_traceback_later(seconds, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
 
 
 @pytest.fixture(scope="session")

@@ -342,6 +342,7 @@ def test_identical_catalog_requests_share_one_execution(store):
     assert t2.done
 
 
+@pytest.mark.timeout_guard(300)
 def test_concurrent_run_threads(store):
     pi = store.get_table("patient_info")
     service = PredictionService(store)
@@ -398,6 +399,7 @@ def test_ticket_result_timeout_raises(store):
     assert np.asarray(out.valid).any()
 
 
+@pytest.mark.timeout_guard(300)
 def test_concurrent_submit_flush_stress(store):
     """N threads submitting and flushing against one service: no deadlock,
     every ticket resolves, and the stats ledger balances —

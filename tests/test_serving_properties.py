@@ -9,14 +9,17 @@ than single examples:
 (b) chunked/morsel execution is bit-exact vs whole-table execution for any
     row count — empty tables, exact chunk multiples, single-row tails;
 (c) stacked micro-batch execution equals per-request sequential execution
-    for randomized same-signature request groups.
+    for randomized same-signature request groups;
+(d) bucketed-padded execution (continuous batching's shape buckets) is
+    bit-exact vs natural-shape execution for any row count — 0, 1, exact
+    power-of-two bucket boundaries, and boundaries±1.
 """
 
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import HealthCheck, given, settings, strategies as st
+from hypothesis import HealthCheck, example, given, settings, strategies as st
 
 from repro.core import ModelStore
 from repro.core.ir import Category, Node, Plan, plan_signature
@@ -170,3 +173,51 @@ def test_stacked_equals_sequential(stack_service, assert_tables_equal, spans):
     sequential = [service.run(SQL, t) for t in tables]
     for got, want in zip(stacked, sequential):
         assert_tables_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# (d) bucketed-padded == natural shape, bit-exact, any row count
+# ---------------------------------------------------------------------------
+
+BUCKET = 16          # continuous batching's min_bucket_rows under test
+
+
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(n=st.integers(0, 4 * BUCKET + 1))
+@example(n=0)                       # empty request
+@example(n=1)                       # single row
+@example(n=BUCKET - 1)              # bucket boundary - 1
+@example(n=BUCKET)                  # exact bucket boundary
+@example(n=BUCKET + 1)              # bucket boundary + 1
+@example(n=2 * BUCKET)              # exact power-of-two boundary
+@example(n=2 * BUCKET + 1)
+def test_bucketed_padded_bit_exact(base, assert_tables_equal, n):
+    """A request of any row count served through the shape-bucketed path
+    (pad to pow-2 bucket, execute, trim) is bit-exact vs the same rows
+    executed at their natural shape as a catalog table.
+
+    Mirrored by the named-edge parametrization in
+    ``test_continuous_batching.test_bucketed_bit_exact_vs_natural_shape``,
+    which runs even where hypothesis is absent.  Change both together."""
+    from repro.core import OptimizerConfig
+    from repro.serve import AdmissionConfig, ManualClock
+
+    full, pipe = base
+    rows = _sub_table(full, 0, n)
+    opt = OptimizerConfig(enable_stats_pruning=False)
+    ref_store = ModelStore()
+    ref_store.register_table("patient_info", rows)
+    ref_store.register_model("m", pipe)
+    want = PredictionService(ref_store, jit=False,
+                             optimizer_config=opt).run(SQL)
+
+    store = ModelStore()
+    store.register_table("patient_info", full)
+    store.register_model("m", pipe)
+    svc = PredictionService(
+        store, jit=False, optimizer_config=opt, clock=ManualClock(),
+        admission=AdmissionConfig(min_bucket_rows=BUCKET, background=False))
+    ticket = svc.submit(SQL, {"patient_info": rows})
+    assert svc.flush() == 1
+    assert_tables_equal(ticket.result(timeout=0), want)
