@@ -1,4 +1,4 @@
-.PHONY: verify verify-tier1 bench-subplan bench-batching
+.PHONY: verify verify-tier1 bench-subplan bench-batching bench-sharded
 
 # Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").  verify.sh
 # exports REPRO_TEST_TIMEOUT so the threaded admission-loop tests fail
@@ -16,3 +16,8 @@ bench-subplan:
 
 bench-batching:
 	PYTHONPATH=src python -m benchmarks.continuous_batching
+
+# Partitioned-table sharded scan on 8 simulated host devices (the module
+# sets xla_force_host_platform_device_count before importing jax).
+bench-sharded:
+	PYTHONPATH=src python -m benchmarks.sharded_scan

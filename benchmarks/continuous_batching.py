@@ -68,9 +68,7 @@ def _requests(store: ModelStore, n: int) -> List[Dict[str, Table]]:
     for i in range(n):
         rows = _REQUEST_ROWS[i % len(_REQUEST_ROWS)]
         lo = (i * 37) % (pi.capacity - rows)
-        out.append({"patient_info": Table(
-            {c: v[lo:lo + rows] for c, v in pi.columns.items()},
-            pi.valid[lo:lo + rows], pi.schema)})
+        out.append({"patient_info": pi.row_slice(lo, lo + rows)})
     return out
 
 
@@ -121,9 +119,7 @@ def _warm_buckets(svc: PredictionService, store: ModelStore,
     b = 16
     while True:
         n = min(b, pi.capacity)
-        svc.run(_SQL, {"patient_info": Table(
-            {c: v[:n] for c, v in pi.columns.items()},
-            pi.valid[:n], pi.schema)})
+        svc.run(_SQL, {"patient_info": pi.row_slice(0, n)})
         if b >= max_total:
             break
         b <<= 1

@@ -23,7 +23,7 @@ def main() -> int:
     from . import (continuous_batching, fig2a_projection_pushdown,
                    fig2b_clustering, fig2c_inlining, fig2d_nn_translation,
                    fig3_integration, lossy_pushdown, plan_cache, pruning,
-                   subplan_reuse)
+                   sharded_scan, subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -47,6 +47,9 @@ def main() -> int:
         ("continuous_batching", lambda: continuous_batching.run(
             n_rows=2_000 if args.quick else 4_000,
             n_requests=32 if args.quick else 64)),
+        # partitioned sharded scan re-execs itself with 8 simulated devices
+        ("sharded_scan", lambda: sharded_scan.run(
+            n_rows=30_000 if args.quick else 200_000)),
     ]
     failures = 0
     for name, job in jobs:

@@ -39,20 +39,39 @@ __all__ = ["compile_plan", "execute", "ExecutionConfig", "compile_stats",
 
 
 class ExecutionConfig:
-    """Knobs for non-native runtimes."""
+    """Knobs for non-native runtimes and partition-parallel execution.
+
+    Sharded execution (``serve/sharded.py``): ``sharded=True`` routes
+    row-local plans over *partitioned* catalog tables through the SPMD
+    partition executor — surviving partitions (post zone-map pruning) are
+    packed into bucket-shaped morsels and placed across a ``data`` mesh of
+    ``shard_devices`` devices (0 = every local device).
+    ``shard_morsel_rows`` caps morsel granularity (a huge table on few
+    devices runs as multiple same-shaped waves instead of one giant
+    executable); ``shard_min_bucket_rows`` floors the pow-2 morsel bucket.
+    """
 
     def __init__(self, container_latency_s: float = 0.05,
                  external_latency_s: float = 0.0,
-                 use_pallas_tree_gemm: bool = False):
+                 use_pallas_tree_gemm: bool = False,
+                 sharded: bool = False,
+                 shard_devices: int = 0,
+                 shard_morsel_rows: int = 1 << 16,
+                 shard_min_bucket_rows: int = 64):
         self.container_latency_s = container_latency_s
         self.external_latency_s = external_latency_s
         self.use_pallas_tree_gemm = use_pallas_tree_gemm
+        self.sharded = sharded
+        self.shard_devices = shard_devices
+        self.shard_morsel_rows = shard_morsel_rows
+        self.shard_min_bucket_rows = shard_min_bucket_rows
 
     def cache_key(self) -> tuple:
         """Hashable identity for compiled-executable caching: two configs
         with equal knobs produce identical executables."""
         return (self.container_latency_s, self.external_latency_s,
-                self.use_pallas_tree_gemm)
+                self.use_pallas_tree_gemm, self.sharded, self.shard_devices,
+                self.shard_morsel_rows, self.shard_min_bucket_rows)
 
 
 # Observability hooks: every compile_plan() call counts under
@@ -134,17 +153,112 @@ def _scores_to_output(scores: jnp.ndarray, task: str, proba: bool
     return scores[:, 0]
 
 
+# ---------------------------------------------------------------------------
+# External / container runtime: pure-numpy host evaluation.
+#
+# The out-of-process runtimes run behind ``jax.pure_callback``, and the
+# callback body must not dispatch jax work: callbacks execute on device
+# execution threads, and under partition-parallel execution
+# (``serve/sharded.py``) every device can sit inside a callback at once —
+# a nested jnp op would then queue behind computations that are themselves
+# blocked on callbacks (observed as a hard deadlock at 8 simulated
+# devices).  It is also the honest simulation: Raven Ext evaluates the
+# model in a *separate* runtime (sp_execute_external_script / ONNX in a
+# container), not in the database engine's compute stream.  Model
+# parameters are snapshotted to host numpy once at closure-build time.
+# ---------------------------------------------------------------------------
+
+def _np_sigmoid(x: np.ndarray) -> np.ndarray:
+    out = np.empty_like(x, dtype=np.float32)
+    pos = x >= 0
+    out[pos] = 1.0 / (1.0 + np.exp(-x[pos]))
+    ex = np.exp(x[~pos])
+    out[~pos] = ex / (1.0 + ex)
+    return out
+
+
+def _tree_scores_np(tree, x: np.ndarray) -> np.ndarray:
+    """Vectorized numpy twin of ``TreeArrays.predict_jnp`` (same fixed
+    depth-bounded traversal, so identical leaf assignment)."""
+    n = x.shape[0]
+    node = np.zeros((n,), np.int32)
+    rows = np.arange(n)
+    for _ in range(max(tree.depth, 1)):
+        is_leaf = tree.left[node] < 0
+        go_left = x[rows, tree.feature[node]] <= tree.threshold[node]
+        nxt = np.where(go_left, tree.left[node], tree.right[node])
+        node = np.where(is_leaf, node, nxt).astype(np.int32)
+    return tree.value[node]
+
+
+def _np_model_fn(model):
+    """Build a ``numpy [n, d] -> numpy [n, k]`` scorer with every
+    parameter already host-resident (no jax objects captured)."""
+    kind = getattr(model, "kind", None)
+    if kind == "decision_tree":
+        tree = model.tree
+        return lambda x: _tree_scores_np(tree, x)
+    if kind == "random_forest":
+        trees = list(model.trees)
+        return lambda x: sum(_tree_scores_np(t, x) for t in trees) \
+            / len(trees)
+    if kind == "gbt":
+        trees, base, lr = list(model.trees), model.base, model.learning_rate
+
+        def gbt(x):
+            out = np.full((x.shape[0],), base, np.float32)
+            for t in trees:
+                out = out + lr * _tree_scores_np(t, x)[:, 0]
+            return out[:, None]
+        return gbt
+    if kind in ("linear_regression", "logistic_regression"):
+        w = np.asarray(model.weights, np.float32)
+        b = np.float32(model.bias)
+        return lambda x: (x @ w + b)[:, None]
+    if kind == "mlp":
+        layers = [(np.asarray(p["w"], np.float32),
+                   np.asarray(p["b"], np.float32)) for p in model.params]
+
+        def mlp(x):
+            h = x
+            for i, (w, b) in enumerate(layers):
+                h = h @ w + b
+                if i < len(layers) - 1:
+                    h = np.maximum(h, 0.0)
+            return h
+        return mlp
+    raise ValueError(f"unknown model kind {kind}")
+
+
+def _scores_to_output_np(scores: np.ndarray, task: str,
+                         proba: bool) -> np.ndarray:
+    """numpy twin of :func:`_scores_to_output`."""
+    if scores.shape[-1] == 1:
+        col = scores[:, 0]
+        if task == "classification":
+            if proba:
+                return _np_sigmoid(col)
+            return (col > 0).astype(np.float32)
+        return col
+    if task == "classification":
+        if proba:
+            e = np.exp(scores - scores.max(axis=-1, keepdims=True))
+            return (e / e.sum(axis=-1, keepdims=True))[:, 1]
+        return np.argmax(scores, axis=-1).astype(np.float32)
+    return scores[:, 0]
+
+
 def _external_predict(model, task: str, proba: bool, latency_s: float):
     """Host-side (numpy) model evaluation behind a pure_callback — the
     Raven Ext / container execution path."""
+    score_fn = _np_model_fn(model)
 
     def host_fn(x: np.ndarray) -> np.ndarray:
         if latency_s > 0:
             time.sleep(latency_s)
-        xs = jnp.asarray(x)
-        scores = _model_scores(model, xs)
-        out = _scores_to_output(scores, task, proba)
-        return np.asarray(out, np.float32)
+        scores = score_fn(np.asarray(x, np.float32))
+        return np.asarray(_scores_to_output_np(scores, task, proba),
+                          np.float32)
 
     def call(x: jnp.ndarray) -> jnp.ndarray:
         shape = jax.ShapeDtypeStruct((x.shape[0],), jnp.float32)

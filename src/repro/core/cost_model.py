@@ -78,6 +78,29 @@ def _predicate_selectivity(pred, catalog, table_hint: Optional[str]) -> float:
     return float(np.clip(sel, 1e-4, 1.0))
 
 
+def _scan_rows(node, catalog) -> float:
+    """Rows a scan actually feeds downstream.  Partition-aware: when the
+    ``partition_pruning`` rule has recorded a surviving-partition set on
+    the scan, only those partitions' rows count — a pruned scan is
+    proportionally cheaper, which is exactly what lets the cost-based
+    implementation choice pick lighter model forms for highly selective
+    partitioned queries."""
+    table = node.attrs["table"]
+    surviving = node.attrs.get("partitions")
+    if surviving is not None:
+        pt = getattr(catalog, "get_partitioned", lambda _n: None)(table)
+        if pt is not None:
+            try:
+                return float(sum(pt.partitions[i].n_rows
+                                 for i in surviving))
+            except IndexError:
+                pass          # stale indices (table re-registered): fall back
+    try:
+        return float(catalog.get_table(table).capacity)
+    except Exception:
+        return 1e6
+
+
 def estimate_rows(plan: Plan, catalog) -> Dict[str, float]:
     """Estimated live-row count at each table node's output."""
     rows: Dict[str, float] = {}
@@ -85,11 +108,7 @@ def estimate_rows(plan: Plan, catalog) -> Dict[str, float]:
     for nid in plan.topo_order():
         n = plan.node(nid)
         if n.op == "scan":
-            try:
-                rows[nid] = float(catalog.get_table(
-                    n.attrs["table"]).capacity)
-            except Exception:
-                rows[nid] = 1e6
+            rows[nid] = _scan_rows(n, catalog)
             src_table[nid] = n.attrs["table"]
         elif n.op == "filter":
             parent = n.inputs[0]

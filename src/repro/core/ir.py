@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set,
 
 __all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature",
            "subtree_signatures", "subtree_nodes", "is_deterministic_subtree",
-           "bucketed_signature"]
+           "bucketed_signature", "sharded_signature"]
 
 
 class Category:
@@ -256,6 +256,19 @@ def bucketed_signature(sig: str, bucket_rows: int) -> str:
     cache under this, so varying batch sizes hit one of O(log max_batch)
     entries rather than forcing a recompile per distinct size."""
     return f"{sig}@rows{int(bucket_rows)}"
+
+
+def sharded_signature(sig: str, bucket_rows: int,
+                      mesh_shape: Tuple[int, ...]) -> str:
+    """Identity of a partition-parallel executable: the structural
+    signature plus the per-device morsel row bucket it was jitted for and
+    the mesh shape it is placed across.  Note the structural half is
+    already **partition-aware**: a scan's surviving-partition set lives in
+    its ``partitions`` attr, which participates in ``canonical_form`` — a
+    plan pruned to a different partition set is a different signature, so
+    pruned and unpruned executions never share an executable entry."""
+    mesh = "x".join(str(int(d)) for d in mesh_shape)
+    return f"{sig}@rows{int(bucket_rows)}@mesh{mesh}"
 
 
 # ---------------------------------------------------------------------------

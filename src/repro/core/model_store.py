@@ -235,6 +235,7 @@ class ModelStore:
     def __init__(self, principal: str = "system"):
         self._models: Dict[str, List[Pipeline]] = {}
         self._tables: Dict[str, Table] = {}
+        self._partitioned: Dict[str, Any] = {}     # name -> PartitionedTable
         self._table_versions: Dict[str, int] = {}
         self._stats: Dict[str, Dict[str, ColumnStats]] = {}
         self._clusters: Dict[str, Any] = {}
@@ -327,10 +328,36 @@ class ModelStore:
 
     # -- tables -----------------------------------------------------------------
     def register_table(self, name: str, table: Table,
-                       max_distinct: int = 64) -> None:
+                       max_distinct: int = 64,
+                       partition_rows: Optional[int] = None) -> None:
+        """Register (a new version of) a table.  ``partition_rows`` turns on
+        row-range partitioning: the table is split into contiguous
+        partitions of that many rows and a zone map (per-column min/max,
+        small-domain bitsets, null count) is collected per partition at
+        registration — the statistics the ``partition_pruning`` rule and
+        the sharded executor consume.  A :class:`PartitionedTable` may also
+        be passed directly (pre-built partitioning)."""
+        from .partition import PartitionedTable
+        partitioned: Optional[PartitionedTable] = None
+        if isinstance(table, PartitionedTable):
+            partitioned = table
+            table = partitioned.table
+        elif partition_rows is not None:
+            partitioned = PartitionedTable.build(table, partition_rows,
+                                                 max_domain=max_distinct)
         with self._lock:
+            version = self._table_versions.get(name, 0) + 1
+            if partitioned is not None:
+                # stamp the registration version on the object itself so
+                # executors can validate a (table, partitioning) pair
+                # without racing separate catalog reads
+                partitioned.version = version
+                self._partitioned[name] = partitioned
+            else:
+                # re-registering without partitioning drops stale zone maps
+                self._partitioned.pop(name, None)
             self._tables[name] = table
-            self._table_versions[name] = self._table_versions.get(name, 0) + 1
+            self._table_versions[name] = version
             stats: Dict[str, ColumnStats] = {}
             valid = np.asarray(table.valid)
             for cname in table.names:
@@ -351,6 +378,11 @@ class ModelStore:
         caches key on it: a sub-plan's *signature* identifies what the plan
         computes, the table version identifies the data it read."""
         return self._table_versions.get(name, 0)
+
+    def get_partitioned(self, name: str):
+        """The :class:`~repro.core.partition.PartitionedTable` registered
+        under ``name``, or ``None`` when the table is unpartitioned."""
+        return self._partitioned.get(name)
 
     def get_table(self, name: str) -> Table:
         if name not in self._tables:

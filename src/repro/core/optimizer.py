@@ -11,6 +11,9 @@ Rule order (data flows top to bottom):
 
 1.  ``constant_folding``        — compiler-style Expr folding
 2.  ``predicate_pushdown``      — relational: filters toward scans
+2b. ``partition_pruning``       — data-skipping: zone maps of partitioned
+                                  tables vs pushed-down predicates skip
+                                  whole partitions (feeds serve/sharded)
 3.  ``predicate_model_pruning`` — data->model: WHERE + table stats prune
                                   trees / fold one-hot groups (incl. the
                                   data-properties variant)
@@ -56,6 +59,11 @@ class OptimizerConfig:
     enable_predicate_pushdown: bool = True
     enable_model_pruning: bool = True
     enable_stats_pruning: bool = True
+    # Zone-map partition skipping for scans of partitioned catalog tables
+    # (core/partition.py).  Off for caller-supplied override tables — their
+    # data need not match the registered zone maps (the serving layer
+    # disables it the same way it disables stats pruning).
+    enable_partition_pruning: bool = True
     enable_projection_pushdown: bool = True
     enable_join_elimination: bool = True
     enable_model_query_splitting: bool = False   # opt-in (duplicates rows)
@@ -90,6 +98,10 @@ class OptimizationReport:
     # replace predict_model nodes but keep the name attr; the serving layer
     # tags cache entries with these for register_model invalidation).
     referenced_models: Tuple[str, ...] = ()
+    # Zone-map partition pruning outcome: table -> (surviving, total)
+    # partition counts for every scan the rule pruned.
+    partitions: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
 
     def log(self, rule: str, detail: str):
         self.entries.append((rule, detail))
@@ -111,9 +123,10 @@ class CrossOptimizer:
     def optimize(self, plan: Plan) -> Tuple[Plan, OptimizationReport]:
         from .rules import (constant_folding, join_elimination,
                             model_inlining, model_query_splitting,
-                            nn_translation, predicate_pruning,
-                            predicate_pushdown, projection_pushdown,
-                            runtime_selection, subplan_dedup)
+                            nn_translation, partition_pruning,
+                            predicate_pruning, predicate_pushdown,
+                            projection_pushdown, runtime_selection,
+                            subplan_dedup)
         cfg = self.config
         report = OptimizationReport()
         if plan.output is not None:
@@ -124,6 +137,9 @@ class CrossOptimizer:
             (True, subplan_dedup.apply),
             (cfg.enable_constant_folding, constant_folding.apply),
             (cfg.enable_predicate_pushdown, predicate_pushdown.apply),
+            # after pushdown (filters sit on scans), before model pruning
+            # (zone maps skip partitions; stats prune model internals)
+            (cfg.enable_partition_pruning, partition_pruning.apply),
             (cfg.enable_model_pruning, predicate_pruning.apply),
             (cfg.enable_projection_pushdown, projection_pushdown.apply),
             (cfg.enable_join_elimination, join_elimination.apply),

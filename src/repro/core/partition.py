@@ -1,0 +1,257 @@
+"""Partitioned tables with per-partition zone maps (classic DB partition
+pruning, applied to prediction queries).
+
+A :class:`PartitionedTable` wraps one :class:`~repro.relational.table.Table`
+with contiguous row-range partitions.  At registration time
+(``ModelStore.register_table(..., partition_rows=...)``) every partition
+gets a **zone map**: per-column min/max over its *valid* rows, a small
+categorical/integer domain bitset when the partition's distinct-value count
+is low, and the partition's null count (in this engine a NULL is an invalid
+*row* — the validity mask — so the null count is per-partition rather than
+per-column).
+
+Zone maps power the ``partition_pruning`` optimizer rule: a conjunctive
+WHERE predicate whose single-column constraints provably exclude every
+valid row of a partition lets the plan skip that partition *statically* —
+the same data-skipping trick every columnar warehouse plays, here feeding
+the sharded SPMD executor (``serve/sharded.py``) which only places
+surviving partitions on devices.
+
+Soundness contract (property-tested in
+``tests/test_partitioned_execution.py``): :meth:`ZoneMap.may_match` may
+return ``True`` for a partition with no matching row (zone maps are
+conservative) but must never return ``False`` for a partition containing a
+valid row that satisfies the constraint.  Selections only ever *narrow*
+the validity mask, so dropping a partition whose valid rows all fail the
+filter chain — or one with no valid rows at all — cannot change any
+downstream result over valid rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..relational.expr import Constraint
+from ..relational.table import Table
+
+__all__ = ["ColumnZone", "ZoneMap", "Partition", "PartitionedTable"]
+
+
+# Domain bitsets above this cardinality are dropped (min/max still held);
+# matches ModelStore's ``max_distinct`` default for column stats.
+_MAX_DOMAIN = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnZone:
+    """Zone-map entry for one column of one partition.
+
+    ``min``/``max`` are over the partition's *valid* rows (``None`` when
+    the partition has no valid rows).  ``domain`` is the exact set of
+    distinct valid values when small (categorical codes, low-cardinality
+    ints) — it makes equality/inequality pruning exact instead of
+    range-approximate.  ``kind`` is the column's numpy dtype kind: zone
+    tests must compare in the dtype the *runtime filter* compares in
+    (see :meth:`ZoneMap.may_match`)."""
+
+    min: Optional[float]
+    max: Optional[float]
+    domain: Optional[FrozenSet[float]] = None
+    kind: str = "f"
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneMap:
+    """Per-partition statistics consulted by the pruning rule."""
+
+    n_rows: int
+    null_count: int                      # invalid rows (bag-semantics NULLs)
+    columns: Dict[str, ColumnZone]
+
+    @property
+    def n_valid(self) -> int:
+        return self.n_rows - self.null_count
+
+    def may_match(self, c: Constraint) -> bool:
+        """Could any *valid* row of this partition satisfy ``c``?
+
+        Conservative: unknown columns/operators answer ``True``.  An
+        all-NULL partition answers ``False`` for every constraint (no
+        valid row exists to match)."""
+        if self.n_valid == 0:
+            return False
+        zone = self.columns.get(c.column)
+        if zone is None or zone.min is None:
+            # no zone for the column -> cannot prove absence; conservative
+            return True
+        try:
+            float(c.value)
+        except (TypeError, ValueError):
+            return True
+        # Compare in the dtype the runtime filter compares in.  With x64
+        # disabled every jnp float comparison runs in float32 — including
+        # an int column promoted against a float constant — so a float64
+        # zone test could disagree with the filter on rounding (e.g.
+        # float32(0.1) > 0.1) and prune a partition whose rows match.
+        # float32 casting is monotone, so cast bounds stay true bounds.
+        if zone.kind == "f" or np.asarray(c.value).dtype.kind == "f":
+            def cast(x):
+                return float(np.float32(x))
+        else:                              # int/bool vs int: exact compare
+            cast = float
+        v = cast(c.value)
+        lo, hi = cast(zone.min), cast(zone.max)
+        domain = frozenset(cast(d) for d in zone.domain) \
+            if zone.domain is not None else None
+        if c.kind == "==":
+            if domain is not None:
+                return v in domain
+            return lo <= v <= hi
+        if c.kind == "!=":
+            if domain is not None:
+                return domain != frozenset((v,))
+            return not (lo == hi == v)
+        if c.kind == "<":
+            return lo < v
+        if c.kind == "<=":
+            return lo <= v
+        if c.kind == ">":
+            return hi > v
+        if c.kind == ">=":
+            return hi >= v
+        return True
+
+    def may_match_all(self, constraints: Sequence[Constraint]) -> bool:
+        """Conjunction: the partition survives only if every constraint
+        could individually match (a conjunct that cannot match any valid
+        row empties the whole AND)."""
+        return all(self.may_match(c) for c in constraints)
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """One contiguous row range ``[start, stop)`` of the base table."""
+
+    index: int
+    start: int
+    stop: int
+    zone: ZoneMap
+
+    @property
+    def n_rows(self) -> int:
+        return self.stop - self.start
+
+
+def _column_zone(arr: np.ndarray, valid: np.ndarray,
+                 max_domain: int) -> ColumnZone:
+    vals = arr[valid]
+    if vals.size == 0:
+        return ColumnZone(min=None, max=None, domain=None)
+    if arr.dtype.kind == "f" and np.isnan(vals).any():
+        # NaN defeats ordered stats (min/max propagate NaN, and a NaN row
+        # *satisfies* any != constraint): publish no stats — the partition
+        # then survives every constraint, which is the sound direction.
+        return ColumnZone(min=None, max=None, domain=None)
+    lo = float(vals.min())
+    hi = float(vals.max())
+    domain: Optional[FrozenSet[float]] = None
+    if arr.dtype.kind in "iub":           # exact domains only for discrete
+        uniq = np.unique(vals)
+        if uniq.size <= max_domain:
+            domain = frozenset(float(v) for v in uniq)
+    return ColumnZone(min=lo, max=hi, domain=domain, kind=arr.dtype.kind)
+
+
+class PartitionedTable:
+    """A table plus its row-range partitions and their zone maps.
+
+    ``version`` is stamped by ``ModelStore.register_table`` (the table's
+    registration counter at the moment this partitioning was installed):
+    executors holding a compiled plan compare the *object's own* stamp
+    against their compile-time snapshot, which stays race-free however
+    catalog reads interleave with a concurrent re-registration."""
+
+    def __init__(self, table: Table, partitions: Sequence[Partition]):
+        self.table = table
+        self.partitions: Tuple[Partition, ...] = tuple(partitions)
+        self.version: int = 0
+        self._host_view = None
+        if self.partitions:
+            stops = [p.stop for p in self.partitions]
+            starts = [p.start for p in self.partitions]
+            if starts[0] != 0 or stops[-1] != table.capacity or any(
+                    a.stop != b.start for a, b in zip(self.partitions,
+                                                      self.partitions[1:])):
+                raise ValueError("partitions must tile the table exactly")
+
+    @classmethod
+    def build(cls, table: Table, partition_rows: int,
+              max_domain: int = _MAX_DOMAIN) -> "PartitionedTable":
+        """Partition ``table`` into contiguous ranges of ``partition_rows``
+        rows (last one ragged) and collect zone maps host-side."""
+        if partition_rows <= 0:
+            raise ValueError(f"partition_rows must be > 0, "
+                             f"got {partition_rows}")
+        n = table.capacity
+        valid = np.asarray(table.valid)
+        cols = {name: np.asarray(table.column(name)) for name in table.names}
+        parts: List[Partition] = []
+        for index, start in enumerate(range(0, n, partition_rows)):
+            stop = min(start + partition_rows, n)
+            pvalid = valid[start:stop]
+            zones = {
+                name: _column_zone(arr[start:stop], pvalid, max_domain)
+                for name, arr in cols.items()
+                if arr.dtype.kind in "iufb"
+            }
+            parts.append(Partition(
+                index=index, start=start, stop=stop,
+                zone=ZoneMap(n_rows=stop - start,
+                             null_count=int((~pvalid).sum()),
+                             columns=zones)))
+        return cls(table, parts)
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.partitions)
+
+    @property
+    def total_rows(self) -> int:
+        return self.table.capacity
+
+    def slice(self, index: int) -> Table:
+        p = self.partitions[index]
+        return self.table.row_slice(p.start, p.stop)
+
+    def host_view(self):
+        """Host numpy snapshot of the base table (columns dict, validity),
+        memoized — the table is immutable between registrations and the
+        sharded executor gathers partition row ranges host-side on every
+        serve, so the device->host transfer should happen once per
+        registration, not once per execution."""
+        if self._host_view is None:
+            self._host_view = (
+                {k: np.asarray(v) for k, v in self.table.columns.items()},
+                np.asarray(self.table.valid))
+        return self._host_view
+
+    def prune(self, constraints: Sequence[Constraint]
+              ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+        """Split partition indices into (surviving, pruned) under a
+        conjunctive constraint list.  All-NULL partitions prune even with
+        no constraints — they contribute no valid rows to anything."""
+        surviving: List[int] = []
+        pruned: List[int] = []
+        for p in self.partitions:
+            if p.zone.n_valid == 0 or not p.zone.may_match_all(constraints):
+                pruned.append(p.index)
+            else:
+                surviving.append(p.index)
+        return tuple(surviving), tuple(pruned)
+
+    def __repr__(self):
+        return (f"PartitionedTable[{self.total_rows} rows, "
+                f"{self.n_partitions} partitions]")

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_data_mesh"]
 
 
 def _make_mesh(shape, axes):
@@ -43,3 +43,14 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(1, n // data))
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(devices: int = 0):
+    """1-D pure data-parallel mesh for partition-parallel scans
+    (``serve/sharded.py``).  ``devices=0`` takes every local device;
+    otherwise clamped to what exists (simulated host devices included —
+    the sharded-scan benchmark sets ``xla_force_host_platform_device_count``
+    before importing jax, exactly like the dry-run)."""
+    n = len(jax.devices())
+    d = n if devices in (0, None) else max(1, min(int(devices), n))
+    return _make_mesh((d,), ("data",))

@@ -200,6 +200,12 @@ class Table:
     def with_valid(self, valid: jnp.ndarray) -> "Table":
         return Table(self.columns, valid, self.schema)
 
+    def row_slice(self, start: int, stop: int) -> "Table":
+        """Contiguous row range ``[start, stop)`` (columns + validity mask);
+        the partition accessor for partitioned scans."""
+        cols = {k: v[start:stop] for k, v in self.columns.items()}
+        return Table(cols, self.valid[start:stop], self.schema)
+
     def select(self, names: Sequence[str]) -> "Table":
         missing = [n for n in names if n not in self.columns]
         if missing:

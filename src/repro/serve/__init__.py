@@ -11,10 +11,12 @@ from .engine import InferenceEngine, Request, ServeConfig
 from .prediction_service import (CompiledPrediction, PredictionService,
                                  PredictionTicket, ServiceStats, SubplanRef)
 from .sampling import sample_token
+from .sharded import Morsel, ShardedExecutor, ShardPlacement, plan_morsels
 
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
            "ServiceStats", "SubplanRef", "CostAwareCache", "CacheEntry",
            "value_nbytes", "AdmissionConfig", "AdmissionLoop",
            "AdmissionQueueFull", "Batcher", "Clock", "ManualClock",
-           "ReadyGroup", "SystemClock"]
+           "ReadyGroup", "SystemClock", "Morsel", "ShardedExecutor",
+           "ShardPlacement", "plan_morsels"]

@@ -121,6 +121,15 @@ class AdmissionConfig:
       of O(log max/min) compiled shapes.
     - ``background`` — start the :class:`AdmissionLoop` thread.  Off for
       deterministic tests that drive ``admission_tick`` by hand.
+    - ``adaptive_latency`` — SLO-aware flush window: instead of the fixed
+      ``latency_budget_s``, the effective budget tracks an EWMA of queue
+      depth and slides between ``min_latency_budget_s`` (idle: serve
+      immediately, nobody is coming to coalesce with) and
+      ``max_latency_budget_s`` (deep queue: wait longer, bigger batches
+      amortize better), saturating when the smoothed depth reaches
+      ``max_batch_requests``.  The EWMA updates at admission and release
+      events (``adaptive_alpha`` smoothing), so it is fully deterministic
+      under a :class:`ManualClock`.
     """
 
     latency_budget_s: float = 0.002
@@ -131,6 +140,10 @@ class AdmissionConfig:
     block_on_full: bool = True
     offer_timeout_s: float = 30.0
     background: bool = True
+    adaptive_latency: bool = False
+    min_latency_budget_s: float = 5e-4
+    max_latency_budget_s: float = 8e-3
+    adaptive_alpha: float = 0.2
 
 
 @dataclasses.dataclass
@@ -163,12 +176,19 @@ class Batcher:
     every wait, so ``notify_all`` keeps everyone honest)."""
 
     def __init__(self, config: AdmissionConfig, clock: Optional[Clock] = None):
+        if config.adaptive_latency \
+                and config.min_latency_budget_s > config.max_latency_budget_s:
+            raise ValueError(
+                f"adaptive latency window inverted: min "
+                f"{config.min_latency_budget_s} > max "
+                f"{config.max_latency_budget_s}")
         self.config = config
         self.clock = clock or SystemClock()
         # RLock so the loop can call next_deadline()/has_ready() while
         # already holding cond (single source of truth for readiness)
         self.cond = threading.Condition(threading.RLock())
         self._queue: List[_Admitted] = []
+        self._depth_ewma = 0.0
         self._closed = False
         # test/observability seams — called synchronously, outside cond
         self.on_admit: Optional[Callable[[Any], None]] = None
@@ -206,6 +226,7 @@ class Batcher:
                 raise RuntimeError("batcher is closed")
             self._queue.append(
                 _Admitted(key, item, self.clock.monotonic(), chunk=chunk))
+            self._observe_depth()
             self.cond.notify_all()       # wake the loop to re-plan its wait
         if self.on_admit is not None:
             self.on_admit(item)
@@ -216,13 +237,40 @@ class Batcher:
             self._closed = True
             self.cond.notify_all()
 
+    # -- adaptive flush window -----------------------------------------------
+    def _observe_depth(self) -> None:
+        """EWMA of queue depth; call with ``cond`` held at admission and
+        release events (event-driven, so ManualClock tests stay exact)."""
+        a = self.config.adaptive_alpha
+        self._depth_ewma += a * (len(self._queue) - self._depth_ewma)
+
+    @property
+    def queue_depth_ewma(self) -> float:
+        with self.cond:
+            return self._depth_ewma
+
+    def effective_latency_budget(self) -> float:
+        """The flush window currently in force: the configured constant,
+        or — under ``adaptive_latency`` — a linear slide from the min to
+        the max budget as the smoothed queue depth approaches one full
+        batch (``max_batch_requests``).  Light load short-circuits to
+        near-immediate service; a deepening queue buys coalescing time."""
+        cfg = self.config
+        if not cfg.adaptive_latency:
+            return cfg.latency_budget_s
+        with self.cond:
+            frac = min(1.0, self._depth_ewma
+                       / max(cfg.max_batch_requests, 1))
+        return cfg.min_latency_budget_s \
+            + (cfg.max_latency_budget_s - cfg.min_latency_budget_s) * frac
+
     # -- consumer side -------------------------------------------------------
     def next_deadline(self) -> Optional[float]:
         with self.cond:
             if not self._queue:
                 return None
             oldest = min(a.admitted_at for a in self._queue)
-            return oldest + self.config.latency_budget_s
+            return oldest + self.effective_latency_budget()
 
     def _grouped(self) -> Dict[Any, List[_Admitted]]:
         groups: Dict[Any, List[_Admitted]] = {}
@@ -240,7 +288,7 @@ class Batcher:
         if len(group) >= self.config.max_batch_requests:
             return "full"
         oldest = min(a.admitted_at for a in group)
-        if now >= oldest + self.config.latency_budget_s:
+        if now >= oldest + self.effective_latency_budget():
             return "deadline"
         return None
 
@@ -275,6 +323,7 @@ class Batcher:
                 # survivors keep their admission order
                 self._queue = [a for a in self._queue
                                if id(a) not in popped_ids]
+                self._observe_depth()
                 self.cond.notify_all()   # space freed: unblock producers
         if self.on_flush is not None:
             for g in ready:

@@ -135,7 +135,13 @@ class CostAwareCache:
             nbytes: Optional[int] = None,
             tags: Iterable[Any] = ()) -> List[Any]:
         """Insert (or refresh) ``key``; returns the keys evicted to make
-        room.  Re-putting an existing key keeps its hit count."""
+        room.  Re-putting an existing key keeps its hit count.
+
+        Bytes-ledger contract (regression-tested): an overwrite *replaces*
+        the key's byte charge — the old entry's bytes are released before
+        the new charge lands, so refreshing a resident key never
+        double-counts against ``max_bytes`` (which would spuriously evict
+        on a no-op re-put)."""
         nbytes = value_nbytes(value) if nbytes is None else int(nbytes)
         with self._lock:
             self._seq += 1

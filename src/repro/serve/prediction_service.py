@@ -105,7 +105,7 @@ from ..core.codegen import (ExecutionConfig, compile_plan, count_jit_trace,
                             pow2_bucket)
 from ..core.ir import (Node, Plan, bucketed_signature,
                        is_deterministic_subtree, plan_signature,
-                       subtree_nodes, subtree_signatures)
+                       sharded_signature, subtree_nodes, subtree_signatures)
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
                               OptimizerConfig, referenced_models)
 from ..core.sql_frontend import parse_query
@@ -113,6 +113,7 @@ from ..relational.table import Schema, Table
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, ReadyGroup, SystemClock)
 from .cache import CostAwareCache, value_nbytes
+from .sharded import ShardedExecutor
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
            "CompiledPrediction", "SubplanRef"]
@@ -173,6 +174,13 @@ class ServiceStats:
     size_flushes: int = 0           # groups released by max_batch_requests
     drain_flushes: int = 0          # groups released by flush()/close()
     queue_rejections: int = 0       # submits refused by backpressure
+    # partition-parallel (sharded) tier
+    sharded_executions: int = 0     # logical executions routed to the mesh
+    shard_compiles: int = 0         # sharded twin executables built
+    shard_hits: int = 0             # sharded executions reusing a twin
+    shard_waves: int = 0            # morsel waves dispatched
+    partitions_scanned: int = 0     # partitions actually placed on devices
+    partitions_pruned: int = 0      # partitions skipped via zone maps
 
 
 @dataclasses.dataclass
@@ -212,6 +220,12 @@ class CompiledPrediction:
                                      # re-jit it rather than re-running
                                      # optimize + codegen
     bucket_rows: Optional[int] = None      # set on shape-bucket entries
+    # Catalog table versions at compile time.  The sharded path compares
+    # them before trusting the plan's pruned-partition set: a table
+    # re-registered mid-flight (invalidation hooks evict this entry, but
+    # an execution already holding it races that) may keep its partition
+    # *count* while its data — and therefore its zone maps — changed.
+    catalog_versions: Tuple[Tuple[str, int], ...] = ()
 
 
 class PredictionTicket:
@@ -428,6 +442,10 @@ class PredictionService:
             if enable_result_cache else None)
         self._lock = threading.Lock()          # stats
         self._flush_lock = threading.Lock()    # serializes batch execution
+        # Partition-parallel executor (ExecutionConfig.sharded): built on
+        # first sharded execution so unsharded services never touch the
+        # device mesh.
+        self._shard_exec: Optional[ShardedExecutor] = None
         # Admission: explicit-flush mode and the background loop share one
         # Batcher — ``admission=None`` keeps the PR-1 contract (requests
         # wait for flush(), queue effectively unbounded since only the
@@ -695,10 +713,13 @@ class PredictionService:
         if tables and any(n.attrs["table"] in tables
                           for n in plan.nodes.values() if n.op == "scan"):
             # Caller-supplied tables may violate catalog stats; stats-derived
-            # pruning would then silently mispredict.  WHERE-clause-derived
-            # pruning stays on (sound for any data).
-            opt_config = dataclasses.replace(opt_config,
-                                             enable_stats_pruning=False)
+            # pruning would then silently mispredict — and zone maps
+            # collected at registration say nothing about request data, so
+            # partition pruning is equally unsound here.  WHERE-clause-
+            # derived pruning stays on (sound for any data).
+            opt_config = dataclasses.replace(
+                opt_config, enable_stats_pruning=False,
+                enable_partition_pruning=False)
         optimized, report = CrossOptimizer(
             self.catalog, opt_config).optimize(plan)
         model_names = report.referenced_models
@@ -752,7 +773,9 @@ class PredictionService:
             key=key, signature=sig, plan=exec_plan, report=report, fn=fn,
             scan_tables=scans, chunk_table=chunk_table,
             compile_time_s=compile_time, model_names=model_names,
-            capture=capture_ref, splice=splice_ref, raw_fn=raw_fn)
+            capture=capture_ref, splice=splice_ref, raw_fn=raw_fn,
+            catalog_versions=tuple((t, self._table_version(t))
+                                   for t in full_scans))
         tags = tuple(("model", m) for m in model_names) \
             + tuple(("table", t) for t in full_scans)
         evicted = self._exec_cache.put(
@@ -858,6 +881,11 @@ class PredictionService:
 
             return {
                 "queue_depth": depth,
+                # flush window currently in force (== the configured
+                # constant unless adaptive_latency slides it between the
+                # min/max budgets on the queue-depth EWMA)
+                "latency_budget_s": self.batcher.effective_latency_budget(),
+                "queue_depth_ewma": self.batcher.queue_depth_ewma,
                 "submitted": s.submitted,
                 "served": served,
                 "coalesce_rate": s.coalesced_requests / served
@@ -902,25 +930,133 @@ class PredictionService:
             self.stats.batch_executions += 1
         if compiled.splice is not None:
             out = self._execute_spliced(compiled, tabs)
+        elif self._should_shard(compiled, tables):
+            out = self._execute_sharded(compiled, tabs, store_capture)
         elif (self.chunk_rows and compiled.chunk_table is not None
                 and tabs[compiled.chunk_table].capacity > self.chunk_rows):
             out = self._execute_chunked(compiled, tabs, store_capture)
         else:
-            t0 = time.perf_counter()
-            raw = compiled.fn(tabs)
-            raw = jax.block_until_ready(raw)
-            if compiled.capture is not None:
-                out, captured = raw
-                if store_capture:
-                    self._store_result(compiled.capture, captured,
-                                       time.perf_counter() - t0,
-                                       producer=compiled.key)
-            else:
-                out = raw
+            out = self._execute_whole(compiled, tabs, store_capture)
         # A served result is a *ready* result: external/container plans run
         # host callbacks under async dispatch, and letting those trail the
         # ticket resolution deadlocks against the caller's next dispatch.
         return jax.block_until_ready(out)
+
+    def _execute_whole(self, compiled: CompiledPrediction,
+                       tabs: Dict[str, Table],
+                       store_capture: bool = True) -> Any:
+        """One whole-input execution of the fused program (the base tier;
+        also the fallback when a sharded execution loses its partitioning
+        mid-flight)."""
+        t0 = time.perf_counter()
+        raw = compiled.fn(tabs)
+        raw = jax.block_until_ready(raw)
+        if compiled.capture is None:
+            return raw
+        out, captured = raw
+        if store_capture:
+            self._store_result(compiled.capture, captured,
+                               time.perf_counter() - t0,
+                               producer=compiled.key)
+        return out
+
+    # -- partition-parallel (sharded) tier ------------------------------------
+    def _should_shard(self, compiled: CompiledPrediction,
+                      tables: Optional[Dict[str, Table]]) -> bool:
+        """Sharded execution applies to row-local single-scan plans over a
+        *partitioned, non-overridden* catalog table.  Spliced plans are
+        excluded (a materialized slot's rows would have to be re-aligned
+        with each morsel's partition rows); everything else — admission
+        coalescing, result-cache producers for unsharded services,
+        invalidation — works unchanged around this branch."""
+        if not self.execution_config.sharded:
+            return False
+        if compiled.chunk_table is None or compiled.splice is not None:
+            return False
+        if tables and compiled.chunk_table in tables:
+            return False            # request-supplied data: no zone maps
+        getter = getattr(self.catalog, "get_partitioned", None)
+        return getter is not None \
+            and getter(compiled.chunk_table) is not None
+
+    def _shard_executor(self) -> ShardedExecutor:
+        if self._shard_exec is None:
+            self._shard_exec = ShardedExecutor(
+                devices=self.execution_config.shard_devices)
+        return self._shard_exec
+
+    def _execute_sharded(self, compiled: CompiledPrediction,
+                         tabs: Dict[str, Table],
+                         store_capture: bool = True) -> Any:
+        """Place the plan's surviving partitions across the data mesh and
+        run the fused program per morsel (``serve/sharded.py``).  The
+        partitioned table is re-read from the catalog (not the tabs dict)
+        so partition ranges and data always describe the same object.
+        Captures are not stored from this path: a morsel's output rows are
+        partition slices, not the whole-table value the result-cache key
+        would claim."""
+        cfg = self.execution_config
+        name = compiled.chunk_table
+        pt = self.catalog.get_partitioned(name)
+        if pt is None:
+            # partitioning vanished between _should_shard and here (the
+            # table was re-registered unpartitioned): serve whole-table
+            return self._execute_whole(compiled, tabs, store_capture)
+        executor = self._shard_executor()
+        scan = next(n for n in compiled.plan.nodes.values()
+                    if n.op == "scan")
+        surviving = scan.attrs.get("partitions")
+        # pt carries its own registration stamp (set under the store lock),
+        # so this check cannot be fooled by a re-registration interleaving
+        # separate catalog reads: stale stamp -> the pruned set describes
+        # other data -> scan every partition of the pt we actually hold —
+        # always sound, pruning is only ever an optimization
+        if surviving is None \
+                or (name, pt.version) not in compiled.catalog_versions \
+                or any(i >= pt.n_partitions for i in surviving):
+            surviving = tuple(range(pt.n_partitions))
+        parts = [pt.partitions[i] for i in surviving]
+        placement = executor.plan(
+            parts, min_bucket_rows=cfg.shard_min_bucket_rows,
+            morsel_rows=cfg.shard_morsel_rows)
+        twin, fresh, tags = self._sharded_executable(
+            compiled, placement.bucket_rows)
+        unwrap = (lambda raw: raw[0]) if compiled.capture is not None \
+            else None
+        t0 = time.perf_counter()
+        out = executor.execute(twin.fn, pt, name, parts, placement,
+                               unwrap=unwrap)
+        twin.serves += 1
+        self._record_twin_cost(twin, fresh, tags,
+                               time.perf_counter() - t0)
+        with self._lock:
+            self.stats.sharded_executions += 1
+            self.stats.shard_waves += placement.n_waves
+            self.stats.partitions_scanned += len(parts)
+            self.stats.partitions_pruned += pt.n_partitions - len(parts)
+        return out
+
+    def shard_info(self) -> Dict[str, Any]:
+        """Partition-parallel ledger: mesh geometry plus how much work the
+        zone maps skipped."""
+        executor = self._shard_exec
+        with self._lock:
+            s = self.stats
+            total = s.partitions_scanned + s.partitions_pruned
+            return {
+                "enabled": self.execution_config.sharded,
+                "devices": executor.n_devices
+                if executor is not None else None,
+                "mesh_shape": executor.mesh_shape
+                if executor is not None else None,
+                "sharded_executions": s.sharded_executions,
+                "shard_compiles": s.shard_compiles,
+                "shard_hits": s.shard_hits,
+                "shard_waves": s.shard_waves,
+                "partitions_scanned": s.partitions_scanned,
+                "partitions_pruned": s.partitions_pruned,
+                "prune_rate": s.partitions_pruned / total if total else 0.0,
+            }
 
     def _execute_spliced(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table]) -> Any:
@@ -1091,25 +1227,47 @@ class PredictionService:
 
     def _bucket_executable(self, compiled: CompiledPrediction, bucket: int
                            ) -> Tuple[CompiledPrediction, bool, Tuple]:
+        """Shape-specialized twin of ``compiled`` for stacked micro-batches
+        (see :meth:`_twin_executable`)."""
+        return self._twin_executable(
+            compiled, bucketed_signature(compiled.signature, bucket),
+            bucket, "bucket_hits", "bucket_compiles")
+
+    def _sharded_executable(self, compiled: CompiledPrediction, bucket: int
+                            ) -> Tuple[CompiledPrediction, bool, Tuple]:
+        """Shape-specialized twin for partition-parallel execution: one
+        executable per (signature, morsel bucket, mesh shape) — every
+        device and every wave runs the same trace, so the compile count is
+        independent of partition and device counts."""
+        return self._twin_executable(
+            compiled, sharded_signature(compiled.signature, bucket,
+                                        self._shard_exec.mesh_shape),
+            bucket, "shard_hits", "shard_compiles")
+
+    def _twin_executable(self, compiled: CompiledPrediction,
+                         derived_sig: str, bucket: int, hit_stat: str,
+                         compile_stat: str
+                         ) -> Tuple[CompiledPrediction, bool, Tuple]:
         """Shape-specialized twin of ``compiled``: same optimized plan and
         codegen closure, its own ``jax.jit`` wrapper, cached under the
-        (cache key, bucketed signature) pair so each row bucket compiles at
-        most once while it stays resident.  Returns ``(executable, fresh,
-        tags)`` — ``fresh`` lets the caller time the first (tracing)
+        (cache key, derived signature) pair so each derived shape compiles
+        at most once while it stays resident.  Returns ``(executable,
+        fresh, tags)`` — ``fresh`` lets the caller time the first (tracing)
         execution and re-put the observed cost (with the same ``tags``, so
         a twin whose zero-cost initial insert self-evicted is re-created
         tagged and stays reachable by invalidation), giving eviction an
         honest replacement price instead of the near-zero closure-wrapping
         time."""
-        bkey = (compiled.key,
-                bucketed_signature(compiled.signature, bucket))
+        bkey = (compiled.key, derived_sig)
         hit = self._exec_cache.get(bkey, count=False)
         if hit is not None:
             with self._lock:
-                self.stats.bucket_hits += 1
+                setattr(self.stats, hit_stat,
+                        getattr(self.stats, hit_stat) + 1)
             return hit, False, ()
         with self._lock:
-            self.stats.bucket_compiles += 1
+            setattr(self.stats, compile_stat,
+                    getattr(self.stats, compile_stat) + 1)
         derived = dataclasses.replace(
             compiled, key=bkey, fn=self._jit(compiled.raw_fn),
             bucket_rows=bucket, serves=0)
@@ -1125,6 +1283,22 @@ class PredictionService:
             self.stats.evictions += len(evicted)
         entry = self._exec_cache.entry(bkey)
         return (entry.value if entry is not None else derived), True, tags
+
+    def _record_twin_cost(self, twin: CompiledPrediction, fresh: bool,
+                          tags: Tuple, elapsed_s: float) -> None:
+        """After a *fresh* twin's first (tracing) execution, re-put it with
+        the observed cost so eviction sees an honest replacement price
+        instead of the near-zero closure-wrapping time; tags are repeated
+        so that, if the zero-cost insert self-evicted under a full cache,
+        the entry re-created here stays reachable by model/table
+        invalidation.  Shared by the stacked (bucket) and sharded tiers —
+        the re-put contract must not diverge between them."""
+        if not fresh:
+            return
+        evicted = self._exec_cache.put(twin.key, twin, cost_s=elapsed_s,
+                                       nbytes=0, tags=tags)
+        with self._lock:
+            self.stats.evictions += len(evicted)
 
     def _execute_direct(self, compiled: CompiledPrediction,
                         tabs: Dict[str, Table]) -> Any:
@@ -1167,16 +1341,8 @@ class PredictionService:
             stacked = _stack_pad_host(inputs, bucket)
             t0 = time.perf_counter()
             out = self._execute_direct(bcompiled, {name: stacked})
-            if fresh:
-                # record the observed trace+compile cost for eviction;
-                # tags repeated so that, if the zero-cost insert above
-                # self-evicted under a full cache, the entry re-created
-                # here stays reachable by model/table invalidation
-                evicted = self._exec_cache.put(
-                    bcompiled.key, bcompiled,
-                    cost_s=time.perf_counter() - t0, nbytes=0, tags=btags)
-                with self._lock:
-                    self.stats.evictions += len(evicted)
+            self._record_twin_cost(bcompiled, fresh, btags,
+                                   time.perf_counter() - t0)
         # no device-side trim: the host-side split only reads rows up to
         # sum(sizes), so the padded tail is simply never referenced
         for p, piece in zip(group, _split_output_host(out, sizes)):

@@ -1,0 +1,309 @@
+"""Partition-parallel SPMD execution of fused prediction plans.
+
+``core/partition.py`` gives tables row-range partitions with zone maps and
+the ``partition_pruning`` rule marks each scan with its surviving
+partitions; this module actually *runs* the fused plan data-parallel over
+those partitions on a 1-D ``data`` mesh (``launch.mesh.make_data_mesh`` —
+real accelerators in production, simulated host devices via
+``xla_force_host_platform_device_count`` in the benchmark and dry-run).
+
+Two pieces:
+
+- :func:`plan_morsels` — the **partition-morsel scheduler**.  Surviving
+  partitions pack (in partition order, so reassembly preserves row order)
+  into *morsels* of at most one shared power-of-two row bucket, and
+  morsels are assigned to devices longest-processing-time-first.  When the
+  partition count exceeds the device count a device simply owns several
+  morsels and executes them as sequential waves.  Every morsel pads to
+  the *same* bucket, so however many partitions/devices/waves are in
+  play, exactly one executable shape reaches XLA per (plan signature,
+  bucket, mesh shape) — the compile-count discipline the serving layer's
+  shape-bucketed executables already enforce for batching.
+
+- :class:`ShardedExecutor` — SPMD execution: **one** jitted closure (the
+  same program), dispatched per-device on that device's morsels from one
+  worker thread per device.  ``jax.jit`` traces the closure once and
+  reuses the trace across devices, so warm repeats compile nothing.  Per
+  -device threads (rather than a single GSPMD computation over a
+  ``NamedSharding``-placed global array) are a deliberate choice: the
+  external/container runtimes lower to ``pure_callback``, and host
+  callbacks inside an SPMD-partitioned computation deadlock on this JAX
+  version — per-device dispatch gives the same single-program
+  multiple-data semantics with callbacks that genuinely overlap (the
+  out-of-process hop is the dominant cost the paper's Raven Ext
+  measurements fight).
+
+Pad rows carry ``valid=False`` and row-local plans never mix rows, so
+reassembling the per-partition output slices in partition order is
+bit-exact against single-device execution over the same partitions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.codegen import pow2_bucket
+from ..core.partition import Partition
+from ..distributed.sharding import data_axes_of
+from ..relational.table import Table
+
+__all__ = ["Morsel", "ShardPlacement", "ShardedExecutor", "plan_morsels"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Morsel:
+    """A unit of device work: one or more whole partitions (ascending
+    index; partitions are atomic — never split across morsels)."""
+
+    partitions: Tuple[int, ...]
+    rows: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlacement:
+    """Output of the morsel scheduler: who runs what at which shape."""
+
+    bucket_rows: int                        # shared padded morsel shape
+    assignments: Tuple[Tuple[Morsel, ...], ...]   # per device, in wave order
+    total_rows: int
+
+    @property
+    def n_morsels(self) -> int:
+        return sum(len(a) for a in self.assignments)
+
+    @property
+    def n_waves(self) -> int:
+        return max((len(a) for a in self.assignments), default=0)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_morsels * self.bucket_rows
+
+
+def plan_morsels(part_rows: Sequence[Tuple[int, int]], n_devices: int,
+                 min_bucket_rows: int = 64,
+                 morsel_rows: int = 1 << 16) -> ShardPlacement:
+    """Pack surviving partitions into bucket-shaped morsels and balance
+    them across ``n_devices``.
+
+    ``part_rows`` is ``(partition index, row count)`` in ascending index
+    order.  The bucket is the power-of-two cover of the ideal per-device
+    share, clamped below by the largest single partition (partitions are
+    atomic) and above by ``morsel_rows`` (the morsel granularity cap that
+    turns a huge table on few devices into multiple waves instead of one
+    giant executable)."""
+    n_devices = max(1, int(n_devices))
+    if not part_rows:
+        return ShardPlacement(
+            bucket_rows=max(1, int(min_bucket_rows)),
+            assignments=tuple(() for _ in range(n_devices)), total_rows=0)
+    total = sum(r for _, r in part_rows)
+    largest = max(r for _, r in part_rows)
+    target = -(-total // n_devices)                       # ceil
+    cap = max(int(morsel_rows), largest)
+    bucket = pow2_bucket(min(max(target, largest), cap),
+                         min_rows=min_bucket_rows)
+
+    morsels: List[Morsel] = []
+    cur: List[int] = []
+    cur_rows = 0
+    for idx, rows in part_rows:
+        if cur and cur_rows + rows > bucket:
+            morsels.append(Morsel(tuple(cur), cur_rows))
+            cur, cur_rows = [], 0
+        cur.append(idx)
+        cur_rows += rows
+    if cur:
+        morsels.append(Morsel(tuple(cur), cur_rows))
+
+    # LPT: biggest morsel to the least-loaded device (ties by device id).
+    loads = [0] * n_devices
+    per_device: List[List[Morsel]] = [[] for _ in range(n_devices)]
+    for m in sorted(morsels, key=lambda m: -m.rows):
+        d = min(range(n_devices), key=lambda i: (loads[i], i))
+        per_device[d].append(m)
+        loads[d] += m.rows
+    return ShardPlacement(bucket_rows=bucket,
+                          assignments=tuple(tuple(a) for a in per_device),
+                          total_rows=total)
+
+
+def _pad_rows(arr: np.ndarray, pad: int) -> np.ndarray:
+    if pad <= 0:
+        return arr
+    return np.pad(arr, [(0, pad)] + [(0, 0)] * (arr.ndim - 1))
+
+
+class ShardedExecutor:
+    """Runs a fused row-local plan over the surviving partitions of one
+    scanned table, data-parallel across a ``data`` mesh."""
+
+    def __init__(self, mesh=None, devices: int = 0):
+        if mesh is None:
+            from ..launch.mesh import make_data_mesh
+            mesh = make_data_mesh(devices)
+        self.mesh = mesh
+        axes = data_axes_of(mesh) or tuple(mesh.axis_names)
+        if tuple(mesh.axis_names) != axes:
+            raise ValueError(
+                f"sharded execution wants a pure data mesh, got axes "
+                f"{mesh.axis_names}")
+        self.devices: List[Any] = list(np.asarray(mesh.devices).reshape(-1))
+        self.mesh_shape: Tuple[int, ...] = tuple(
+            np.asarray(mesh.devices).shape)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    def plan(self, partitions: Sequence[Partition],
+             min_bucket_rows: int = 64,
+             morsel_rows: int = 1 << 16) -> ShardPlacement:
+        return plan_morsels([(p.index, p.n_rows) for p in partitions],
+                            self.n_devices, min_bucket_rows=min_bucket_rows,
+                            morsel_rows=morsel_rows)
+
+    def execute(self, fn: Callable[[Dict[str, Table]], Any], source: Any,
+                scan_name: str, partitions: Sequence[Partition],
+                placement: ShardPlacement,
+                unwrap: Optional[Callable[[Any], Any]] = None) -> Any:
+        """Execute ``fn`` over ``partitions`` of ``source`` per
+        ``placement`` and reassemble the output in partition order.
+
+        ``source`` is the base ``Table`` or — preferably — the
+        ``PartitionedTable``, whose memoized :meth:`host_view` amortizes
+        the device->host snapshot across serves (it would otherwise be
+        paid per execution, proportional to *total* table size however
+        many partitions were pruned).  ``fn`` must be the jitted fused
+        plan taking ``{scan_name: Table}``; ``unwrap`` post-processes each
+        morsel's raw result (the serving layer drops capture outputs with
+        it).  Returns a ``Table`` or matrix whose rows are exactly the
+        surviving partitions' rows, in their original order — bit-exact
+        against a single-device run of the same plan over the same
+        partitions."""
+        part_map = {p.index: p for p in partitions}
+        if hasattr(source, "host_view"):           # PartitionedTable
+            host_cols, host_valid = source.host_view()
+            table = source.table
+        else:
+            table = source
+            host_cols = {k: np.asarray(v) for k, v in table.columns.items()}
+            host_valid = np.asarray(table.valid)
+        bucket = placement.bucket_rows
+
+        def prepare_morsel(device, morsel: Morsel) -> Table:
+            """Gather + pad + upload one morsel's input.  Runs on the
+            caller thread, serially: the numpy slicing and device_put are
+            GIL-bound, and doing them inside the device workers makes the
+            workers contend with each other instead of overlapping their
+            (GIL-free) execution waits."""
+            parts = [part_map[i] for i in morsel.partitions]
+            pad = bucket - morsel.rows
+
+            def gather(arr: np.ndarray) -> np.ndarray:
+                pieces = [arr[p.start:p.stop] for p in parts]
+                out = pieces[0] if len(pieces) == 1 \
+                    else np.concatenate(pieces, axis=0)
+                return _pad_rows(out, pad)
+
+            cols = {k: jax.device_put(gather(arr), device)
+                    for k, arr in host_cols.items()}
+            valid = jax.device_put(gather(host_valid), device)
+            return Table(cols, valid, table.schema)
+
+        def run_morsel(morsel: Morsel,
+                       morsel_table: Table) -> List[Tuple[int, Any]]:
+            parts = [part_map[i] for i in morsel.partitions]
+            raw = fn({scan_name: morsel_table})
+            if unwrap is not None:
+                raw = unwrap(raw)
+            raw = jax.block_until_ready(raw)
+            # split back per partition, host-side (one transfer per morsel)
+            out: List[Tuple[int, Any]] = []
+            if isinstance(raw, Table):
+                out_cols = {k: np.asarray(v) for k, v in raw.columns.items()}
+                out_valid = np.asarray(raw.valid)
+                off = 0
+                for p in parts:
+                    piece = ({k: v[off:off + p.n_rows]
+                              for k, v in out_cols.items()},
+                             out_valid[off:off + p.n_rows], raw.schema)
+                    out.append((p.index, piece))
+                    off += p.n_rows
+            else:
+                arr = np.asarray(raw)
+                off = 0
+                for p in parts:
+                    out.append((p.index, arr[off:off + p.n_rows]))
+                    off += p.n_rows
+            return out
+
+        active = [d for d in range(self.n_devices)
+                  if placement.assignments[d]]
+        prepared = {d: [(m, prepare_morsel(self.devices[d], m))
+                        for m in placement.assignments[d]]
+                    for d in active}
+
+        def run_device(d: int) -> List[Tuple[int, Any]]:
+            pieces: List[Tuple[int, Any]] = []
+            for morsel, morsel_table in prepared[d]:
+                pieces.extend(run_morsel(morsel, morsel_table))
+            return pieces
+        if not active:
+            # every partition pruned: run one all-padding morsel to learn
+            # the output schema, then keep zero of its rows
+            zeros = {k: np.zeros((bucket,) + arr.shape[1:], arr.dtype)
+                     for k, arr in host_cols.items()}
+            gtab = Table({k: jax.device_put(v, self.devices[0])
+                          for k, v in zeros.items()},
+                         jax.device_put(np.zeros(bucket, np.bool_),
+                                        self.devices[0]), table.schema)
+            raw = fn({scan_name: gtab})
+            if unwrap is not None:
+                raw = unwrap(raw)
+            raw = jax.block_until_ready(raw)
+            if isinstance(raw, Table):
+                return Table(
+                    {k: v[:0] for k, v in raw.columns.items()},
+                    raw.valid[:0], raw.schema)
+            return raw[:0]
+
+        results: Dict[int, List[Tuple[int, Any]]] = {}
+        errors: List[BaseException] = []
+
+        def worker(d: int):
+            try:
+                results[d] = run_device(d)
+            except BaseException as err:   # propagate to the caller
+                errors.append(err)
+
+        if len(active) == 1:
+            results[active[0]] = run_device(active[0])
+        else:
+            threads = [threading.Thread(target=worker, args=(d,),
+                                        name=f"shard-exec-{d}")
+                       for d in active]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+
+        pieces = sorted((pair for r in results.values() for pair in r),
+                        key=lambda pair: pair[0])
+        if isinstance(pieces[0][1], tuple):        # Table morsels
+            schema = pieces[0][1][2]
+            names = pieces[0][1][0].keys()
+            cols = {k: jnp.asarray(
+                np.concatenate([p[1][0][k] for p in pieces], axis=0))
+                for k in names}
+            valid = jnp.asarray(np.concatenate([p[1][1] for p in pieces]))
+            return Table(cols, valid, schema)
+        return jnp.asarray(np.concatenate([p[1] for p in pieces], axis=0))

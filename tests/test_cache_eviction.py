@@ -41,6 +41,31 @@ def test_bytes_budget_respected_after_every_insert():
     assert cache.evictions > 0
 
 
+def test_same_key_overwrite_does_not_double_count_bytes():
+    """Regression: re-inserting an existing key must replace its byte
+    charge, not add a second one — under a tight budget a double-counted
+    overwrite would blow ``bytes_in_use`` past the budget and spuriously
+    evict the entry (or an innocent bystander) on a no-op refresh."""
+    cache = CostAwareCache(max_entries=8, max_bytes=250)
+    payload = np.zeros(25, np.float32)            # 100 bytes
+    cache.put("a", payload, cost_s=1.0)
+    cache.put("b", payload, cost_s=1.0)
+    assert cache.bytes_in_use == 200
+    for _ in range(5):                            # refreshes, same size
+        evicted = cache.put("a", payload, cost_s=1.0)
+        assert evicted == []
+        assert cache.bytes_in_use == 200
+    # size-changing overwrite: charge tracks the new payload exactly
+    cache.put("a", np.zeros(10, np.float32), cost_s=1.0)    # 40 bytes
+    assert cache.bytes_in_use == 140
+    cache.put("a", payload, cost_s=1.0, nbytes=100)         # explicit nbytes
+    assert cache.bytes_in_use == 200
+    assert sorted(cache.keys()) == ["a", "b"]
+    # the ledger always equals the sum of resident entries' charges
+    assert cache.bytes_in_use == sum(
+        cache.entry(k).nbytes for k in cache.keys())
+
+
 def test_entry_larger_than_budget_never_retained():
     cache = CostAwareCache(max_entries=10, max_bytes=100)
     cache.put("small", 1, cost_s=1.0, nbytes=40)

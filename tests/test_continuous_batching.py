@@ -200,6 +200,60 @@ def test_queue_latency_percentiles_from_fake_clock(base):
     assert info["coalesce_rate"] == pytest.approx(0.5)
 
 
+def test_adaptive_budget_shrinks_under_light_load(base):
+    """SLO-aware flush window: with one lone request (queue-depth EWMA of
+    1 against a 64-request batch cap) the effective budget sits just above
+    the configured *minimum* — the request is served almost immediately
+    where the fixed 1s budget would have parked it."""
+    store, full, _ = base
+    clock = ManualClock()
+    svc = _manual_service(store, clock, adaptive_latency=True,
+                          min_latency_budget_s=0.01,
+                          max_latency_budget_s=0.65,
+                          adaptive_alpha=1.0, max_batch_requests=64)
+    assert svc.admission_info()["latency_budget_s"] == \
+        pytest.approx(0.01)                       # idle: min budget
+    svc.submit(SQL, {"patient_info": _sub(full, 0, 5)})
+    budget = svc.admission_info()["latency_budget_s"]
+    assert budget == pytest.approx(0.01 + 0.64 / 64)
+    clock.advance(0.005)
+    assert svc.admission_tick() == 0              # inside even the min
+    clock.advance(0.03)                           # past the shrunk window
+    assert svc.admission_tick() == 1
+    assert svc.stats.deadline_flushes == 1
+
+
+def test_adaptive_budget_grows_as_queue_deepens(base):
+    """A deepening queue slides the window toward the max budget: the
+    same elapsed wait that flushes under light load keeps coalescing
+    under heavy load."""
+    store, full, _ = base
+    clock = ManualClock()
+    svc = _manual_service(store, clock, adaptive_latency=True,
+                          min_latency_budget_s=0.01,
+                          max_latency_budget_s=0.65,
+                          adaptive_alpha=1.0, max_batch_requests=16)
+    for i in range(8):                            # EWMA(alpha=1) -> depth 8
+        svc.submit(SQL, {"patient_info": _sub(full, 5 * i, 5)})
+    info = svc.admission_info()
+    assert info["queue_depth_ewma"] == pytest.approx(8.0)
+    assert info["latency_budget_s"] == pytest.approx(0.01 + 0.64 * 0.5)
+    clock.advance(0.05)                           # light-load flush point
+    assert svc.admission_tick() == 0              # still coalescing
+    clock.advance(0.30)
+    assert svc.admission_tick() == 8              # grown window expired
+    assert svc.stats.deadline_flushes == 1
+    # queue drained: the EWMA decays toward idle and the window shrinks
+    assert svc.admission_info()["latency_budget_s"] < 0.33
+
+
+def test_adaptive_window_inverted_raises(base):
+    store, _, _ = base
+    with pytest.raises(ValueError):
+        _manual_service(store, ManualClock(), adaptive_latency=True,
+                        min_latency_budget_s=0.5, max_latency_budget_s=0.1)
+
+
 # ---------------------------------------------------------------------------
 # 2. Bucketed-padded execution is bit-exact vs natural-shape execution
 # ---------------------------------------------------------------------------

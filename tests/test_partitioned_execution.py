@@ -1,0 +1,522 @@
+"""Partitioned-table sharded execution + zone-map partition pruning.
+
+Four layers:
+
+1. **Zone maps / PartitionedTable units** — registration-time collection
+   (min/max, small-domain bitsets, null counts), ragged tails, all-NULL
+   partitions.
+2. **Morsel scheduler units** — one shared pow-2 bucket whatever the
+   partition/device ratio, partitions never split, LPT balance, waves when
+   partitions exceed devices, empty placements.
+3. **Pruning soundness** (hypothesis when available, plus deterministic
+   pinned cases): a pruned partition never contains a valid row satisfying
+   the predicate, and sharded pruned execution is bit-exact on valid rows
+   against unpruned single-device execution — including all-NULL and
+   single-row partitions.
+4. **Service integration** — `ExecutionConfig(sharded=True)` routes
+   row-local plans over partitioned catalog tables through the sharded
+   executor; warm repeats compile nothing; caller-supplied override tables
+   never prune or shard; `shard_info()`/`OptimizationReport` ledgers.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CrossOptimizer, ExecutionConfig, ModelStore,
+                        OptimizerConfig, compile_plan)
+from repro.core.cost_model import estimate_rows
+from repro.core.ir import Plan, plan_signature
+from repro.core.partition import PartitionedTable
+from repro.relational.expr import col
+from repro.relational.table import Table
+from repro.serve import PredictionService, plan_morsels
+from repro.serve.sharded import ShardedExecutor
+
+pytestmark = pytest.mark.tier1
+
+
+def _table(values, valid=None, **extra):
+    cols = {"a": np.asarray(values)}
+    for k, v in extra.items():
+        cols[k] = np.asarray(v)
+    t = Table.from_pydict(cols)
+    if valid is not None:
+        t = t.with_valid(np.asarray(valid, bool))
+    return t
+
+
+def _filter_plan(pred) -> Plan:
+    plan = Plan()
+    s = plan.emit("scan", "RA", [], "table", table="t")
+    plan.output = plan.emit("filter", "RA", [s], "table", predicate=pred)
+    return plan
+
+
+def _optimize(store, plan, **cfg):
+    return CrossOptimizer(store, OptimizerConfig(**cfg)).optimize(plan)
+
+
+def _valid_rows(table: Table):
+    mask = np.asarray(table.valid)
+    return {k: np.asarray(v)[mask] for k, v in table.columns.items()}
+
+
+def _assert_same_valid_rows(got: Table, want: Table):
+    g, w = _valid_rows(got), _valid_rows(want)
+    assert set(g) == set(w)
+    for k in w:
+        assert g[k].shape == w[k].shape, k
+        assert (g[k] == w[k]).all(), k
+
+
+# ---------------------------------------------------------------------------
+# 1. Zone maps / PartitionedTable
+# ---------------------------------------------------------------------------
+
+def test_zone_maps_collect_min_max_domain_and_nulls():
+    t = _table([0, 1, 2, 10, 11, 12, 20, 21],
+               valid=[1, 1, 1, 1, 0, 1, 0, 0],
+               b=np.linspace(0.0, 7.0, 8).astype(np.float32))
+    pt = PartitionedTable.build(t, partition_rows=3)
+    assert pt.n_partitions == 3
+    assert [p.n_rows for p in pt.partitions] == [3, 3, 2]   # ragged tail
+    z0 = pt.partitions[0].zone
+    assert (z0.columns["a"].min, z0.columns["a"].max) == (0.0, 2.0)
+    assert z0.columns["a"].domain == frozenset((0.0, 1.0, 2.0))
+    assert z0.null_count == 0
+    z1 = pt.partitions[1].zone
+    assert z1.null_count == 1
+    assert z1.columns["a"].domain == frozenset((10.0, 12.0))  # valid only
+    z2 = pt.partitions[2].zone                                # all-NULL
+    assert z2.n_valid == 0
+    assert z2.columns["a"].min is None
+    # float columns keep min/max but no exact domain
+    assert z0.columns["b"].domain is None
+
+
+def test_partition_slices_reassemble_the_table():
+    """`PartitionedTable.slice` / `Table.row_slice` — the public partition
+    accessor: per-partition slices concatenate back to the base table."""
+    t = _table(np.arange(11), valid=[1, 0, 1] * 3 + [1, 1],
+               b=np.linspace(0, 1, 11).astype(np.float32))
+    pt = PartitionedTable.build(t, partition_rows=4)
+    got_cols = {k: [] for k in t.columns}
+    got_valid = []
+    for p in pt.partitions:
+        piece = pt.slice(p.index)
+        assert piece.capacity == p.n_rows
+        assert piece.schema is t.schema
+        for k in t.columns:
+            got_cols[k].append(np.asarray(piece.columns[k]))
+        got_valid.append(np.asarray(piece.valid))
+    for k in t.columns:
+        assert (np.concatenate(got_cols[k])
+                == np.asarray(t.columns[k])).all(), k
+    assert (np.concatenate(got_valid) == np.asarray(t.valid)).all()
+
+
+def test_nan_rows_disable_zone_stats_not_pruning():
+    """NaN poisons ordered stats (min/max propagate it, and a NaN row
+    *satisfies* `!=`): a float partition containing NaN publishes no
+    stats and must survive every constraint."""
+    values = [np.nan, 10.0, 50.0, 60.0]
+    t = _table(np.asarray(values, np.float32))
+    pt = PartitionedTable.build(t, partition_rows=2)
+    z0 = pt.partitions[0].zone.columns["a"]
+    assert z0.min is None and z0.max is None          # stats withheld
+    from repro.relational.expr import extract_constraints
+    for pred in (col("a") < 25, col("a") != 10.0, col("a") == 10.0):
+        surv, pruned = pt.prune(extract_constraints(pred))
+        assert 0 in surv, f"NaN partition pruned under {pred!r}"
+    # the NaN-free partition still prunes normally
+    surv, pruned = pt.prune(extract_constraints(col("a") < 25))
+    assert 1 in pruned
+    # end-to-end: the valid row 10.0 must appear in sharded output
+    _check_prune_sound_and_bit_exact(
+        np.asarray(values, np.float32), None, col("a") < 25, 2)
+
+
+def test_partitions_must_tile_the_table():
+    t = _table([1, 2, 3, 4])
+    pt = PartitionedTable.build(t, partition_rows=2)
+    with pytest.raises(ValueError):
+        PartitionedTable(t, pt.partitions[:1])
+    with pytest.raises(ValueError):
+        PartitionedTable.build(t, partition_rows=0)
+
+
+def test_prune_is_conservative_and_exact_on_domains():
+    t = _table([0, 1, 5, 6, 7, 9], valid=[1, 1, 1, 1, 0, 0])
+    pt = PartitionedTable.build(t, partition_rows=2)
+    surv, pruned = pt.prune([])
+    assert pruned == (2,)                  # all-NULL prunes unconditionally
+    from repro.relational.expr import extract_constraints
+    cons = extract_constraints((col("a") == 5) & (col("a") >= 0))
+    surv, pruned = pt.prune(cons)
+    assert surv == (1,) and 0 in pruned    # domain {0,1} excludes 5
+
+
+def test_register_table_partitioned_roundtrip():
+    store = ModelStore()
+    t = _table(np.arange(10))
+    store.register_table("t", t, partition_rows=4)
+    pt = store.get_partitioned("t")
+    assert pt is not None and pt.n_partitions == 3
+    assert store.get_table("t") is pt.table
+    # re-registering unpartitioned drops zone maps
+    store.register_table("t", t)
+    assert store.get_partitioned("t") is None
+    # a pre-built PartitionedTable registers as-is
+    store.register_table("t", PartitionedTable.build(t, 5))
+    assert store.get_partitioned("t").n_partitions == 2
+
+
+# ---------------------------------------------------------------------------
+# 2. Morsel scheduler
+# ---------------------------------------------------------------------------
+
+def test_morsels_share_one_bucket_and_never_split_partitions():
+    sizes = [(i, r) for i, r in enumerate([100, 100, 100, 100, 37, 100])]
+    pl = plan_morsels(sizes, n_devices=2, min_bucket_rows=8)
+    assert pl.total_rows == 537
+    seen = [i for dev in pl.assignments for m in dev for i in m.partitions]
+    assert sorted(seen) == list(range(6))             # every partition once
+    for dev in pl.assignments:
+        for m in dev:
+            assert m.rows <= pl.bucket_rows
+    # bucket covers the ideal per-device share, pow-2
+    assert pl.bucket_rows >= 537 / 2
+    assert pl.bucket_rows & (pl.bucket_rows - 1) == 0
+
+
+def test_morsel_waves_when_partitions_exceed_devices():
+    sizes = [(i, 64) for i in range(16)]
+    pl = plan_morsels(sizes, n_devices=4, min_bucket_rows=8,
+                      morsel_rows=128)          # cap -> 2 partitions/morsel
+    assert pl.bucket_rows == 128
+    assert pl.n_morsels == 8
+    assert pl.n_waves == 2                      # 8 morsels over 4 devices
+    loads = [sum(m.rows for m in dev) for dev in pl.assignments]
+    assert max(loads) == min(loads) == 256      # LPT balances exactly here
+
+
+def test_morsel_bucket_fits_largest_partition():
+    pl = plan_morsels([(0, 10), (1, 1000)], n_devices=4,
+                      min_bucket_rows=8, morsel_rows=64)
+    assert pl.bucket_rows >= 1000               # partitions are atomic
+
+
+def test_empty_placement():
+    pl = plan_morsels([], n_devices=3)
+    assert pl.n_morsels == 0 and pl.n_waves == 0 and pl.total_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. Pruning soundness + bit-exactness (deterministic pinned cases)
+# ---------------------------------------------------------------------------
+
+def _check_prune_sound_and_bit_exact(values, valid, pred, partition_rows):
+    store = ModelStore()
+    t = _table(values, valid=valid)
+    store.register_table("t", t, partition_rows=partition_rows)
+    pt = store.get_partitioned("t")
+    plan = _filter_plan(pred)
+    opt, report = _optimize(store, plan)
+    scan = opt.find("scan")[0]
+    surviving = scan.attrs.get("partitions")
+    oracle = np.asarray(pred.evaluate(
+        {k: np.asarray(v) for k, v in t.columns.items()})).astype(bool)
+    oracle &= np.asarray(t.valid)
+    if surviving is not None:
+        for p in pt.partitions:
+            if p.index not in surviving:
+                assert not oracle[p.start:p.stop].any(), \
+                    f"pruned partition {p.index} has a matching valid row"
+    # sharded pruned execution == valid rows of whole-table execution
+    surv = surviving if surviving is not None \
+        else tuple(range(pt.n_partitions))
+    fn = compile_plan(opt, store)                # raw closure, no jit
+    want = fn({"t": t})
+    executor = ShardedExecutor()
+    parts = [pt.partitions[i] for i in surv]
+    placement = executor.plan(parts, min_bucket_rows=4)
+    got = executor.execute(fn, pt, "t", parts, placement)
+    _assert_same_valid_rows(got, want)
+
+
+PINNED = [
+    # (values, valid, predicate, partition_rows)
+    ([0, 1, 2, 3, 4, 5, 6, 7], None, col("a") < 3, 2),
+    ([0, 1, 2, 3], [0, 0, 0, 0], col("a") >= 0, 2),        # all-NULL table
+    ([5, 5, 5, 9], [1, 1, 0, 1], col("a") == 5, 1),        # single-row parts
+    ([1, 2, 3, 4, 5], [1, 0, 1, 0, 1], (col("a") > 1) & (col("a") <= 4), 2),
+    ([3], [1], col("a") != 3, 1),                          # 1-row, 1-part
+    ([0, 0, 0, 1, 1, 1], None, col("a") != 0, 3),          # domain != prune
+    # float32 rounding: zone tests must compare in the runtime's float32
+    # (0.1f > 0.1 in float64 would unsoundly prune the matching row)
+    (np.asarray([0.1, 50.0], np.float32), None, col("a") <= 0.1, 1),
+    (np.asarray([0.1, 0.3, 7.0, 9.0], np.float32), [1, 0, 1, 1],
+     (col("a") > 0.1) & (col("a") < 8.5), 2),
+]
+
+
+@pytest.mark.parametrize("values,valid,pred,partition_rows", PINNED)
+def test_pruning_pinned_cases(values, valid, pred, partition_rows):
+    _check_prune_sound_and_bit_exact(values, valid, pred, partition_rows)
+
+
+def test_pruning_composes_with_predicate_pushdown():
+    """A filter that starts *above* a computed column still prunes: the
+    pushdown rule moves it onto the scan first."""
+    store = ModelStore()
+    t = _table(np.arange(100))
+    store.register_table("t", t, partition_rows=10)
+    plan = Plan()
+    s = plan.emit("scan", "RA", [], "table", table="t")
+    m = plan.emit("map", "RA", [s], "table", name="twice",
+                  expr=col("a") * 2)
+    plan.output = plan.emit("filter", "RA", [m], "table",
+                            predicate=col("a") < 25)
+    opt, report = _optimize(store, plan)
+    assert report.fired("predicate_pushdown")
+    assert report.fired("partition_pruning")
+    assert report.partitions["t"] == (3, 10)
+
+
+def test_pruning_respects_disable_flag_and_consumer_forks():
+    store = ModelStore()
+    t = _table(np.arange(40))
+    store.register_table("t", t, partition_rows=10)
+    plan = _filter_plan(col("a") < 5)
+    opt, report = _optimize(store, plan, enable_partition_pruning=False)
+    assert "partitions" not in opt.find("scan")[0].attrs
+    # fork: a second consumer of the scan sees unfiltered rows -> no prune
+    plan = _filter_plan(col("a") < 5)
+    scan_id = plan.find("scan")[0].id
+    plan.output = plan.emit("union", "RA", [plan.output, scan_id], "table")
+    opt, report = _optimize(store, plan)
+    assert "partitions" not in opt.find("scan")[0].attrs
+
+
+def test_partition_aware_signatures_and_row_estimates():
+    store = ModelStore()
+    t = _table(np.sort(np.arange(100) % 50))
+    store.register_table("t", t, partition_rows=10)
+    opt_a, _ = _optimize(store, _filter_plan(col("a") < 10))
+    opt_b, _ = _optimize(store, _filter_plan(col("a") < 10))
+    opt_c, _ = _optimize(store, _filter_plan(col("a") < 10),
+                         enable_partition_pruning=False)
+    assert plan_signature(opt_a) == plan_signature(opt_b)
+    assert plan_signature(opt_a) != plan_signature(opt_c)
+    scan = opt_a.find("scan")[0]
+    rows = estimate_rows(opt_a, store)
+    surv = scan.attrs["partitions"]
+    assert rows[scan.id] == 10.0 * len(surv)      # partition-count-aware
+
+
+# ---------------------------------------------------------------------------
+# 3b. Hypothesis property (skipped where hypothesis is absent; the pinned
+#     cases above cover the named edge cases regardless)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _OPS = ["==", "!=", "<", "<=", ">", ">="]
+
+    def _mk_pred(spec):
+        out = None
+        for op, value in spec:
+            c = col("a")
+            term = {"==": c == value, "!=": c != value, "<": c < value,
+                    "<=": c <= value, ">": c > value, ">=": c >= value}[op]
+            out = term if out is None else out & term
+        return out
+
+    @given(
+        values=st.lists(st.integers(min_value=-4, max_value=4),
+                        min_size=1, max_size=24),
+        valid_bits=st.lists(st.booleans(), min_size=24, max_size=24),
+        partition_rows=st.integers(min_value=1, max_value=9),
+        spec=st.lists(st.tuples(st.sampled_from(_OPS),
+                                st.integers(min_value=-5, max_value=5)),
+                      min_size=1, max_size=3),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_pruned_partition_never_holds_matching_row(
+            values, valid_bits, partition_rows, spec):
+        _check_prune_sound_and_bit_exact(
+            values, valid_bits[:len(values)], _mk_pred(spec),
+            partition_rows)
+
+
+def test_pruning_randomized_sweep():
+    """Seeded twin of the hypothesis property (mirrors the convention of
+    ``test_serving_properties``: the sweep runs even where hypothesis is
+    absent — change both together)."""
+    rng = np.random.RandomState(42)
+    ops = ["==", "!=", "<", "<=", ">", ">="]
+    for _ in range(40):
+        n = int(rng.randint(1, 25))
+        values = rng.randint(-4, 5, n)
+        valid = rng.rand(n) < rng.choice([0.0, 0.5, 1.0])
+        partition_rows = int(rng.randint(1, 10))
+        spec = [(ops[rng.randint(len(ops))], int(rng.randint(-5, 6)))
+                for _ in range(rng.randint(1, 4))]
+        pred = None
+        for op, v in spec:
+            c = col("a")
+            term = {"==": c == v, "!=": c != v, "<": c < v,
+                    "<=": c <= v, ">": c > v, ">=": c >= v}[op]
+            pred = term if pred is None else pred & term
+        _check_prune_sound_and_bit_exact(values, valid, pred,
+                                         partition_rows)
+
+
+# ---------------------------------------------------------------------------
+# 4. Service integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def partitioned_store():
+    from repro.ml import (LogisticRegression, Pipeline, PipelineMetadata,
+                          StandardScaler)
+    rng = np.random.RandomState(0)
+    n = 2000
+    age = np.sort(rng.randint(0, 100, n))          # clustered on age
+    x = rng.randn(n).astype(np.float32)
+    t = Table.from_pydict({"pid": np.arange(n), "age": age, "x": x})
+    store = ModelStore()
+    store.register_table("people", t, partition_rows=200)
+    data = {"age": age.astype(np.float32), "x": x}
+    sc = StandardScaler(["age", "x"]).fit(data)
+    pipe = Pipeline([sc], LogisticRegression(steps=15),
+                    PipelineMetadata(name="m", task="classification"))
+    pipe.fit(data, (age > 50).astype(np.int32))
+    store.register_model("m", pipe)
+    return store, t
+
+
+SQL = "SELECT pid, PREDICT(MODEL='m') AS s FROM people WHERE age < 30"
+
+
+def _sharded_service(store, **knobs):
+    return PredictionService(store, execution_config=ExecutionConfig(
+        sharded=True, shard_min_bucket_rows=32, **knobs))
+
+
+def test_service_sharded_bit_exact_and_pruned(partitioned_store):
+    store, _ = partitioned_store
+    base = PredictionService(store)
+    svc = _sharded_service(store)
+    want = base.run(SQL)
+    got = svc.run(SQL)
+    _assert_same_valid_rows(got, want)
+    info = svc.shard_info()
+    assert info["enabled"] and info["sharded_executions"] == 1
+    assert info["partitions_pruned"] >= 5          # age-clustered: most skip
+    assert got.capacity < want.capacity            # pruned rows not placed
+    base.close(); svc.close()
+
+
+def test_service_sharded_zero_compiles_on_warm_repeat(partitioned_store):
+    store, _ = partitioned_store
+    svc = _sharded_service(store)
+    svc.run(SQL)
+    before = (svc.stats.cache_misses, svc.stats.shard_compiles,
+              svc.stats.jit_traces)
+    for _ in range(3):
+        svc.run(SQL)
+    after = (svc.stats.cache_misses, svc.stats.shard_compiles,
+             svc.stats.jit_traces)
+    assert before == after
+    assert svc.stats.shard_hits >= 3
+    svc.close()
+
+
+def test_service_sharded_unpruned_full_bit_exact(partitioned_store):
+    store, _ = partitioned_store
+    sql = "SELECT pid, PREDICT(MODEL='m') AS s FROM people"
+    base = PredictionService(store)
+    svc = _sharded_service(store)
+    want, got = base.run(sql), svc.run(sql)
+    assert got.capacity == want.capacity           # nothing pruned
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    for k in want.columns:
+        assert (np.asarray(got.columns[k])
+                == np.asarray(want.columns[k])).all(), k
+    base.close(); svc.close()
+
+
+def test_service_override_tables_never_prune_or_shard(partitioned_store):
+    store, t = partitioned_store
+    svc = _sharded_service(store)
+    # rows that the catalog zone maps would prune away must still be served
+    # when the caller supplies their own table
+    sub = Table({k: v[-64:] for k, v in t.columns.items()},
+                t.valid[-64:], t.schema)
+    out = svc.run(SQL, {"people": sub})
+    assert out.capacity == 64
+    assert svc.stats.sharded_executions == 0
+    assert "partitions" not in [a for n in svc.compile(
+        SQL, {"people": sub}).plan.nodes.values()
+        for a in n.attrs]
+    svc.close()
+
+
+def test_service_all_partitions_pruned(partitioned_store):
+    store, _ = partitioned_store
+    svc = _sharded_service(store)
+    out = svc.run("SELECT pid, PREDICT(MODEL='m') AS s FROM people "
+                  "WHERE age < 0")
+    assert out.capacity == 0
+    assert svc.shard_info()["prune_rate"] == 1.0
+    svc.close()
+
+
+def test_stale_pruning_falls_back_to_full_scan():
+    """A table re-registered between compile and execute (invalidation
+    evicts the cache entry, but an in-flight execution can already hold
+    it) may keep its partition *count* while its data changed — the
+    version snapshot must void the stale pruned-partition set."""
+    store = ModelStore()
+    rng = np.random.RandomState(1)
+    t1 = _table(np.sort(rng.randint(0, 100, 400)))     # clustered
+    store.register_table("t", t1, partition_rows=50)
+    svc = PredictionService(store, execution_config=ExecutionConfig(
+        sharded=True, shard_min_bucket_rows=16))
+    plan = _filter_plan(col("a") < 20)
+    compiled = svc.compile(plan)
+    scan = compiled.plan.find("scan")[0]
+    stale = scan.attrs["partitions"]
+    assert len(stale) < 8                              # pruning happened
+    # same partition count, inverted clustering: the stale set is wrong
+    t2 = _table(np.sort(rng.randint(0, 100, 400))[::-1].copy())
+    store.register_table("t", t2, partition_rows=50)
+    out = svc._execute_sharded(compiled, {"t": t2})
+    assert svc.stats.partitions_scanned == 8           # full scan fallback
+    want = np.asarray(t2.column("a"))[np.asarray(t2.column("a")) < 20]
+    got = np.asarray(out.column("a"))[np.asarray(out.valid)]
+    assert got.shape == want.shape and (got == want).all()
+    # partitioning dropped entirely mid-flight: whole-table fallback, not
+    # a crash
+    store.register_table("t", t2)                      # unpartitioned
+    out = svc._execute_sharded(compiled, {"t": t2})
+    got = np.asarray(out.column("a"))[np.asarray(out.valid)]
+    assert (got == want).all()
+    svc.close()
+
+
+def test_sharded_config_is_part_of_the_cache_key(partitioned_store):
+    store, _ = partitioned_store
+    svc1 = PredictionService(store)
+    c1 = svc1.compile(SQL)
+    svc2 = _sharded_service(store)
+    c2 = svc2.compile(SQL)
+    assert c1.key != c2.key
+    svc1.close(); svc2.close()
