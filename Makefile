@@ -1,4 +1,5 @@
-.PHONY: verify verify-tier1 bench-subplan bench-batching bench-sharded
+.PHONY: verify verify-tier1 bench-subplan bench-batching bench-sharded \
+	bench-join-agg bench-json
 
 # Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").  verify.sh
 # exports REPRO_TEST_TIMEOUT so the threaded admission-loop tests fail
@@ -21,3 +22,15 @@ bench-batching:
 # sets xla_force_host_platform_device_count before importing jax).
 bench-sharded:
 	PYTHONPATH=src python -m benchmarks.sharded_scan
+
+# Partition-wise sharded FK join + two-phase aggregation over predictions
+# on 8 simulated host devices (same self-re-exec pattern).
+bench-join-agg:
+	PYTHONPATH=src python -m benchmarks.sharded_join_agg
+
+# The quick benchmark suite with the machine-readable export + trajectory
+# check — exactly what the bench-trajectory CI job runs.
+bench-json:
+	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_5.json
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_5.json \
+		benchmarks/baseline.json

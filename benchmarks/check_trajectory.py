@@ -1,0 +1,90 @@
+"""Benchmark-trajectory gate: fail CI when a tracked speedup regresses.
+
+    PYTHONPATH=src python -m benchmarks.check_trajectory BENCH.json \
+        benchmarks/baseline.json [--tolerance 0.2]
+
+``BENCH.json`` is the export ``benchmarks.run --json`` writes;
+``benchmarks/baseline.json`` pins the metrics we defend.  A tracked
+metric regresses when
+
+    current < (1 - tolerance) * baseline
+
+(default tolerance 20%; a ``"tolerance"`` key in a baseline entry
+overrides it for *every* metric of that entry).  A tracked row or metric
+*missing* from the export also
+fails — a benchmark silently vanishing is the quietest possible
+regression.  Baselines are deliberately conservative floors (chosen below
+locally measured values, at or above the benchmarks' own hard asserts),
+not high-water marks: the gate exists to catch "the optimization stopped
+working", not machine-to-machine noise.
+
+Exit code = number of failing metrics; the CI job turns that into red.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(bench: dict, baseline: dict, tolerance: float) -> int:
+    rows = bench.get("benchmarks", {})
+    failures = 0
+    for name, tracked in sorted(baseline.items()):
+        row = rows.get(name)
+        if row is None:
+            print(f"FAIL {name}: tracked benchmark row missing from "
+                  f"export")
+            failures += 1
+            continue
+        tol = tracked.get("tolerance", tolerance)
+        for metric, floor_of in sorted(tracked.items()):
+            if metric == "tolerance":
+                continue
+            current = row.get("derived", {}).get(metric)
+            if not isinstance(floor_of, (int, float)):
+                print(f"FAIL {name}.{metric}: baseline value "
+                      f"{floor_of!r} is not numeric")
+                failures += 1
+                continue
+            if not isinstance(current, (int, float)):
+                print(f"FAIL {name}.{metric}: missing from export "
+                      f"(derived={row.get('derived')})")
+                failures += 1
+                continue
+            floor = (1.0 - tol) * floor_of
+            status = "ok" if current >= floor else "FAIL"
+            print(f"{status:>4} {name}.{metric}: {current:.2f} "
+                  f"(baseline {floor_of:.2f}, floor {floor:.2f})")
+            if current < floor:
+                failures += 1
+    if bench.get("failures"):
+        print(f"FAIL benchmark driver reported {bench['failures']} "
+              f"failed job(s)")
+        failures += int(bench["failures"])
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="export from benchmarks.run --json")
+    ap.add_argument("baseline_json", help="committed tracked metrics")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2)")
+    args = ap.parse_args()
+    with open(args.bench_json) as fh:
+        bench = json.load(fh)
+    with open(args.baseline_json) as fh:
+        baseline = json.load(fh)
+    failures = check(bench, baseline, args.tolerance)
+    if failures:
+        print(f"{failures} tracked metric(s) regressed >"
+              f"{args.tolerance:.0%} vs baseline", file=sys.stderr)
+    else:
+        print("benchmark trajectory holds")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

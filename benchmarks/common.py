@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -21,6 +24,35 @@ ROWS = []
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rerun_with_simulated_devices(module: str, rows: int, devices: int,
+                                 timeout: int = 1200) -> None:
+    """Re-exec a sharded benchmark module in a child process with
+    ``xla_force_host_platform_device_count`` set in its environment (jax
+    only honors the flag before import, and the parent driver already
+    initialized jax), folding the child's printed CSV rows back into
+    ``ROWS`` so ``--json`` exports see them."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count"
+                          f"={devices}").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", module, "--rows", str(rows),
+         "--devices", str(devices), "--no-header"],
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(
+            __file__))), capture_output=True, text=True, timeout=timeout)
+    for line in proc.stdout.splitlines():
+        parts = line.split(",", 2)
+        try:
+            emit(parts[0], float(parts[1]),
+                 parts[2] if len(parts) > 2 else "")
+        except (IndexError, ValueError):
+            print(line)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-4000:])
+        raise RuntimeError(
+            f"{module} child failed with code {proc.returncode}")
 
 
 def assert_tables_bit_exact(got, want) -> None:

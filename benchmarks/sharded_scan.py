@@ -37,8 +37,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import subprocess
-import sys
 import time
 
 N_PARTITIONS = 64
@@ -50,21 +48,11 @@ SQL_SELECTIVE = SQL_FULL + " WHERE age < 25"
 def run(n_rows: int = 200_000, devices: int = 8) -> None:
     """Driver entry (``benchmarks.run``): jax in this process already owns
     its devices, so re-exec this module with the simulated-device flag set
-    in the child's environment."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" --xla_force_host_platform_device_count"
-                          f"={devices}").strip()
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.sharded_scan", "--rows",
-         str(n_rows), "--devices", str(devices), "--no-header"],
-        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(
-            __file__))), capture_output=True, text=True, timeout=1200)
-    sys.stdout.write(proc.stdout)
-    if proc.returncode != 0:
-        sys.stderr.write(proc.stderr[-4000:])
-        raise RuntimeError(
-            f"sharded_scan child failed with code {proc.returncode}")
+    in the child's environment and fold its CSV rows back into
+    ``common.ROWS`` (so ``--json`` exports see them)."""
+    from .common import rerun_with_simulated_devices
+    rerun_with_simulated_devices("benchmarks.sharded_scan", n_rows,
+                                 devices)
 
 
 def _build_store(n_rows: int):
@@ -114,7 +102,7 @@ def _service(store, shard_devices: int, morsel_rows: int):
                                  shard_morsel_rows=morsel_rows))
 
 
-def _timed(svc, sql: str, iters: int = 3) -> float:
+def _timed(svc, sql: str, iters: int = 5) -> float:
     """Median warm wall-seconds per serve (the service was already warmed:
     the timed window must observe zero compiles)."""
     import numpy as np

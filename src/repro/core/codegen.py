@@ -323,6 +323,11 @@ def compile_plan(plan: Plan, catalog,
             elif op == "group_agg":
                 env[nid] = rel_ops.group_aggregate(
                     ins[0], a["key"], a["aggs"], a.get("num_groups"))
+            elif op == "partial_agg":
+                # local phase of a two-phase aggregation: mergeable state
+                # per morsel; `serve/sharded.py` runs the combine stage
+                env[nid] = rel_ops.partial_aggregate(
+                    ins[0], a["key"], a["aggs"], a.get("num_groups"))
             elif op == "order_by":
                 env[nid] = rel_ops.order_by(ins[0], a["key"],
                                             a.get("descending", False))

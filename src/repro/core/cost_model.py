@@ -122,7 +122,11 @@ def estimate_rows(plan: Plan, catalog) -> Dict[str, float]:
         elif n.op == "limit":
             rows[nid] = min(rows.get(n.inputs[0], 1e6), float(n.attrs["n"]))
             src_table[nid] = src_table.get(n.inputs[0])
-        elif n.op == "group_agg":
+        elif n.op in ("group_agg", "partial_agg"):
+            # partial_agg (two-phase local stage) has the same output
+            # cardinality as the aggregation it decomposes: one row per
+            # group — the `two_phase` attr changes where the combine runs,
+            # not how many rows flow downstream
             rows[nid] = float(n.attrs.get("num_groups") or 64)
             src_table[nid] = None
         elif n.inputs:

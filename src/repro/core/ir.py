@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set,
 
 __all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature",
            "subtree_signatures", "subtree_nodes", "is_deterministic_subtree",
-           "bucketed_signature", "sharded_signature"]
+           "bucketed_signature", "sharded_signature", "ROW_LOCAL_OPS"]
 
 
 class Category:
@@ -33,6 +33,21 @@ class Category:
     LA = "LA"
     MLD = "MLD"
     UDF = "UDF"
+
+
+# Ops whose output rows correspond 1:1 (positionally) to their input rows —
+# the precondition for chunked execution, request stacking, and the
+# partition-local side of distributed plans.  Joins, aggregation, ordering,
+# limits and unions break the correspondence; UDFs are excluded
+# conservatively (a host callback may inspect the whole batch).  Shared by
+# the serving layer and the ``distributed_plan`` rule so the two notions of
+# "row-local" can never drift apart.
+ROW_LOCAL_OPS = frozenset({
+    "scan", "filter", "project", "rename", "map", "attach_column",
+    "featurize", "gather_features", "predict_model", "affine", "matmul_bias",
+    "sigmoid", "relu", "softmax", "argmax", "select_column", "threshold",
+    "tree_gemm", "constant_vector",
+})
 
 
 _ids = itertools.count()
@@ -259,16 +274,25 @@ def bucketed_signature(sig: str, bucket_rows: int) -> str:
 
 
 def sharded_signature(sig: str, bucket_rows: int,
-                      mesh_shape: Tuple[int, ...]) -> str:
+                      mesh_shape: Tuple[int, ...],
+                      side_buckets: Sequence[Tuple[str, int]] = ()) -> str:
     """Identity of a partition-parallel executable: the structural
     signature plus the per-device morsel row bucket it was jitted for and
     the mesh shape it is placed across.  Note the structural half is
     already **partition-aware**: a scan's surviving-partition set lives in
     its ``partitions`` attr, which participates in ``canonical_form`` — a
     plan pruned to a different partition set is a different signature, so
-    pruned and unpruned executions never share an executable entry."""
+    pruned and unpruned executions never share an executable entry.
+
+    ``side_buckets`` extends the identity for partition-wise joins: each
+    non-anchor join input is gathered at its own padded row bucket
+    (``(table name, bucket rows)`` pairs), and those shapes are part of
+    what XLA specialized the executable for — two placements whose side
+    buckets differ must not share a trace."""
     mesh = "x".join(str(int(d)) for d in mesh_shape)
-    return f"{sig}@rows{int(bucket_rows)}@mesh{mesh}"
+    sides = "".join(f"@{name}:{int(rows)}"
+                    for name, rows in sorted(side_buckets))
+    return f"{sig}@rows{int(bucket_rows)}@mesh{mesh}{sides}"
 
 
 # ---------------------------------------------------------------------------

@@ -329,22 +329,42 @@ class ModelStore:
     # -- tables -----------------------------------------------------------------
     def register_table(self, name: str, table: Table,
                        max_distinct: int = 64,
-                       partition_rows: Optional[int] = None) -> None:
+                       partition_rows: Optional[int] = None,
+                       partition_by: Optional[str] = None,
+                       partition_bounds: Optional[Any] = None) -> None:
         """Register (a new version of) a table.  ``partition_rows`` turns on
         row-range partitioning: the table is split into contiguous
         partitions of that many rows and a zone map (per-column min/max,
         small-domain bitsets, null count) is collected per partition at
         registration — the statistics the ``partition_pruning`` rule and
         the sharded executor consume.  A :class:`PartitionedTable` may also
-        be passed directly (pre-built partitioning)."""
+        be passed directly (pre-built partitioning).
+
+        ``partition_by`` declares a range-partitioning key (the table must
+        be sorted by it): with ``partition_rows`` the row ranges snap to
+        key boundaries; with ``partition_bounds`` (explicit split values)
+        the ranges follow the bounds exactly, so two tables registered
+        with the same bounds are co-partitioned — the precondition the
+        ``distributed_plan`` rule checks (``compatible_partitioning``)
+        before rewriting their joins partition-wise."""
         from .partition import PartitionedTable
         partitioned: Optional[PartitionedTable] = None
         if isinstance(table, PartitionedTable):
             partitioned = table
             table = partitioned.table
+        elif partition_bounds is not None:
+            if partition_by is None:
+                raise ValueError("partition_bounds requires partition_by")
+            partitioned = PartitionedTable.build_by_bounds(
+                table, partition_by, partition_bounds,
+                max_domain=max_distinct)
         elif partition_rows is not None:
             partitioned = PartitionedTable.build(table, partition_rows,
-                                                 max_domain=max_distinct)
+                                                 max_domain=max_distinct,
+                                                 partition_by=partition_by)
+        elif partition_by is not None:
+            raise ValueError(
+                "partition_by requires partition_rows or partition_bounds")
         with self._lock:
             version = self._table_versions.get(name, 0) + 1
             if partitioned is not None:

@@ -14,6 +14,10 @@ Rule order (data flows top to bottom):
 2b. ``partition_pruning``       — data-skipping: zone maps of partitioned
                                   tables vs pushed-down predicates skip
                                   whole partitions (feeds serve/sharded)
+2c. ``distributed_plan``        — marks co-partitioned joins as
+                                  partition-wise and eligible aggregations
+                                  as two-phase (local/global split for the
+                                  sharded executor)
 3.  ``predicate_model_pruning`` — data->model: WHERE + table stats prune
                                   trees / fold one-hot groups (incl. the
                                   data-properties variant)
@@ -64,6 +68,10 @@ class OptimizerConfig:
     # data need not match the registered zone maps (the serving layer
     # disables it the same way it disables stats pruning).
     enable_partition_pruning: bool = True
+    # Partition-wise join / two-phase aggregation marking (core/rules/
+    # distributed_plan.py).  Off for override tables for the same reason:
+    # co-partitioning is a property of the *registered* data.
+    enable_distributed_plan: bool = True
     enable_projection_pushdown: bool = True
     enable_join_elimination: bool = True
     enable_model_query_splitting: bool = False   # opt-in (duplicates rows)
@@ -121,12 +129,12 @@ class CrossOptimizer:
         self.config = config or OptimizerConfig()
 
     def optimize(self, plan: Plan) -> Tuple[Plan, OptimizationReport]:
-        from .rules import (constant_folding, join_elimination,
-                            model_inlining, model_query_splitting,
-                            nn_translation, partition_pruning,
-                            predicate_pruning, predicate_pushdown,
-                            projection_pushdown, runtime_selection,
-                            subplan_dedup)
+        from .rules import (constant_folding, distributed_plan,
+                            join_elimination, model_inlining,
+                            model_query_splitting, nn_translation,
+                            partition_pruning, predicate_pruning,
+                            predicate_pushdown, projection_pushdown,
+                            runtime_selection, subplan_dedup)
         cfg = self.config
         report = OptimizationReport()
         if plan.output is not None:
@@ -140,6 +148,10 @@ class CrossOptimizer:
             # after pushdown (filters sit on scans), before model pruning
             # (zone maps skip partitions; stats prune model internals)
             (cfg.enable_partition_pruning, partition_pruning.apply),
+            # after partition pruning (surviving-partition attrs are part
+            # of the distributed identity): mark co-partitioned joins and
+            # two-phase aggregations for the sharded executor
+            (cfg.enable_distributed_plan, distributed_plan.apply),
             (cfg.enable_model_pruning, predicate_pruning.apply),
             (cfg.enable_projection_pushdown, projection_pushdown.apply),
             (cfg.enable_join_elimination, join_elimination.apply),

@@ -17,6 +17,20 @@ the same data-skipping trick every columnar warehouse plays, here feeding
 the sharded SPMD executor (``serve/sharded.py``) which only places
 surviving partitions on devices.
 
+**Range partitioning on a key** (``register_table(..., partition_by=...)``)
+additionally records the partitioning column: partitions are still
+contiguous row ranges, but boundaries snap to key-value changes so one key
+never straddles two partitions (the table must be sorted by the key), or
+follow caller-supplied ``partition_bounds`` split points so two tables can
+be *co-partitioned*.  :func:`compatible_partitioning` is the check the
+``distributed_plan`` rule runs before rewriting a join into per-partition
+local joins: both sides declare the join column as their partitioning key,
+have equal partition counts, and — verified from the zone maps themselves,
+not trusted metadata — no valid key range of partition ``i`` on one side
+intersects a differently-indexed partition's range on the other.  Under
+that condition a row in left partition ``i`` can only match inside right
+partition ``i``, so the join distributes over aligned partition pairs.
+
 Soundness contract (property-tested in
 ``tests/test_partitioned_execution.py``): :meth:`ZoneMap.may_match` may
 return ``True`` for a partition with no matching row (zone maps are
@@ -30,14 +44,15 @@ downstream result over valid rows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..relational.expr import Constraint
 from ..relational.table import Table
 
-__all__ = ["ColumnZone", "ZoneMap", "Partition", "PartitionedTable"]
+__all__ = ["ColumnZone", "ZoneMap", "Partition", "PartitionedTable",
+           "compatible_partitioning"]
 
 
 # Domain bitsets above this cardinality are dropped (min/max still held);
@@ -172,11 +187,18 @@ class PartitionedTable:
     registration counter at the moment this partitioning was installed):
     executors holding a compiled plan compare the *object's own* stamp
     against their compile-time snapshot, which stays race-free however
-    catalog reads interleave with a concurrent re-registration."""
+    catalog reads interleave with a concurrent re-registration.
 
-    def __init__(self, table: Table, partitions: Sequence[Partition]):
+    ``partition_by`` records the range-partitioning key column when the
+    partitioning was built on one (see :meth:`build` /
+    :func:`compatible_partitioning`); ``None`` for plain row-count
+    partitioning."""
+
+    def __init__(self, table: Table, partitions: Sequence[Partition],
+                 partition_by: Optional[str] = None):
         self.table = table
         self.partitions: Tuple[Partition, ...] = tuple(partitions)
+        self.partition_by = partition_by
         self.version: int = 0
         self._host_view = None
         if self.partitions:
@@ -189,18 +211,78 @@ class PartitionedTable:
 
     @classmethod
     def build(cls, table: Table, partition_rows: int,
-              max_domain: int = _MAX_DOMAIN) -> "PartitionedTable":
+              max_domain: int = _MAX_DOMAIN,
+              partition_by: Optional[str] = None) -> "PartitionedTable":
         """Partition ``table`` into contiguous ranges of ``partition_rows``
-        rows (last one ragged) and collect zone maps host-side."""
+        rows (last one ragged) and collect zone maps host-side.
+
+        With ``partition_by`` the table must be sorted (non-decreasing) on
+        that column, and each range's end snaps forward past duplicate key
+        values: one key value never straddles a partition boundary — the
+        invariant partition-wise joins rely on (a key split across two
+        left partitions could have its unique right match in only one of
+        them)."""
         if partition_rows <= 0:
             raise ValueError(f"partition_rows must be > 0, "
                              f"got {partition_rows}")
         n = table.capacity
+        if partition_by is None:
+            ranges = [(s, min(s + partition_rows, n))
+                      for s in range(0, n, partition_rows)]
+            return cls._from_ranges(table, ranges, max_domain, None)
+        keys = cls._sorted_key_column(table, partition_by)
+        ranges = []
+        start = 0
+        while start < n:
+            stop = min(start + partition_rows, n)
+            while stop < n and keys[stop] == keys[stop - 1]:
+                stop += 1                   # snap: keep equal keys together
+            ranges.append((start, stop))
+            start = stop
+        return cls._from_ranges(table, ranges, max_domain, partition_by)
+
+    @classmethod
+    def build_by_bounds(cls, table: Table, partition_by: str,
+                        bounds: Sequence[Any],
+                        max_domain: int = _MAX_DOMAIN) -> "PartitionedTable":
+        """Range-partition on explicit split points: partition ``i`` holds
+        the rows whose key is in ``[bounds[i-1], bounds[i])`` (first/last
+        partitions unbounded below/above).  Registering two sorted tables
+        with the *same* bounds co-partitions them by construction — the
+        setup the ``distributed_plan`` rule turns into partition-wise
+        joins.  Partitions may be empty (a bounds gap with no rows)."""
+        keys = cls._sorted_key_column(table, partition_by)
+        b = np.asarray(list(bounds))
+        if b.ndim != 1 or b.size == 0:
+            raise ValueError("partition_bounds must be a non-empty 1-D "
+                             "sequence of split values")
+        if np.any(b[1:] < b[:-1]):
+            raise ValueError("partition_bounds must be sorted ascending")
+        stops = np.searchsorted(keys, b, side="left")
+        edges = [0] + [int(s) for s in stops] + [table.capacity]
+        ranges = [(edges[i], edges[i + 1]) for i in range(len(edges) - 1)]
+        return cls._from_ranges(table, ranges, max_domain, partition_by)
+
+    @staticmethod
+    def _sorted_key_column(table: Table, partition_by: str) -> np.ndarray:
+        keys = np.asarray(table.column(partition_by))
+        if keys.ndim != 1 or keys.dtype.kind not in "iufb":
+            raise ValueError(f"partition key {partition_by!r} must be a "
+                             f"1-D numeric column")
+        if np.any(keys[1:] < keys[:-1]):
+            raise ValueError(
+                f"table is not sorted by partition key {partition_by!r}; "
+                f"range partitioning needs non-decreasing keys")
+        return keys
+
+    @classmethod
+    def _from_ranges(cls, table: Table, ranges: Sequence[Tuple[int, int]],
+                     max_domain: int, partition_by: Optional[str]
+                     ) -> "PartitionedTable":
         valid = np.asarray(table.valid)
         cols = {name: np.asarray(table.column(name)) for name in table.names}
         parts: List[Partition] = []
-        for index, start in enumerate(range(0, n, partition_rows)):
-            stop = min(start + partition_rows, n)
+        for index, (start, stop) in enumerate(ranges):
             pvalid = valid[start:stop]
             zones = {
                 name: _column_zone(arr[start:stop], pvalid, max_domain)
@@ -212,7 +294,7 @@ class PartitionedTable:
                 zone=ZoneMap(n_rows=stop - start,
                              null_count=int((~pvalid).sum()),
                              columns=zones)))
-        return cls(table, parts)
+        return cls(table, parts, partition_by=partition_by)
 
     @property
     def n_partitions(self) -> int:
@@ -253,5 +335,67 @@ class PartitionedTable:
         return tuple(surviving), tuple(pruned)
 
     def __repr__(self):
+        by = f", by {self.partition_by!r}" if self.partition_by else ""
         return (f"PartitionedTable[{self.total_rows} rows, "
-                f"{self.n_partitions} partitions]")
+                f"{self.n_partitions} partitions{by}]")
+
+
+def _key_ranges(pt: PartitionedTable, column: str
+                ) -> Optional[List[Optional[Tuple[float, float]]]]:
+    """Per-partition valid-key (min, max) ranges; ``None`` entries for
+    partitions with no valid rows, overall ``None`` when any non-empty
+    partition lacks zone stats for the column (NaN-poisoned float stats,
+    or a non-numeric key) — then nothing can be proven."""
+    out: List[Optional[Tuple[float, float]]] = []
+    for p in pt.partitions:
+        if p.zone.n_valid == 0:
+            out.append(None)
+            continue
+        zone = p.zone.columns.get(column)
+        if zone is None or zone.min is None or zone.max is None:
+            return None
+        out.append((zone.min, zone.max))
+    return out
+
+
+def compatible_partitioning(a: Optional[PartitionedTable],
+                            b: Optional[PartitionedTable],
+                            on: str) -> bool:
+    """Can a join on column ``on`` distribute over aligned partition pairs
+    of ``a`` (probe/left side) and ``b`` (build/right side)?
+
+    Requirements, checked — not trusted — from the zone maps:
+
+    - both tables are range-partitioned *on the join column* with equal
+      partition counts (index alignment is what "aligned pairs" means);
+    - no valid key range of ``a``'s partition ``i`` intersects ``b``'s
+      partition ``j`` for any ``i != j``.  Then a valid left row's key can
+      only exist inside the same-indexed right partition, so per-partition
+      local joins see every match the whole-table join would.  Invalid
+      rows need no alignment: the join masks them out on either side.
+
+    Conservative by construction: a partition whose key column has no
+    published stats (NaN rows withhold float zone stats) fails the check —
+    soundness over coverage, exactly like ``ZoneMap.may_match``."""
+    if a is None or b is None:
+        return False
+    if a.partition_by != on or b.partition_by != on:
+        return False
+    if a.n_partitions != b.n_partitions or a.n_partitions == 0:
+        return False
+    ar = _key_ranges(a, on)
+    br = _key_ranges(b, on)
+    if ar is None or br is None:
+        return False
+    # vectorized pairwise closed-range intersection test; empty partitions
+    # (None) become inverted sentinel ranges that intersect nothing
+    alo, ahi = (np.asarray([r[k] if r is not None else s
+                            for r in ar])
+                for k, s in ((0, np.inf), (1, -np.inf)))
+    blo, bhi = (np.asarray([r[k] if r is not None else s
+                            for r in br])
+                for k, s in ((0, np.inf), (1, -np.inf)))
+    overlap = (alo[:, None] <= bhi[None, :]) \
+        & (blo[None, :] <= ahi[:, None])
+    np.fill_diagonal(overlap, False)       # same index may (should) align
+    return not overlap.any()

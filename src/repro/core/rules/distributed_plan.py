@@ -1,0 +1,183 @@
+"""Distributed-plan rewriting: partition-wise joins + two-phase aggregation.
+
+After ``partition_pruning`` has annotated scans of partitioned tables, this
+rule finds the plan shapes that can execute *partition-parallel* beyond the
+row-local single-scan case PR 4 shipped, and records the local/global split
+in plan attrs:
+
+- a ``join`` whose two input subtrees are partition-local chains down to
+  scans of **co-partitioned** tables (``partition.compatible_partitioning``:
+  both range-partitioned on the join key, equal partition counts, zone-map
+  key ranges pairwise disjoint across different indices) is marked
+  ``partition_wise``: joining aligned partition pairs locally and
+  concatenating in partition order equals the whole-table join on valid
+  rows — a valid left key can only find its (unique) right match inside
+  the same-indexed right partition;
+
+- the single ``group_agg`` over a partition-local subtree whose aggregate
+  functions all have mergeable state (``ops.COMBINABLE_AGGS``: sum, count,
+  min, max, mean = sum (+) count) is marked ``two_phase``: the serving
+  layer compiles the subtree plus a ``partial_agg`` head as the per-morsel
+  *local* program and folds the per-morsel states host-side
+  (``ops.combine_partials``) before running whatever sits above the
+  aggregation (the *global* stage) on the tiny combined table.
+
+The marks live in node attrs, so they participate in
+``ir.canonical_form``: a plan rewritten for distribution is a different
+structural signature from its whole-table twin, which keeps the executable
+caches and ``ir.sharded_signature`` honest.  The rule only *marks*;
+``serve/prediction_service.py`` re-derives locality on the final optimized
+plan (later rules may rewrite model ops — all into row-local LA forms —
+or eliminate a marked join entirely) and builds the actual split.
+
+**Partition-locality** (:func:`local_anchor`): an op is partition-local
+when running it per aligned partition group and concatenating outputs in
+partition order equals running it whole.  Row-local ops (``ir.
+ROW_LOCAL_OPS``) are trivially so; a co-partitioned join is so by the
+argument above; its *anchor* — the table whose partition row counts shape
+each morsel's output — is the left (probe) side's anchor, because FK-join
+output rows are positionally the left rows.  Everything else (shuffles
+would be needed: non-co-partitioned joins, order_by, limit, union) is not.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Optional, Tuple
+
+from ...relational.ops import COMBINABLE_AGGS
+from ..ir import Plan, ROW_LOCAL_OPS, subtree_nodes
+from ..partition import compatible_partitioning
+
+__all__ = ["apply", "local_anchor", "two_phase_candidate"]
+
+
+# Ops that may appear in the *global* stage above a two-phase aggregation:
+# they run host-side over the combined table, so anything goes except ops
+# that would pull in additional plan inputs of their own.
+_GLOBAL_STAGE_EXCLUDED = frozenset({
+    "scan", "join", "group_agg", "union", "materialized", "partial_agg",
+})
+
+# (anchor table, intact column names) — see local_anchor
+_Local = Tuple[str, FrozenSet[str]]
+
+
+def _visit_local(plan: Plan, nid: str, get_partitioned,
+                 memo: Dict[str, Optional[_Local]]) -> Optional[_Local]:
+    """Partition-locality analysis.  Besides the anchor, tracks which
+    column names of the node's output still hold the anchor-side scan's
+    values *verbatim* ("intact"): a join key is only trustworthy for the
+    co-partitioning argument if it is intact — a ``rename``/``map``/
+    ``attach_column`` between the scan and the join can bind different
+    values under the partition key's name, and the zone maps say nothing
+    about those.  Filters only narrow validity, projections only drop
+    columns; any op that (re)binds a name evicts it from the intact set,
+    and a rename evicts both ends (the value moved *and* the name was
+    taken)."""
+    if nid in memo:
+        return memo[nid]
+    n = plan.nodes[nid]
+    out: Optional[_Local] = None
+    if n.op == "scan":
+        pt = get_partitioned(n.attrs["table"])
+        if pt is not None:
+            out = (n.attrs["table"], frozenset(pt.table.names))
+    elif n.op == "join":
+        left = _visit_local(plan, n.inputs[0], get_partitioned, memo)
+        right = _visit_local(plan, n.inputs[1], get_partitioned, memo)
+        on = n.attrs["on"]
+        if left is not None and right is not None \
+                and n.attrs.get("how", "inner") in ("inner", "left_mark") \
+                and on in left[1] and on in right[1]:
+            if compatible_partitioning(get_partitioned(left[0]),
+                                       get_partitioned(right[0]), on):
+                # output rows follow the left side; left columns survive
+                # the join unrenamed (colliding right names get a suffix)
+                out = (left[0], left[1])
+    elif n.op in ROW_LOCAL_OPS and n.inputs:
+        ins = [_visit_local(plan, i, get_partitioned, memo)
+               for i in n.inputs]
+        anchors = {v[0] for v in ins if v is not None}
+        if None not in ins and len(anchors) == 1:
+            intact = ins[0][1]
+            if n.op == "project":
+                intact = intact & frozenset(n.attrs["columns"])
+            elif n.op == "rename":
+                mapping = n.attrs["mapping"]
+                involved = set(mapping) | set(mapping.values())
+                intact = intact - involved
+            elif n.op in ("map", "attach_column"):
+                intact = intact - {n.attrs["name"]}
+            elif n.out_kind != "table":
+                intact = frozenset()     # matrices carry no join columns
+            out = (next(iter(anchors)), intact)
+    memo[nid] = out
+    return out
+
+
+def local_anchor(plan: Plan, nid: str, catalog,
+                 _memo: Optional[Dict[str, Optional[_Local]]] = None
+                 ) -> Optional[str]:
+    """Anchor table name if the subtree rooted at ``nid`` is
+    partition-local, else ``None``.  The anchor is the partitioned catalog
+    table whose partitions drive morsel placement — every scan in a local
+    subtree is fed aligned slices of its own table's partitions, and
+    output rows per morsel follow the anchor's rows."""
+    get_partitioned = getattr(catalog, "get_partitioned", None)
+    if get_partitioned is None:
+        return None
+    memo: Dict[str, Optional[_Local]] = {} if _memo is None else _memo
+    found = _visit_local(plan, nid, get_partitioned, memo)
+    return found[0] if found is not None else None
+
+
+def two_phase_candidate(plan: Plan, catalog) -> Optional[str]:
+    """Node id of the unique ``group_agg`` eligible for a local/global
+    split, or ``None``.  Eligible: all aggregate functions combinable, its
+    input subtree partition-local, and everything between it and the
+    output free of further plan inputs (the global stage must be a pure
+    function of the combined table)."""
+    if plan.output is None:
+        return None
+    live = set(subtree_nodes(plan, plan.output))
+    agg_ids = [nid for nid in live if plan.nodes[nid].op == "group_agg"]
+    if len(agg_ids) != 1:
+        return None
+    g = plan.nodes[agg_ids[0]]
+    if not all(fn in COMBINABLE_AGGS
+               for fn, _col in g.attrs["aggs"].values()):
+        return None
+    if local_anchor(plan, g.inputs[0], catalog) is None:
+        return None
+    below = set(subtree_nodes(plan, g.id))
+    for nid in live - below:
+        if plan.nodes[nid].op in _GLOBAL_STAGE_EXCLUDED:
+            return None
+    return g.id
+
+
+def apply(plan: Plan, catalog, cfg, report) -> bool:
+    if getattr(catalog, "get_partitioned", None) is None:
+        return False
+    changed = False
+    memo: Dict[str, Optional[_Local]] = {}
+    for join in plan.find("join"):
+        if "partition_wise" in join.attrs:
+            continue                      # already marked (fixpoint)
+        if local_anchor(plan, join.id, catalog, memo) is None:
+            continue
+        join.attrs["partition_wise"] = True
+        report.log("distributed_plan",
+                   f"join on {join.attrs['on']!r}: co-partitioned sides, "
+                   f"rewriting to per-partition local joins")
+        changed = True
+    gid = two_phase_candidate(plan, catalog)
+    if gid is not None and "two_phase" not in plan.nodes[gid].attrs:
+        g = plan.nodes[gid]
+        g.attrs["two_phase"] = True
+        fns = sorted({fn for fn, _ in g.attrs["aggs"].values()})
+        report.log("distributed_plan",
+                   f"group_agg key={g.attrs.get('key')!r} ({fns}): split "
+                   f"into per-morsel partial aggregates + combine stage")
+        changed = True
+    return changed

@@ -15,13 +15,15 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .expr import Expr
 from .table import ColumnSchema, Schema, Table
 
 __all__ = [
     "filter_", "project", "with_column", "join_unique", "group_aggregate",
-    "order_by", "limit", "union_all", "AGGREGATIONS",
+    "partial_aggregate", "combine_partials", "order_by", "limit",
+    "union_all", "AGGREGATIONS", "COMBINABLE_AGGS",
 ]
 
 
@@ -126,6 +128,24 @@ AGGREGATIONS: Dict[str, Callable] = {
 }
 
 
+def _resolve_num_groups(table: Table, key: str,
+                        num_groups: Optional[int]) -> Tuple[int, ColumnSchema]:
+    """Static group count for a keyed aggregation — shared by the one-shot
+    and the partial/combine (two-phase) paths so their group spaces can
+    never diverge."""
+    field = table.schema.field(key)
+    if num_groups is not None:
+        return int(num_groups), field
+    if field.dictionary is not None:
+        return len(field.dictionary), field
+    if jnp.issubdtype(jnp.asarray(table.column(key)).dtype, jnp.integer):
+        # small-domain integer key: group over code range [0, 256);
+        # empty groups are masked out (counts == 0)
+        return 256, field
+    raise ValueError(f"group key {key!r} is not dictionary-encoded "
+                     f"and not integer; pass num_groups")
+
+
 def group_aggregate(table: Table, key: Optional[str],
                     aggs: Mapping[str, Tuple[str, str]],
                     num_groups: Optional[int] = None) -> Table:
@@ -148,18 +168,7 @@ def group_aggregate(table: Table, key: Optional[str],
             fields.append(ColumnSchema(out_name, jnp.asarray(val).dtype))
         return Table(cols, jnp.ones((1,), jnp.bool_), Schema(tuple(fields)))
 
-    field = table.schema.field(key)
-    if num_groups is None:
-        if field.dictionary is not None:
-            num_groups = len(field.dictionary)
-        elif jnp.issubdtype(jnp.asarray(table.column(key)).dtype,
-                            jnp.integer):
-            # small-domain integer key: group over code range [0, 256);
-            # empty groups are masked out (counts == 0)
-            num_groups = 256
-        else:
-            raise ValueError(f"group key {key!r} is not dictionary-encoded "
-                             f"and not integer; pass num_groups")
+    num_groups, field = _resolve_num_groups(table, key, num_groups)
     codes = jnp.asarray(table.column(key), jnp.int32)
     # Invalid rows scatter into an overflow bucket that we drop.
     seg = jnp.where(mask, codes, num_groups)
@@ -194,6 +203,176 @@ def group_aggregate(table: Table, key: Optional[str],
         fields.append(ColumnSchema(out_name, val.dtype))
     valid = counts > 0
     return Table(cols, valid, Schema(tuple(fields)))
+
+
+# ---------------------------------------------------------------------------
+# Two-phase (partial + combine) aggregation — the distributed twin of
+# ``group_aggregate``.  ``partial_aggregate`` runs inside the fused jitted
+# plan once per data morsel and emits *mergeable state* instead of final
+# values; ``combine_partials`` folds the per-morsel states host-side into
+# exactly the table ``group_aggregate`` would have produced over the union
+# of the morsels' rows.  State decomposition: sum -> sum, count -> count,
+# min -> min, max -> max, mean/avg -> (sum, count) with the division only
+# at combine time (the classic local/global aggregation split).
+#
+# Determinism contract: combining the same partials in the same order is
+# bit-exact however many devices produced them (the executor always
+# combines in ascending partition order).  Against *one-shot* aggregation
+# the results are exact for min/max/count and for sums of exactly-
+# representable values; general float sums can differ in the last ulp
+# because addition is reassociated across morsels — the same caveat every
+# parallel database's partial aggregation carries.
+# ---------------------------------------------------------------------------
+
+# Aggregation functions with a mergeable partial state (the set the
+# ``distributed_plan`` rule accepts for a two-phase rewrite).
+COMBINABLE_AGGS = frozenset({"sum", "count", "avg", "mean", "min", "max"})
+
+_PCOUNT = "__pcount"       # per-group valid-row counts, always carried
+
+
+def partial_aggregate(table: Table, key: Optional[str],
+                      aggs: Mapping[str, Tuple[str, str]],
+                      num_groups: Optional[int] = None) -> Table:
+    """Per-morsel aggregation state for a later :func:`combine_partials`.
+
+    Output shape is static (``num_groups`` rows keyed, one row global), so
+    the op jit-compiles into the fused morsel program like any other.  All
+    rows are marked valid — the rows are *states*, not bag tuples; group
+    emptiness travels in the ``__pcount`` column and only the combine
+    stage turns it back into validity."""
+    unknown = {f for f, _ in aggs.values()} - COMBINABLE_AGGS
+    if unknown:
+        raise ValueError(f"aggregates {sorted(unknown)} have no mergeable "
+                         f"partial state; combinable: "
+                         f"{sorted(COMBINABLE_AGGS)}")
+    if table.capacity == 0:
+        # zero-size reductions have no identity in XLA; one all-invalid
+        # row yields exactly the identity states (0 sums/counts, sentinel
+        # min/max) at the right dtypes through the same code path
+        table = Table({k: jnp.zeros((1,) + v.shape[1:], v.dtype)
+                       for k, v in table.columns.items()},
+                      jnp.zeros((1,), jnp.bool_), table.schema)
+    mask = table.valid
+    if key is None:
+        cols: Dict[str, jnp.ndarray] = {
+            _PCOUNT: _agg_count(None, mask)[None]}
+        fields: List[ColumnSchema] = [ColumnSchema(_PCOUNT, jnp.int32)]
+        for out_name, (fn, column) in aggs.items():
+            src = table.column(column) if column is not None else mask
+            src = jnp.asarray(src)
+            if fn in ("mean", "avg"):
+                # pre-max count in the value dtype: _agg_mean divides by
+                # max(sum(mask.astype(values.dtype)), 1) — the combine
+                # stage must apply the max only to the *total*
+                cols[out_name + "@sum"] = _agg_sum(src, mask)[None]
+                cols[out_name + "@n"] = jnp.sum(
+                    mask.astype(src.dtype))[None]
+                fields += [
+                    ColumnSchema(out_name + "@sum",
+                                 cols[out_name + "@sum"].dtype),
+                    ColumnSchema(out_name + "@n",
+                                 cols[out_name + "@n"].dtype)]
+            else:
+                val = AGGREGATIONS[fn](src, mask)
+                cols[out_name] = val[None]
+                fields.append(ColumnSchema(out_name,
+                                           jnp.asarray(val).dtype))
+        return Table(cols, jnp.ones((1,), jnp.bool_), Schema(tuple(fields)))
+
+    num_groups, field = _resolve_num_groups(table, key, num_groups)
+    codes = jnp.asarray(table.column(key), jnp.int32)
+    seg = jnp.where(mask, codes, num_groups)
+    counts = jax.ops.segment_sum(mask.astype(jnp.float32), seg,
+                                 num_segments=num_groups + 1)[:num_groups]
+    cols = {key: jnp.arange(num_groups, dtype=jnp.int32), _PCOUNT: counts}
+    fields = [ColumnSchema(key, jnp.int32, field.dictionary),
+              ColumnSchema(_PCOUNT, counts.dtype)]
+
+    def seg_sum(src):
+        return jax.ops.segment_sum(jnp.where(mask, src, 0.0), seg,
+                                   num_segments=num_groups + 1)[:num_groups]
+
+    for out_name, (fn, column) in aggs.items():
+        src = jnp.asarray(table.column(column), jnp.float32) \
+            if column is not None else mask.astype(jnp.float32)
+        if fn == "sum":
+            state = {out_name: seg_sum(src)}
+        elif fn == "count":
+            state = {out_name: counts}
+        elif fn in ("mean", "avg"):
+            state = {out_name + "@sum": seg_sum(src)}
+        elif fn == "min":
+            state = {out_name: jax.ops.segment_min(
+                jnp.where(mask, src, jnp.inf), seg,
+                num_segments=num_groups + 1)[:num_groups]}
+        else:                                    # max
+            state = {out_name: jax.ops.segment_max(
+                jnp.where(mask, src, -jnp.inf), seg,
+                num_segments=num_groups + 1)[:num_groups]}
+        for cname, val in state.items():
+            cols[cname] = val
+            fields.append(ColumnSchema(cname, val.dtype))
+    return Table(cols, jnp.ones((num_groups,), jnp.bool_),
+                 Schema(tuple(fields)))
+
+
+def combine_partials(partials: Sequence[Table], key: Optional[str],
+                     aggs: Mapping[str, Tuple[str, str]]) -> Table:
+    """Fold :func:`partial_aggregate` outputs into the final aggregate
+    table — column names, dtypes and validity identical to
+    ``group_aggregate`` over the concatenation of the morsels' input rows.
+    Host-side and tiny (``num_groups x n_morsels`` elements); callers pass
+    partials in ascending partition order for cross-placement determinism.
+    """
+    if not partials:
+        raise ValueError("combine_partials needs at least one partial")
+    base = partials[0]
+
+    def stacked(name: str) -> jnp.ndarray:
+        return jnp.asarray(np.stack(
+            [np.asarray(p.columns[name]) for p in partials], axis=0))
+
+    if key is None:
+        cols: Dict[str, jnp.ndarray] = {}
+        fields: List[ColumnSchema] = []
+        for out_name, (fn, _column) in aggs.items():
+            if fn == "sum":
+                val = jnp.sum(stacked(out_name), axis=0)[0]
+            elif fn == "count":
+                val = jnp.sum(stacked(out_name), axis=0)[0]
+            elif fn in ("mean", "avg"):
+                total = jnp.sum(stacked(out_name + "@sum"), axis=0)[0]
+                n = jnp.sum(stacked(out_name + "@n"), axis=0)[0]
+                val = total / jnp.maximum(n, 1)
+            elif fn == "min":
+                val = jnp.min(stacked(out_name), axis=0)[0]
+            else:                                # max
+                val = jnp.max(stacked(out_name), axis=0)[0]
+            cols[out_name] = val[None]
+            fields.append(ColumnSchema(out_name, jnp.asarray(val).dtype))
+        return Table(cols, jnp.ones((1,), jnp.bool_), Schema(tuple(fields)))
+
+    counts = jnp.sum(stacked(_PCOUNT), axis=0)
+    num_groups = int(counts.shape[0])
+    field = base.schema.field(key)
+    cols = {key: jnp.arange(num_groups, dtype=jnp.int32)}
+    fields = [ColumnSchema(key, jnp.int32, field.dictionary)]
+    for out_name, (fn, _column) in aggs.items():
+        if fn == "sum":
+            val = jnp.sum(stacked(out_name), axis=0)
+        elif fn == "count":
+            val = counts
+        elif fn in ("mean", "avg"):
+            val = jnp.sum(stacked(out_name + "@sum"), axis=0) \
+                / jnp.maximum(counts, 1.0)
+        elif fn == "min":
+            val = jnp.min(stacked(out_name), axis=0)
+        else:                                    # max
+            val = jnp.max(stacked(out_name), axis=0)
+        cols[out_name] = val
+        fields.append(ColumnSchema(out_name, val.dtype))
+    return Table(cols, counts > 0, Schema(tuple(fields)))
 
 
 def order_by(table: Table, key: str, descending: bool = False) -> Table:

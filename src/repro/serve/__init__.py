@@ -8,15 +8,17 @@ from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, ManualClock, ReadyGroup, SystemClock)
 from .cache import CacheEntry, CostAwareCache, value_nbytes
 from .engine import InferenceEngine, Request, ServeConfig
-from .prediction_service import (CompiledPrediction, PredictionService,
-                                 PredictionTicket, ServiceStats, SubplanRef)
+from .prediction_service import (CompiledPrediction, DistributedSpec,
+                                 PredictionService, PredictionTicket,
+                                 ServiceStats, SubplanRef)
 from .sampling import sample_token
-from .sharded import Morsel, ShardedExecutor, ShardPlacement, plan_morsels
+from .sharded import (Morsel, ShardedExecutor, ShardPlacement, plan_morsels,
+                      side_bucket_rows)
 
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
-           "ServiceStats", "SubplanRef", "CostAwareCache", "CacheEntry",
-           "value_nbytes", "AdmissionConfig", "AdmissionLoop",
+           "DistributedSpec", "ServiceStats", "SubplanRef", "CostAwareCache",
+           "CacheEntry", "value_nbytes", "AdmissionConfig", "AdmissionLoop",
            "AdmissionQueueFull", "Batcher", "Clock", "ManualClock",
            "ReadyGroup", "SystemClock", "Morsel", "ShardedExecutor",
-           "ShardPlacement", "plan_morsels"]
+           "ShardPlacement", "plan_morsels", "side_bucket_rows"]

@@ -285,11 +285,14 @@ class Batcher:
 
     def _ready_reason(self, group: List[_Admitted],
                       now: float) -> Optional[str]:
-        if len(group) >= self.config.max_batch_requests:
-            return "full"
+        # deadline first: once the oldest request is genuinely due the
+        # whole group — sub-cap tail included — must go (the "full" tail
+        # hold only applies while nothing has waited out its budget)
         oldest = min(a.admitted_at for a in group)
         if now >= oldest + self.effective_latency_budget():
             return "deadline"
+        if len(group) >= self.config.max_batch_requests:
+            return "full"
         return None
 
     def pop_ready(self, now: Optional[float] = None,
@@ -299,7 +302,17 @@ class Batcher:
         than ``max_batch_requests`` release as multiple capped chunks:
         the cap bounds *execution* batch size, not just flush timing — a
         burst that piled up behind one slow execution must not stack into
-        a single giant padded batch."""
+        a single giant padded batch.
+
+        **Tail policy**: a ``"full"``-triggered release only pops whole
+        cap-sized chunks; the sub-cap tail *stays queued* until its own
+        deadline (or until later admissions grow it to a full chunk).
+        The tail's requests are the newest — nothing has waited long —
+        and flushing them immediately would execute a near-empty padded
+        batch exactly when load is high enough that the next burst would
+        have coalesced with them.  Deadline and drain releases still take
+        the tail along: by then its oldest batch-mate has genuinely
+        expired, and a drain must leave nothing behind."""
         if now is None:
             now = self.clock.monotonic()
         cap = max(self.config.max_batch_requests, 1)
@@ -311,14 +324,17 @@ class Batcher:
                 if reason is None:
                     continue
                 # a group is homogeneous in chunkability (same key)
-                step = cap if group[0].chunk else len(group)
-                for lo in range(0, len(group), step):
-                    chunk = group[lo:lo + step]
+                release = group
+                if reason == "full" and group[0].chunk:
+                    release = group[:(len(group) // cap) * cap]
+                step = cap if group[0].chunk else len(release)
+                for lo in range(0, len(release), step):
+                    chunk = release[lo:lo + step]
                     ready.append(ReadyGroup(
                         key=key, items=[a.item for a in chunk],
                         reason=reason,
                         admitted_at=tuple(a.admitted_at for a in chunk)))
-                popped_ids.update(id(a) for a in group)
+                popped_ids.update(id(a) for a in release)
             if ready:
                 # survivors keep their admission order
                 self._queue = [a for a in self._queue

@@ -51,8 +51,12 @@ Execution tiers below the caches are unchanged from PR 1:
 - **morsel (chunked) execution** — large scans split into fixed-size row
   chunks with a tail-padding path (pad rows carry ``valid=False``), so XLA
   compiles exactly one chunk-shaped executable regardless of table size.
-  Only row-local single-scan plans chunk; anything with joins/aggregation
-  falls back to whole-table execution.
+  Only row-local single-scan plans chunk.  Under ``ExecutionConfig(
+  sharded=True)`` the partition-parallel tier additionally covers plans
+  the ``distributed_plan`` rule rewrote — partition-wise joins over
+  co-partitioned tables and two-phase (partial + combine) aggregations —
+  see ``_execute_distributed``; everything else falls back to whole-table
+  execution.
 - **micro-batch admission** — concurrent requests sharing a plan signature
   coalesce: row-local plans stack their input tables into one padded batch
   execution and split the results; requests over identical catalog tables
@@ -103,32 +107,30 @@ import numpy as np
 
 from ..core.codegen import (ExecutionConfig, compile_plan, count_jit_trace,
                             pow2_bucket)
-from ..core.ir import (Node, Plan, bucketed_signature,
+from ..core.ir import (Node, Plan, ROW_LOCAL_OPS, bucketed_signature,
                        is_deterministic_subtree, plan_signature,
                        sharded_signature, subtree_nodes, subtree_signatures)
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
                               OptimizerConfig, referenced_models)
 from ..core.sql_frontend import parse_query
+from ..relational.ops import combine_partials
 from ..relational.table import Schema, Table
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, ReadyGroup, SystemClock)
 from .cache import CostAwareCache, value_nbytes
-from .sharded import ShardedExecutor
+from .sharded import ShardedExecutor, side_bucket_rows
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
-           "CompiledPrediction", "SubplanRef"]
+           "CompiledPrediction", "DistributedSpec", "SubplanRef"]
 
 
 # Ops whose output rows correspond 1:1 (positionally) to their input rows —
 # the precondition for both chunked execution and request stacking.  Joins,
 # aggregation, ordering, limits and unions break the correspondence; UDFs
 # are excluded conservatively (a host callback may inspect the whole batch).
-_ROW_LOCAL_OPS = frozenset({
-    "scan", "filter", "project", "rename", "map", "attach_column",
-    "featurize", "gather_features", "predict_model", "affine", "matmul_bias",
-    "sigmoid", "relu", "softmax", "argmax", "select_column", "threshold",
-    "tree_gemm", "constant_vector",
-})
+# Shared with the distributed_plan rule via core/ir.py so the serving
+# layer's and the optimizer's notions of "row-local" cannot drift.
+_ROW_LOCAL_OPS = ROW_LOCAL_OPS
 
 # Subtrees worth materializing across queries: anything doing model
 # inference or feature construction, plus anything that leaves the process
@@ -181,6 +183,11 @@ class ServiceStats:
     shard_waves: int = 0            # morsel waves dispatched
     partitions_scanned: int = 0     # partitions actually placed on devices
     partitions_pruned: int = 0      # partitions skipped via zone maps
+    # distributed plans (partition-wise joins / two-phase aggregation)
+    shard_join_executions: int = 0  # sharded serves containing a
+                                    # partition-wise join
+    shard_agg_combines: int = 0     # two-phase combine stages run
+    shard_partial_aggs: int = 0     # per-morsel partial aggregates computed
 
 
 @dataclasses.dataclass
@@ -198,6 +205,32 @@ class SubplanRef:
     def describe(self) -> str:
         root = self.subtree_plan.nodes[self.subtree_plan.output]
         return f"{root.op}[{self.n_nodes} nodes] over {self.scan_tables}"
+
+
+@dataclasses.dataclass
+class DistributedSpec:
+    """Local/global split of a distributed-rewritten plan
+    (``core/rules/distributed_plan.py``), derived once at compile time.
+
+    The *local* plan runs per morsel on the sharded executor: the whole
+    plan for a partition-wise join chain, or the sub-plan below the
+    aggregation capped with a ``partial_agg`` head for a two-phase
+    aggregation.  The *global* stage — only present for two-phase — is the
+    host-side ``combine_partials`` fold plus whatever sat above the
+    aggregation, compiled to read the combined table through a
+    ``materialized`` slot."""
+
+    anchor: str                       # partitioned table driving placement
+    part_tables: Tuple[str, ...]      # all partitioned scans, anchor first
+    local_plan: Plan                  # per-morsel program
+    local_raw_fn: Any                 # unjitted closure for local_plan
+    local_sig: str                    # plan_signature(local_plan): the
+                                      # sharded-twin identity half
+    n_joins: int = 0                  # partition-wise joins in local_plan
+    # two-phase aggregation pieces (None for join-only plans):
+    agg: Optional[Tuple[Optional[str], Dict[str, Tuple], str]] = None
+                                      # (key, aggs, slot)
+    global_fn: Any = None             # residual above the agg; reads slot
 
 
 @dataclasses.dataclass
@@ -226,6 +259,10 @@ class CompiledPrediction:
     # an execution already holding it races that) may keep its partition
     # *count* while its data — and therefore its zone maps — changed.
     catalog_versions: Tuple[Tuple[str, int], ...] = ()
+    # Local/global split for plans the distributed_plan rule rewrote
+    # (partition-wise joins / two-phase aggregation); None for row-local
+    # and whole-table plans.
+    dist: Optional[DistributedSpec] = None
 
 
 class PredictionTicket:
@@ -715,11 +752,14 @@ class PredictionService:
             # Caller-supplied tables may violate catalog stats; stats-derived
             # pruning would then silently mispredict — and zone maps
             # collected at registration say nothing about request data, so
-            # partition pruning is equally unsound here.  WHERE-clause-
-            # derived pruning stays on (sound for any data).
+            # partition pruning is equally unsound here, as is the
+            # distributed rewrite (co-partitioning is a registered-data
+            # property).  WHERE-clause-derived pruning stays on (sound for
+            # any data).
             opt_config = dataclasses.replace(
                 opt_config, enable_stats_pruning=False,
-                enable_partition_pruning=False)
+                enable_partition_pruning=False,
+                enable_distributed_plan=False)
         optimized, report = CrossOptimizer(
             self.catalog, opt_config).optimize(plan)
         model_names = report.referenced_models
@@ -768,6 +808,9 @@ class PredictionService:
         if len(scans) == 1 and all(n.op in _ROW_LOCAL_OPS
                                    for n in exec_plan.nodes.values()):
             chunk_table = scans[0]
+        dist = None
+        if splice_ref is None:
+            dist = self._distributed_spec(exec_plan, overridden, raw_fn)
         compile_time = time.perf_counter() - t0
         compiled = CompiledPrediction(
             key=key, signature=sig, plan=exec_plan, report=report, fn=fn,
@@ -775,7 +818,8 @@ class PredictionService:
             compile_time_s=compile_time, model_names=model_names,
             capture=capture_ref, splice=splice_ref, raw_fn=raw_fn,
             catalog_versions=tuple((t, self._table_version(t))
-                                   for t in full_scans))
+                                   for t in full_scans),
+            dist=dist)
         tags = tuple(("model", m) for m in model_names) \
             + tuple(("table", t) for t in full_scans)
         evicted = self._exec_cache.put(
@@ -787,6 +831,76 @@ class PredictionService:
         # max_cache_entries=0 means "no caching": the fresh compile was
         # evicted immediately above, so fall back to it.
         return entry.value if entry is not None else compiled
+
+    def _distributed_spec(self, exec_plan: Plan,
+                          overridden: Tuple[str, ...],
+                          raw_fn: Any) -> Optional[DistributedSpec]:
+        """Derive the local/global split for a distributed-rewritten plan,
+        re-verifying partition-locality on the *final* optimized plan (the
+        rule marked an earlier rewrite stage; later rules only ever turn
+        model ops into row-local LA forms or drop joins, but re-deriving
+        costs little and can never be stale).  Returns ``None`` when the
+        plan is not distributable — execution then falls back to the
+        whole-table tier, which is always correct."""
+        if not self.execution_config.sharded or overridden:
+            return None
+        from ..core.rules.distributed_plan import (local_anchor,
+                                                   two_phase_candidate)
+        nodes = exec_plan.nodes.values()
+        has_join = any(n.op == "join" and n.attrs.get("partition_wise")
+                       for n in nodes)
+        has_agg = any(n.op == "group_agg" and n.attrs.get("two_phase")
+                      for n in nodes)
+        if not has_join and not has_agg:
+            return None
+        agg_spec = None
+        global_fn = None
+        if has_agg:
+            gid = two_phase_candidate(exec_plan, self.catalog)
+            if gid is None:
+                return None
+            g = exec_plan.nodes[gid]
+            anchor = local_anchor(exec_plan, g.inputs[0], self.catalog)
+            nids = subtree_nodes(exec_plan, g.inputs[0])
+            local_plan = Plan({i: exec_plan.nodes[i].copy() for i in nids},
+                              output=g.inputs[0])
+            head = Node(op="partial_agg", category=g.category,
+                        inputs=[local_plan.output],
+                        attrs={"key": g.attrs.get("key"),
+                               "aggs": dict(g.attrs["aggs"]),
+                               "num_groups": g.attrs.get("num_groups")},
+                        out_kind="table")
+            local_plan.output = local_plan.add(head)
+            slot = "__combined__"
+            residual = exec_plan.copy()
+            leaf = Node(op="materialized", category=g.category, inputs=[],
+                        attrs={"slot": slot, "sig": "two_phase_combined"},
+                        out_kind=g.out_kind)
+            residual.replace(gid, leaf)
+            residual.prune_dead()
+            # tiny (num_groups rows) and host-side: no jit, zero traces
+            global_fn = compile_plan(residual, self.catalog,
+                                     self.execution_config)
+            local_raw_fn = compile_plan(local_plan, self.catalog,
+                                        self.execution_config)
+            agg_spec = (g.attrs.get("key"), dict(g.attrs["aggs"]), slot)
+        else:
+            anchor = local_anchor(exec_plan, exec_plan.output, self.catalog)
+            if anchor is None:
+                return None          # join marked but plan not fully local
+            local_plan = exec_plan
+            local_raw_fn = raw_fn    # shares the (capture-aware) closure
+        scans = sorted({n.attrs["table"]
+                        for n in local_plan.nodes.values()
+                        if n.op == "scan"})
+        n_joins = sum(1 for n in local_plan.nodes.values()
+                      if n.op == "join" and n.attrs.get("partition_wise"))
+        return DistributedSpec(
+            anchor=anchor,
+            part_tables=(anchor,) + tuple(t for t in scans if t != anchor),
+            local_plan=local_plan, local_raw_fn=local_raw_fn,
+            local_sig=plan_signature(local_plan), n_joins=n_joins,
+            agg=agg_spec, global_fn=global_fn)
 
     def _maybe_upgrade_to_splice(self, key: Tuple, hit: CompiledPrediction
                                  ) -> Optional[CompiledPrediction]:
@@ -963,7 +1077,9 @@ class PredictionService:
     # -- partition-parallel (sharded) tier ------------------------------------
     def _should_shard(self, compiled: CompiledPrediction,
                       tables: Optional[Dict[str, Table]]) -> bool:
-        """Sharded execution applies to row-local single-scan plans over a
+        """Sharded execution applies to plans the distributed_plan rule
+        rewrote (partition-wise joins / two-phase aggregation, carried in
+        ``compiled.dist``) and to row-local single-scan plans over a
         *partitioned, non-overridden* catalog table.  Spliced plans are
         excluded (a materialized slot's rows would have to be re-aligned
         with each morsel's partition rows); everything else — admission
@@ -971,13 +1087,22 @@ class PredictionService:
         invalidation — works unchanged around this branch."""
         if not self.execution_config.sharded:
             return False
-        if compiled.chunk_table is None or compiled.splice is not None:
+        if compiled.splice is not None:
+            return False
+        getter = getattr(self.catalog, "get_partitioned", None)
+        if getter is None:
+            return False
+        if compiled.dist is not None:
+            # distributed plans compile only against catalog data (the
+            # rule is off for override requests); the guard is belt and
+            # braces for hand-constructed CompiledPredictions
+            return not (tables
+                        and any(t in tables for t in compiled.scan_tables))
+        if compiled.chunk_table is None:
             return False
         if tables and compiled.chunk_table in tables:
             return False            # request-supplied data: no zone maps
-        getter = getattr(self.catalog, "get_partitioned", None)
-        return getter is not None \
-            and getter(compiled.chunk_table) is not None
+        return getter(compiled.chunk_table) is not None
 
     def _shard_executor(self) -> ShardedExecutor:
         if self._shard_exec is None:
@@ -995,6 +1120,8 @@ class PredictionService:
         Captures are not stored from this path: a morsel's output rows are
         partition slices, not the whole-table value the result-cache key
         would claim."""
+        if compiled.dist is not None:
+            return self._execute_distributed(compiled, tabs, store_capture)
         cfg = self.execution_config
         name = compiled.chunk_table
         pt = self.catalog.get_partitioned(name)
@@ -1036,9 +1163,88 @@ class PredictionService:
             self.stats.partitions_pruned += pt.n_partitions - len(parts)
         return out
 
+    def _execute_distributed(self, compiled: CompiledPrediction,
+                             tabs: Dict[str, Table],
+                             store_capture: bool = True) -> Any:
+        """Partition-wise join / two-phase aggregation execution: place
+        the anchor table's surviving partitions across the mesh, gather
+        each join side's *aligned* partitions per morsel, run the local
+        program, and — for two-phase aggregation — fold the per-morsel
+        partial states host-side before the global residual.
+
+        Every partitioned table the local plan reads is version-checked
+        against the compile-time snapshot; any mismatch (a re-registration
+        racing the invalidation hook) voids both the pruned-partition set
+        *and* the co-partitioning proof, so the serve falls back to
+        whole-table execution — pruning and distribution are only ever
+        optimizations."""
+        dist = compiled.dist
+        cfg = self.execution_config
+        getter = getattr(self.catalog, "get_partitioned", None)
+        pts = {}
+        for t in dist.part_tables:
+            pt = getter(t) if getter is not None else None
+            if pt is None or (t, pt.version) not in compiled.catalog_versions:
+                return self._execute_whole(compiled, tabs, store_capture)
+            pts[t] = pt
+        anchor_pt = pts[dist.anchor]
+        scan = next(n for n in dist.local_plan.nodes.values()
+                    if n.op == "scan" and n.attrs["table"] == dist.anchor)
+        surviving = scan.attrs.get("partitions")
+        if surviving is None \
+                or any(i >= anchor_pt.n_partitions for i in surviving):
+            surviving = tuple(range(anchor_pt.n_partitions))
+        parts = [anchor_pt.partitions[i] for i in surviving]
+        executor = self._shard_executor()
+        placement = executor.plan(
+            parts, min_bucket_rows=cfg.shard_min_bucket_rows,
+            morsel_rows=cfg.shard_morsel_rows)
+        sides = {t: (pts[t], side_bucket_rows(placement,
+                                              pts[t].partitions,
+                                              cfg.shard_min_bucket_rows))
+                 for t in dist.part_tables[1:]}
+        side_buckets = tuple(sorted((t, b) for t, (_pt, b)
+                                    in sides.items()))
+        twin, fresh, tags = self._twin_executable(
+            compiled,
+            sharded_signature(dist.local_sig, placement.bucket_rows,
+                              executor.mesh_shape, side_buckets),
+            placement.bucket_rows, "shard_hits", "shard_compiles",
+            raw_fn=dist.local_raw_fn)
+        unwrap = None
+        if dist.agg is None and compiled.capture is not None:
+            unwrap = (lambda raw: raw[0])
+        combine = None
+        if dist.agg is not None:
+            key, aggs, slot = dist.agg
+            combine = (lambda partials: combine_partials(partials, key,
+                                                         aggs))
+        t0 = time.perf_counter()
+        out = executor.execute(twin.fn, anchor_pt, dist.anchor, parts,
+                               placement, unwrap=unwrap, sides=sides,
+                               combine=combine)
+        if dist.agg is not None:
+            out = dist.global_fn({dist.agg[2]: out})
+        twin.serves += 1
+        self._record_twin_cost(twin, fresh, tags,
+                               time.perf_counter() - t0)
+        with self._lock:
+            self.stats.sharded_executions += 1
+            self.stats.shard_waves += placement.n_waves
+            self.stats.partitions_scanned += len(parts)
+            self.stats.partitions_pruned += \
+                anchor_pt.n_partitions - len(parts)
+            if dist.n_joins:
+                self.stats.shard_join_executions += 1
+            if dist.agg is not None:
+                self.stats.shard_agg_combines += 1
+                self.stats.shard_partial_aggs += max(placement.n_morsels, 1)
+        return out
+
     def shard_info(self) -> Dict[str, Any]:
         """Partition-parallel ledger: mesh geometry plus how much work the
-        zone maps skipped."""
+        zone maps skipped and how often the distributed (join/aggregation)
+        tiers ran."""
         executor = self._shard_exec
         with self._lock:
             s = self.stats
@@ -1056,6 +1262,9 @@ class PredictionService:
                 "partitions_scanned": s.partitions_scanned,
                 "partitions_pruned": s.partitions_pruned,
                 "prune_rate": s.partitions_pruned / total if total else 0.0,
+                "join_executions": s.shard_join_executions,
+                "agg_combines": s.shard_agg_combines,
+                "partial_aggs": s.shard_partial_aggs,
             }
 
     def _execute_spliced(self, compiled: CompiledPrediction,
@@ -1246,18 +1455,20 @@ class PredictionService:
 
     def _twin_executable(self, compiled: CompiledPrediction,
                          derived_sig: str, bucket: int, hit_stat: str,
-                         compile_stat: str
+                         compile_stat: str, raw_fn: Any = None
                          ) -> Tuple[CompiledPrediction, bool, Tuple]:
         """Shape-specialized twin of ``compiled``: same optimized plan and
         codegen closure, its own ``jax.jit`` wrapper, cached under the
         (cache key, derived signature) pair so each derived shape compiles
-        at most once while it stays resident.  Returns ``(executable,
-        fresh, tags)`` — ``fresh`` lets the caller time the first (tracing)
-        execution and re-put the observed cost (with the same ``tags``, so
-        a twin whose zero-cost initial insert self-evicted is re-created
-        tagged and stays reachable by invalidation), giving eviction an
-        honest replacement price instead of the near-zero closure-wrapping
-        time."""
+        at most once while it stays resident.  ``raw_fn`` overrides the
+        closure being re-jitted — the distributed tier's twin wraps the
+        *local* (per-morsel) program, not the whole-plan one.  Returns
+        ``(executable, fresh, tags)`` — ``fresh`` lets the caller time the
+        first (tracing) execution and re-put the observed cost (with the
+        same ``tags``, so a twin whose zero-cost initial insert
+        self-evicted is re-created tagged and stays reachable by
+        invalidation), giving eviction an honest replacement price instead
+        of the near-zero closure-wrapping time."""
         bkey = (compiled.key, derived_sig)
         hit = self._exec_cache.get(bkey, count=False)
         if hit is not None:
@@ -1269,7 +1480,8 @@ class PredictionService:
             setattr(self.stats, compile_stat,
                     getattr(self.stats, compile_stat) + 1)
         derived = dataclasses.replace(
-            compiled, key=bkey, fn=self._jit(compiled.raw_fn),
+            compiled, key=bkey,
+            fn=self._jit(raw_fn if raw_fn is not None else compiled.raw_fn),
             bucket_rows=bucket, serves=0)
         base = self._exec_cache.entry(compiled.key)
         tags = base.tags if base is not None else (

@@ -36,6 +36,21 @@ Two pieces:
 Pad rows carry ``valid=False`` and row-local plans never mix rows, so
 reassembling the per-partition output slices in partition order is
 bit-exact against single-device execution over the same partitions.
+
+Beyond row-local scans (``core/rules/distributed_plan.py``):
+
+- **aligned morsel pairs** — for a partition-wise join, every non-anchor
+  join input is gathered from *its own* partitioned table at the morsel's
+  partition indices (co-partitioning makes index ``i`` of both sides hold
+  the same key range) and padded to that side's shared bucket
+  (:func:`side_bucket_rows`), so the fused local join still compiles to
+  exactly one executable shape per (signature, buckets, mesh);
+- **combine stage** — for a two-phase aggregation the per-morsel outputs
+  are mergeable partial states, not row slices: ``execute(...,
+  combine=...)`` skips the per-partition split and folds the partials
+  host-side in ascending partition order (deterministic however morsels
+  were placed, so 1-device and 8-device runs of the same placement are
+  bit-identical).
 """
 
 from __future__ import annotations
@@ -53,7 +68,8 @@ from ..core.partition import Partition
 from ..distributed.sharding import data_axes_of
 from ..relational.table import Table
 
-__all__ = ["Morsel", "ShardPlacement", "ShardedExecutor", "plan_morsels"]
+__all__ = ["Morsel", "ShardPlacement", "ShardedExecutor", "plan_morsels",
+           "side_bucket_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +150,21 @@ def plan_morsels(part_rows: Sequence[Tuple[int, int]], n_devices: int,
                           total_rows=total)
 
 
+def side_bucket_rows(placement: ShardPlacement, side_partitions:
+                     Sequence[Partition], min_bucket_rows: int = 64) -> int:
+    """Shared padded row bucket for one non-anchor join input: the pow-2
+    cover of the largest per-morsel row total that side contributes when
+    gathered at the placement's aligned partition indices.  One bucket per
+    side keeps the executable shape count at one however morsel
+    compositions vary across waves."""
+    most = 1
+    for assignment in placement.assignments:
+        for m in assignment:
+            most = max(most, sum(side_partitions[i].n_rows
+                                 for i in m.partitions))
+    return pow2_bucket(most, min_rows=min_bucket_rows)
+
+
 def _pad_rows(arr: np.ndarray, pad: int) -> np.ndarray:
     if pad <= 0:
         return arr
@@ -172,7 +203,10 @@ class ShardedExecutor:
     def execute(self, fn: Callable[[Dict[str, Table]], Any], source: Any,
                 scan_name: str, partitions: Sequence[Partition],
                 placement: ShardPlacement,
-                unwrap: Optional[Callable[[Any], Any]] = None) -> Any:
+                unwrap: Optional[Callable[[Any], Any]] = None,
+                sides: Optional[Dict[str, Tuple[Any, int]]] = None,
+                combine: Optional[Callable[[List[Any]], Any]] = None
+                ) -> Any:
         """Execute ``fn`` over ``partitions`` of ``source`` per
         ``placement`` and reassemble the output in partition order.
 
@@ -181,12 +215,24 @@ class ShardedExecutor:
         the device->host snapshot across serves (it would otherwise be
         paid per execution, proportional to *total* table size however
         many partitions were pruned).  ``fn`` must be the jitted fused
-        plan taking ``{scan_name: Table}``; ``unwrap`` post-processes each
-        morsel's raw result (the serving layer drops capture outputs with
-        it).  Returns a ``Table`` or matrix whose rows are exactly the
-        surviving partitions' rows, in their original order — bit-exact
-        against a single-device run of the same plan over the same
-        partitions."""
+        plan taking ``{scan_name: Table, ...}``; ``unwrap`` post-processes
+        each morsel's raw result (the serving layer drops capture outputs
+        with it).
+
+        ``sides`` maps additional scan names (partition-wise join inputs)
+        to ``(PartitionedTable, bucket_rows)``: each morsel gathers the
+        *same partition indices* from every side — co-partitioning
+        guarantees the aligned pair holds all possible matches — padded to
+        that side's shared bucket.
+
+        ``combine=None`` (row-local output): returns a ``Table`` or matrix
+        whose rows are exactly the anchor's surviving partitions' rows, in
+        their original order — bit-exact against a single-device run of
+        the same plan over the same partitions.  With ``combine`` (two-
+        phase aggregation) every morsel's output is a mergeable partial
+        state; they are folded host-side in ascending partition order
+        (placement-independent, so any device count is bit-identical) and
+        the combined value is returned."""
         part_map = {p.index: p for p in partitions}
         if hasattr(source, "host_view"):           # PartitionedTable
             host_cols, host_valid = source.host_view()
@@ -196,34 +242,57 @@ class ShardedExecutor:
             host_cols = {k: np.asarray(v) for k, v in table.columns.items()}
             host_valid = np.asarray(table.valid)
         bucket = placement.bucket_rows
+        # (host cols, host valid, partitions, bucket, schema) per join side
+        side_views = {}
+        for name, (src, srows) in (sides or {}).items():
+            s_cols, s_valid = src.host_view()
+            side_views[name] = (s_cols, s_valid, src.partitions,
+                                int(srows), src.table.schema)
 
-        def prepare_morsel(device, morsel: Morsel) -> Table:
-            """Gather + pad + upload one morsel's input.  Runs on the
-            caller thread, serially: the numpy slicing and device_put are
-            GIL-bound, and doing them inside the device workers makes the
-            workers contend with each other instead of overlapping their
-            (GIL-free) execution waits."""
-            parts = [part_map[i] for i in morsel.partitions]
-            pad = bucket - morsel.rows
-
+        def gather_pad(cols: Dict[str, np.ndarray], valid: np.ndarray,
+                       parts: Sequence[Partition], pad: int, schema,
+                       device) -> Table:
             def gather(arr: np.ndarray) -> np.ndarray:
                 pieces = [arr[p.start:p.stop] for p in parts]
                 out = pieces[0] if len(pieces) == 1 \
                     else np.concatenate(pieces, axis=0)
                 return _pad_rows(out, pad)
 
-            cols = {k: jax.device_put(gather(arr), device)
-                    for k, arr in host_cols.items()}
-            valid = jax.device_put(gather(host_valid), device)
-            return Table(cols, valid, table.schema)
+            dev_cols = {k: jax.device_put(gather(arr), device)
+                        for k, arr in cols.items()}
+            return Table(dev_cols, jax.device_put(gather(valid), device),
+                         schema)
+
+        def prepare_morsel(device, morsel: Morsel) -> Dict[str, Table]:
+            """Gather + pad + upload one morsel's inputs (anchor plus any
+            aligned join sides).  Runs on the caller thread, serially: the
+            numpy slicing and device_put are GIL-bound, and doing them
+            inside the device workers makes the workers contend with each
+            other instead of overlapping their (GIL-free) execution
+            waits."""
+            parts = [part_map[i] for i in morsel.partitions]
+            tables = {scan_name: gather_pad(
+                host_cols, host_valid, parts, bucket - morsel.rows,
+                table.schema, device)}
+            for name, (s_cols, s_valid, s_parts, srows, s_schema) \
+                    in side_views.items():
+                aligned = [s_parts[i] for i in morsel.partitions]
+                rows = sum(p.n_rows for p in aligned)
+                tables[name] = gather_pad(s_cols, s_valid, aligned,
+                                          srows - rows, s_schema, device)
+            return tables
 
         def run_morsel(morsel: Morsel,
-                       morsel_table: Table) -> List[Tuple[int, Any]]:
+                       tables: Dict[str, Table]) -> List[Tuple[int, Any]]:
             parts = [part_map[i] for i in morsel.partitions]
-            raw = fn({scan_name: morsel_table})
+            raw = fn(tables)
             if unwrap is not None:
                 raw = unwrap(raw)
             raw = jax.block_until_ready(raw)
+            if combine is not None:
+                # partial-aggregate state: one mergeable value per morsel,
+                # ordered by its first partition for the combine fold
+                return [(parts[0].index, raw)]
             # split back per partition, host-side (one transfer per morsel)
             out: List[Tuple[int, Any]] = []
             if isinstance(raw, Table):
@@ -252,22 +321,34 @@ class ShardedExecutor:
 
         def run_device(d: int) -> List[Tuple[int, Any]]:
             pieces: List[Tuple[int, Any]] = []
-            for morsel, morsel_table in prepared[d]:
-                pieces.extend(run_morsel(morsel, morsel_table))
+            for morsel, tables in prepared[d]:
+                pieces.extend(run_morsel(morsel, tables))
             return pieces
         if not active:
             # every partition pruned: run one all-padding morsel to learn
-            # the output schema, then keep zero of its rows
-            zeros = {k: np.zeros((bucket,) + arr.shape[1:], arr.dtype)
-                     for k, arr in host_cols.items()}
-            gtab = Table({k: jax.device_put(v, self.devices[0])
-                          for k, v in zeros.items()},
-                         jax.device_put(np.zeros(bucket, np.bool_),
-                                        self.devices[0]), table.schema)
-            raw = fn({scan_name: gtab})
+            # the output schema, then keep zero of its rows — or, for a
+            # combine stage, to produce the identity partial (no valid
+            # rows), which folds to the same aggregate the whole plan
+            # yields over a fully-filtered table
+            def zeros_table(cols, valid_rows, schema):
+                z = {k: np.zeros((valid_rows,) + arr.shape[1:], arr.dtype)
+                     for k, arr in cols.items()}
+                return Table({k: jax.device_put(v, self.devices[0])
+                              for k, v in z.items()},
+                             jax.device_put(np.zeros(valid_rows, np.bool_),
+                                            self.devices[0]), schema)
+
+            tables = {scan_name: zeros_table(host_cols, bucket,
+                                             table.schema)}
+            for name, (s_cols, _v, _p, srows, s_schema) \
+                    in side_views.items():
+                tables[name] = zeros_table(s_cols, srows, s_schema)
+            raw = fn(tables)
             if unwrap is not None:
                 raw = unwrap(raw)
             raw = jax.block_until_ready(raw)
+            if combine is not None:
+                return combine([raw])
             if isinstance(raw, Table):
                 return Table(
                     {k: v[:0] for k, v in raw.columns.items()},
@@ -298,6 +379,8 @@ class ShardedExecutor:
 
         pieces = sorted((pair for r in results.values() for pair in r),
                         key=lambda pair: pair[0])
+        if combine is not None:
+            return combine([p[1] for p in pieces])
         if isinstance(pieces[0][1], tuple):        # Table morsels
             schema = pieces[0][1][2]
             names = pieces[0][1][0].keys()

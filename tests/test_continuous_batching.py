@@ -382,6 +382,46 @@ def test_oversize_group_releases_in_capped_chunks(base):
         assert t.result(timeout=0).capacity == 3
 
 
+def test_full_release_holds_subcap_tail_until_its_deadline(base):
+    """Tail policy: a cap-overflowing group's "full" release pops whole
+    cap-sized chunks only — the sub-cap tail (the *newest* requests) stays
+    queued to coalesce with the next burst instead of executing a
+    near-empty padded batch.  The tail still honors its own latency
+    budget, and later admissions can complete it into a full chunk."""
+    store, full, _ = base
+    clock = ManualClock()
+    svc = _manual_service(store, clock, max_batch_requests=4)
+    tickets = [svc.submit(SQL, {"patient_info": _sub(full, 3 * i, 3)})
+               for i in range(6)]
+    # full trigger at t=0: one capped chunk of 4 releases, tail of 2 holds
+    assert svc.admission_tick() == 4
+    assert svc.stats.size_flushes == 1
+    assert all(t.done for t in tickets[:4])
+    assert not any(t.done for t in tickets[4:])
+    # not due yet: the tail keeps waiting inside its own budget
+    clock.advance(0.5)
+    assert svc.admission_tick() == 0
+    # two more arrivals complete the tail into a full chunk -> releases
+    tickets += [svc.submit(SQL, {"patient_info": _sub(full, 0, 3)})
+                for _ in range(2)]
+    assert svc.admission_tick() == 4
+    assert svc.stats.size_flushes == 2
+    assert all(t.done for t in tickets)
+    # a tail nothing completes releases at its own deadline instead
+    tail = [svc.submit(SQL, {"patient_info": _sub(full, 0, 3)})
+            for _ in range(5)]
+    assert svc.admission_tick() == 4                # full chunk, 1 held
+    assert not tail[4].done
+    clock.advance(1.0)                              # tail's budget expires
+    assert svc.admission_tick() == 1
+    assert svc.stats.deadline_flushes == 1
+    assert tail[4].done
+    # drain still leaves nothing behind
+    svc.submit(SQL, {"patient_info": _sub(full, 0, 3)})
+    assert svc.flush() == 1
+    svc.close()
+
+
 def test_results_device_backed_regardless_of_row_count(base):
     """Every serving path returns the same device-array-backed tables
     PR 1 did — the result type must not flip to numpy when the row count

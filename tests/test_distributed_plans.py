@@ -1,0 +1,642 @@
+"""Partition-wise sharded joins + two-phase aggregation.
+
+Five layers:
+
+1. **Key-aware partitioning units** — ``partition_by`` registration
+   (boundary snapping on duplicate keys, explicit ``partition_bounds``
+   incl. empty partitions, sortedness enforcement) and the zone-map-based
+   ``compatible_partitioning`` check (aligned / misaligned / NaN /
+   unkeyed cases).
+2. **Rule marking units** — ``distributed_plan`` marks co-partitioned
+   joins ``partition_wise`` and eligible aggregations ``two_phase``;
+   ineligible shapes (non-co-partitioned sides, scans above the
+   aggregation, multiple aggregations) stay unmarked.
+3. **Partial/combine units** — ``partial_aggregate`` states over row
+   pieces fold (``combine_partials``) to exactly ``group_aggregate`` over
+   the whole table, keyed and global, including empty pieces and empty
+   groups.
+4. **Service integration** — ``ExecutionConfig(sharded=True)`` routes
+   distributed-rewritten plans through aligned-morsel execution; results
+   match unsharded execution; warm repeats compile nothing; override
+   tables, all-pruned anchors and mid-flight re-registrations fall back.
+5. **Bit-exactness property** (hypothesis + seeded twin): random
+   partition counts/row counts/validity (integer-valued data, so float
+   sums are exact) — sharded == unsharded bitwise; a non-co-partitioned
+   pair must fall back and still agree.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CrossOptimizer, ExecutionConfig, ModelStore,
+                        OptimizerConfig, execute)
+from repro.core.ir import Plan
+from repro.core.partition import PartitionedTable, compatible_partitioning
+from repro.relational import ops as rel_ops
+from repro.relational.expr import col
+from repro.relational.table import ColumnSchema, Table
+from repro.serve import PredictionService
+
+pytestmark = pytest.mark.tier1
+
+AGG_FNS = ["sum", "count", "avg", "min", "max"]
+
+
+def _table(**cols):
+    valid = cols.pop("valid", None)
+    t = Table.from_pydict({k: np.asarray(v) for k, v in cols.items()})
+    if valid is not None:
+        t = t.with_valid(np.asarray(valid, bool))
+    return t
+
+
+def _co_store(n_pids=12, n_rows=60, bounds=(4, 8), seed=0,
+              fact_valid=None, dim_valid=None):
+    """Fact table ``visits`` + dim table ``patients``, both range-
+    partitioned on ``pid`` with the same explicit bounds."""
+    rng = np.random.RandomState(seed)
+    pids = np.sort(rng.randint(0, n_pids, n_rows)).astype(np.int32)
+    visits = _table(pid=pids,
+                    amount=rng.randint(-4, 5, n_rows).astype(np.float32),
+                    valid=fact_valid)
+    patients = _table(pid=np.arange(n_pids, dtype=np.int32),
+                      region=(np.arange(n_pids) % 3).astype(np.int32),
+                      weight=rng.randint(0, 4, n_pids).astype(np.float32),
+                      valid=dim_valid)
+    store = ModelStore()
+    store.register_table("visits", visits, partition_by="pid",
+                         partition_bounds=list(bounds))
+    store.register_table("patients", patients, partition_by="pid",
+                         partition_bounds=list(bounds))
+    return store, visits, patients
+
+
+def _join_plan(filter_pred=None):
+    plan = Plan()
+    v = plan.emit("scan", "RA", [], "table", table="visits")
+    if filter_pred is not None:
+        v = plan.emit("filter", "RA", [v], "table", predicate=filter_pred)
+    p = plan.emit("scan", "RA", [], "table", table="patients")
+    plan.output = plan.emit("join", "RA", [v, p], "table", on="pid",
+                            how="inner")
+    return plan
+
+
+def _join_agg_plan(aggs=None, key="region", num_groups=3,
+                   filter_pred=None):
+    plan = _join_plan(filter_pred)
+    aggs = aggs if aggs is not None else {
+        "total": ("sum", "amount"), "n": ("count", None),
+        "avg_a": ("avg", "amount"), "lo": ("min", "amount"),
+        "hi": ("max", "amount")}
+    plan.output = plan.emit("group_agg", "RA", [plan.output], "table",
+                            key=key, aggs=aggs, num_groups=num_groups)
+    return plan
+
+
+def _sharded(store, **knobs):
+    knobs.setdefault("shard_min_bucket_rows", 4)
+    knobs.setdefault("shard_morsel_rows", 16)
+    return PredictionService(store, execution_config=ExecutionConfig(
+        sharded=True, **knobs))
+
+
+def _assert_tables_equal(got, want):
+    assert got.capacity == want.capacity
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    assert set(got.columns) == set(want.columns)
+    for k in want.columns:
+        g, w = np.asarray(got.columns[k]), np.asarray(want.columns[k])
+        assert (g == w).all(), k
+
+
+def _assert_same_valid_rows(got, want):
+    vg, vw = np.asarray(got.valid), np.asarray(want.valid)
+    assert set(got.columns) == set(want.columns)
+    for k in want.columns:
+        g = np.asarray(got.columns[k])[vg]
+        w = np.asarray(want.columns[k])[vw]
+        assert g.shape == w.shape and (g == w).all(), k
+
+
+# ---------------------------------------------------------------------------
+# 1. Key-aware partitioning + compatible_partitioning
+# ---------------------------------------------------------------------------
+
+def test_partition_by_snaps_duplicate_keys_to_one_partition():
+    t = _table(pid=np.asarray([0, 1, 1, 1, 2, 3], np.int32))
+    pt = PartitionedTable.build(t, partition_rows=2, partition_by="pid")
+    assert pt.partition_by == "pid"
+    # the naive cut at row 2 would split the run of 1s; it must extend
+    assert [(p.start, p.stop) for p in pt.partitions] == [(0, 4), (4, 6)]
+
+
+def test_partition_by_requires_sorted_keys():
+    t = _table(pid=np.asarray([3, 1, 2], np.int32))
+    with pytest.raises(ValueError, match="not sorted"):
+        PartitionedTable.build(t, partition_rows=2, partition_by="pid")
+    with pytest.raises(ValueError, match="not sorted"):
+        PartitionedTable.build_by_bounds(t, "pid", [2])
+
+
+def test_partition_bounds_tile_with_empty_partitions():
+    t = _table(pid=np.asarray([0, 0, 5, 5, 9], np.int32))
+    pt = PartitionedTable.build_by_bounds(t, "pid", [2, 4, 7])
+    assert pt.n_partitions == 4
+    assert [(p.start, p.stop) for p in pt.partitions] == \
+        [(0, 2), (2, 2), (2, 4), (4, 5)]        # [2,4) holds no rows
+    assert pt.partitions[1].zone.n_valid == 0
+
+
+def test_register_table_partition_by_validation():
+    store = ModelStore()
+    t = _table(pid=np.arange(6, dtype=np.int32))
+    with pytest.raises(ValueError, match="partition_by requires"):
+        store.register_table("t", t, partition_by="pid")
+    with pytest.raises(ValueError, match="requires partition_by"):
+        store.register_table("t", t, partition_bounds=[2])
+    store.register_table("t", t, partition_by="pid", partition_rows=2)
+    assert store.get_partitioned("t").partition_by == "pid"
+
+
+def test_compatible_partitioning_aligned_and_misaligned():
+    store, *_ = _co_store(bounds=(4, 8))
+    a = store.get_partitioned("visits")
+    b = store.get_partitioned("patients")
+    assert compatible_partitioning(a, b, "pid")
+    assert not compatible_partitioning(a, b, "amount")   # wrong key
+    assert not compatible_partitioning(a, None, "pid")
+    # different bounds -> overlapping ranges across indices
+    store2, *_ = _co_store(bounds=(6,))
+    assert not compatible_partitioning(
+        a, store2.get_partitioned("patients"), "pid")
+    # row-count partitioning has no declared key
+    t = _table(pid=np.arange(8, dtype=np.int32))
+    unkeyed = PartitionedTable.build(t, partition_rows=4)
+    assert not compatible_partitioning(a, unkeyed, "pid")
+
+
+def test_compatible_partitioning_conservative_on_nan_keys():
+    vals = np.asarray([0.0, np.nan, 5.0, 9.0], np.float32)
+    t = _table(pid=vals)
+    # NaN sorts "anywhere" for the sortedness check but poisons the zone
+    # stats of its partition -> the check must refuse to prove anything
+    pt = PartitionedTable.build_by_bounds(t, "pid", [4.0])
+    other = PartitionedTable.build_by_bounds(
+        _table(pid=np.asarray([1.0, 6.0], np.float32)), "pid", [4.0])
+    assert not compatible_partitioning(pt, other, "pid")
+    assert compatible_partitioning(other, other, "pid")
+
+
+def test_compatible_partitioning_ignores_invalid_rows():
+    # an all-invalid partition has no key range: it constrains nothing
+    t1 = _table(pid=np.asarray([0, 1, 8, 9], np.int32),
+                valid=[1, 1, 0, 0])
+    t2 = _table(pid=np.asarray([1, 7], np.int32))
+    a = PartitionedTable.build_by_bounds(t1, "pid", [5])
+    b = PartitionedTable.build_by_bounds(t2, "pid", [5])
+    # t1's second partition is all-invalid; its physical keys (8, 9) are
+    # never joined, so alignment only needs the valid ranges
+    assert compatible_partitioning(a, b, "pid")
+
+
+# ---------------------------------------------------------------------------
+# 2. Rule marking
+# ---------------------------------------------------------------------------
+
+def _optimize(store, plan, **cfg):
+    return CrossOptimizer(store, OptimizerConfig(**cfg)).optimize(plan)
+
+
+def test_rule_marks_co_partitioned_join_and_two_phase_agg():
+    store, *_ = _co_store()
+    opt, report = _optimize(store, _join_agg_plan())
+    assert report.fired("distributed_plan")
+    join = opt.find("join")[0]
+    agg = opt.find("group_agg")[0]
+    assert join.attrs.get("partition_wise") is True
+    assert agg.attrs.get("two_phase") is True
+    # marks are part of the structural signature: a distributed-rewritten
+    # plan must never share an executable with its whole-table twin
+    from repro.core.ir import plan_signature
+    opt2, _ = _optimize(store, _join_agg_plan(),
+                        enable_distributed_plan=False)
+    assert "partition_wise" not in opt2.find("join")[0].attrs
+    assert plan_signature(opt) != plan_signature(opt2)
+
+
+def test_rule_skips_non_co_partitioned_join():
+    store, visits, patients = _co_store()
+    # re-register the dim side with different bounds: no longer aligned
+    store.register_table("patients", patients, partition_by="pid",
+                         partition_bounds=[6])
+    opt, _ = _optimize(store, _join_agg_plan())
+    assert "partition_wise" not in opt.find("join")[0].attrs
+    # the agg over the (non-local) join is ineligible too
+    assert "two_phase" not in opt.find("group_agg")[0].attrs
+
+
+def test_rule_requires_intact_join_key_provenance():
+    """A rename/map/attach_column between the scan and the join can bind
+    *different values* under the partition key's name; the zone maps say
+    nothing about those, so the join must not be marked partition-wise
+    (regression: this used to silently drop cross-partition matches)."""
+    store, visits, patients = _co_store(n_pids=12, n_rows=60,
+                                        bounds=(4, 8))
+    # visits gains an `other` column whose values are NOT pid-aligned
+    rng = np.random.RandomState(2)
+    shuffled = Table(dict(visits.columns,
+                          other=np.asarray(rng.randint(0, 12, 60),
+                                           np.int32)),
+                     visits.valid,
+                     visits.schema.with_column(
+                         ColumnSchema("other", np.int32)))
+    store.register_table("visits", shuffled, partition_by="pid",
+                         partition_bounds=[4, 8])
+
+    def rebound_plan():
+        plan = Plan()
+        v = plan.emit("scan", "RA", [], "table", table="visits")
+        pr = plan.emit("project", "RA", [v], "table",
+                       columns=["other", "amount"])
+        rn = plan.emit("rename", "RA", [pr], "table",
+                       mapping={"other": "pid"})
+        p = plan.emit("scan", "RA", [], "table", table="patients")
+        plan.output = plan.emit("join", "RA", [rn, p], "table", on="pid",
+                                how="inner")
+        return plan
+
+    opt, _ = _optimize(store, rebound_plan())
+    assert "partition_wise" not in opt.find("join")[0].attrs
+    # end-to-end: the sharded service must fall back and still agree
+    base = PredictionService(store)
+    svc = _sharded(store)
+    want = base.run(rebound_plan())
+    got = svc.run(rebound_plan())
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    assert svc.stats.sharded_executions == 0
+    base.close(); svc.close()
+    # a genuinely intact key still qualifies (filter/project keep values)
+    plan = _join_plan(filter_pred=col("amount") > 0)
+    opt2, _ = _optimize(store, plan)
+    assert opt2.find("join")[0].attrs.get("partition_wise") is True
+
+
+def test_rule_two_phase_over_single_partitioned_scan():
+    """Two-phase aggregation needs no join (and no partition key): any
+    partitioned scan subtree qualifies."""
+    store = ModelStore()
+    t = _table(g=np.asarray([0, 1, 0, 1, 2, 0], np.int32),
+               x=np.arange(6).astype(np.float32))
+    store.register_table("t", t, partition_rows=2)
+    plan = Plan()
+    s = plan.emit("scan", "RA", [], "table", table="t")
+    plan.output = plan.emit("group_agg", "RA", [s], "table", key="g",
+                            aggs={"sx": ("sum", "x")}, num_groups=3)
+    opt, _ = _optimize(store, plan)
+    assert opt.find("group_agg")[0].attrs.get("two_phase") is True
+
+
+def test_rule_skips_agg_with_scan_above_or_second_agg():
+    store, *_ = _co_store()
+    plan = _join_agg_plan(aggs={"total": ("sum", "amount")})
+    # a scan joins the aggregate output downstream: global stage would
+    # need plan inputs of its own -> ineligible
+    extra = plan.emit("scan", "RA", [], "table", table="patients")
+    plan.output = plan.emit("union", "RA", [plan.output, extra], "table")
+    opt, _ = _optimize(store, plan)
+    assert "two_phase" not in opt.find("group_agg")[0].attrs
+    # two aggregations: neither is "the" split point
+    plan2 = _join_agg_plan(aggs={"total": ("sum", "amount")})
+    plan2.output = plan2.emit("group_agg", "RA", [plan2.output], "table",
+                              key=None, aggs={"m": ("max", "total")})
+    opt2, _ = _optimize(store, plan2)
+    assert all("two_phase" not in n.attrs
+               for n in opt2.find("group_agg"))
+
+
+# ---------------------------------------------------------------------------
+# 3. Partial / combine aggregation units
+# ---------------------------------------------------------------------------
+
+def _pieces(table, cuts):
+    edges = [0] + list(cuts) + [table.capacity]
+    return [Table({k: v[edges[i]:edges[i + 1]]
+                   for k, v in table.columns.items()},
+                  table.valid[edges[i]:edges[i + 1]], table.schema)
+            for i in range(len(edges) - 1)]
+
+
+@pytest.mark.parametrize("key,num_groups", [("g", 4), (None, None)])
+def test_partial_combine_equals_one_shot(key, num_groups):
+    rng = np.random.RandomState(3)
+    t = _table(g=rng.randint(0, 4, 20).astype(np.int32),
+               x=rng.randint(-5, 6, 20).astype(np.float32),
+               valid=rng.rand(20) < 0.7)
+    aggs = {f"{fn}_x": (fn, "x") for fn in AGG_FNS}
+    aggs["rows"] = ("count", None)
+    want = rel_ops.group_aggregate(t, key, aggs, num_groups)
+    for cuts in ([7], [0, 20], [5, 5, 13]):      # incl. empty pieces
+        partials = [rel_ops.partial_aggregate(p, key, aggs, num_groups)
+                    for p in _pieces(t, cuts)]
+        got = rel_ops.combine_partials(partials, key, aggs)
+        _assert_tables_equal(got, want)
+        for k in want.columns:
+            assert got.columns[k].dtype == want.columns[k].dtype, k
+
+
+def test_partial_combine_empty_groups_and_all_invalid():
+    t = _table(g=np.asarray([0, 0, 3], np.int32),
+               x=np.asarray([1.0, 2.0, 7.0], np.float32),
+               valid=[1, 1, 0])
+    aggs = {"lo": ("min", "x"), "hi": ("max", "x"), "n": ("count", None)}
+    want = rel_ops.group_aggregate(t, "g", aggs, 4)
+    partials = [rel_ops.partial_aggregate(p, "g", aggs, 4)
+                for p in _pieces(t, [1])]
+    got = rel_ops.combine_partials(partials, "g", aggs)
+    _assert_tables_equal(got, want)         # groups 1, 2, 3 invalid
+    assert not np.asarray(got.valid)[3]     # only-invalid-rows group
+    # fully invalid input: every group empty, same as one-shot
+    t0 = t.with_valid(np.zeros(3, bool))
+    want0 = rel_ops.group_aggregate(t0, "g", aggs, 4)
+    got0 = rel_ops.combine_partials(
+        [rel_ops.partial_aggregate(t0, "g", aggs, 4)], "g", aggs)
+    _assert_tables_equal(got0, want0)
+
+
+def test_partial_aggregate_rejects_non_combinable():
+    t = _table(g=np.zeros(3, np.int32), x=np.arange(3.0))
+    with pytest.raises(ValueError, match="no mergeable partial state"):
+        rel_ops.partial_aggregate(t, "g", {"w": ("median", "x")}, 2)
+
+
+# ---------------------------------------------------------------------------
+# 4. Service integration
+# ---------------------------------------------------------------------------
+
+def test_service_join_agg_bit_exact_vs_unsharded():
+    store, *_ = _co_store(n_pids=12, n_rows=80, bounds=(3, 6, 9))
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_agg_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    info = svc.shard_info()
+    assert info["sharded_executions"] == 1
+    assert info["join_executions"] == 1
+    assert info["agg_combines"] == 1
+    assert info["partial_aggs"] >= 1
+    base.close(); svc.close()
+
+
+def test_service_join_only_valid_rows_exact():
+    store, *_ = _co_store(n_pids=10, n_rows=50, bounds=(2, 5, 7),
+                          dim_valid=[i % 4 != 1 for i in range(10)])
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    # inner join: unmatched left rows carry garbage-but-masked right
+    # columns, so equality is on the mask and the valid rows
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    assert svc.shard_info()["join_executions"] == 1
+    assert svc.shard_info()["agg_combines"] == 0
+    base.close(); svc.close()
+
+
+def test_service_global_agg_over_partitioned_scan_via_sql():
+    """SQL-level global aggregate over one partitioned table rides the
+    two-phase path (no join, no partition key needed)."""
+    store = ModelStore()
+    rng = np.random.RandomState(5)
+    t = _table(x=rng.randint(0, 9, 40).astype(np.float32),
+               valid=rng.rand(40) < 0.8)
+    store.register_table("t", t, partition_rows=8)
+    sql = "SELECT SUM(x) AS s, COUNT(x) AS n, MAX(x) AS m FROM t"
+    base = PredictionService(store)
+    svc = _sharded(store)
+    want, got = base.run(sql), svc.run(sql)
+    _assert_tables_equal(got, want)
+    assert svc.shard_info()["agg_combines"] == 1
+    base.close(); svc.close()
+
+
+def test_service_warm_repeats_compile_nothing():
+    store, *_ = _co_store()
+    svc = _sharded(store)
+    plan = _join_agg_plan()
+    svc.run(plan.copy())
+    before = (svc.stats.cache_misses, svc.stats.shard_compiles,
+              svc.stats.jit_traces)
+    for _ in range(3):
+        svc.run(plan.copy())
+    after = (svc.stats.cache_misses, svc.stats.shard_compiles,
+             svc.stats.jit_traces)
+    assert before == after
+    assert svc.stats.shard_hits >= 3
+    svc.close()
+
+
+def test_service_pruned_anchor_and_all_pruned():
+    store, *_ = _co_store(n_pids=12, n_rows=60, bounds=(4, 8))
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_agg_plan(filter_pred=col("pid") < 4)
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    assert svc.stats.partitions_pruned >= 1      # zone maps skipped some
+    # every anchor partition pruned: combine folds the identity partial
+    plan0 = _join_agg_plan(filter_pred=col("pid") < 0)
+    want0 = base.run(plan0.copy())
+    got0 = svc.run(plan0.copy())
+    _assert_tables_equal(got0, want0)
+    assert not np.asarray(got0.valid).any()
+    base.close(); svc.close()
+
+
+def test_service_override_tables_never_distribute():
+    store, visits, _ = _co_store()
+    base = PredictionService(store)
+    svc = _sharded(store)
+    sub = Table({k: v[:10] for k, v in visits.columns.items()},
+                visits.valid[:10], visits.schema)
+    plan = _join_agg_plan()
+    want = base.run(plan.copy(), {"visits": sub})
+    got = svc.run(plan.copy(), {"visits": sub})
+    _assert_tables_equal(got, want)
+    assert svc.stats.sharded_executions == 0
+    compiled = svc.compile(plan.copy(), {"visits": sub})
+    assert compiled.dist is None
+    assert "partition_wise" not in compiled.plan.find("join")[0].attrs
+    base.close(); svc.close()
+
+
+def test_service_reregistration_falls_back_to_whole_table():
+    """A mid-flight re-registration (racing the invalidation hook) voids
+    the co-partitioning proof: the held executable must serve whole-table
+    instead of joining misaligned partition pairs."""
+    store, visits, patients = _co_store()
+    svc = _sharded(store)
+    plan = _join_agg_plan()
+    compiled = svc.compile(plan.copy())
+    assert compiled.dist is not None
+    want = execute(compiled.plan, store, jit=False)
+    # different bounds, same partition count: stale alignment is wrong
+    store.register_table("patients", patients, partition_by="pid",
+                         partition_bounds=[5, 9])
+    tabs = {"visits": store.get_table("visits"),
+            "patients": store.get_table("patients")}
+    out = svc._execute_sharded(compiled, tabs)
+    _assert_tables_equal(out, want)
+    assert svc.stats.sharded_executions == 0     # whole-table fallback
+    svc.close()
+
+
+def test_service_multi_morsel_waves_match_single_morsel():
+    """Tiny morsel cap -> several waves per device; results identical to
+    the single-morsel placement (combine order is partition order, not
+    placement order)."""
+    store, *_ = _co_store(n_pids=16, n_rows=100, bounds=(2, 5, 7, 9, 12))
+    plan = _join_agg_plan(num_groups=3)
+    svc_big = _sharded(store, shard_morsel_rows=1 << 16)
+    svc_small = _sharded(store, shard_morsel_rows=8)
+    a = svc_big.run(plan.copy())
+    b = svc_small.run(plan.copy())
+    _assert_tables_equal(a, b)
+    assert svc_small.shard_info()["partial_aggs"] \
+        > svc_big.shard_info()["partial_aggs"]
+    svc_big.close(); svc_small.close()
+
+
+def test_service_join_with_model_valid_rows_exact():
+    """The paper's shape: FK join feeding featurize -> predict, sharded
+    partition-wise — predictions per valid row identical to unsharded."""
+    from repro.ml import (LogisticRegression, Pipeline, PipelineMetadata,
+                          StandardScaler)
+    store, visits, patients = _co_store(n_pids=12, n_rows=80,
+                                        bounds=(4, 8))
+    data = {"amount": np.asarray(visits.column("amount"), np.float32),
+            "weight": np.random.RandomState(0).rand(80).astype(np.float32)}
+    sc = StandardScaler(["amount", "weight"]).fit(data)
+    pipe = Pipeline([sc], LogisticRegression(steps=10),
+                    PipelineMetadata(name="m", task="classification"))
+    pipe.fit(data, (data["amount"] > 0).astype(np.int32))
+    store.register_model("m", pipe)
+    plan = _join_plan()
+    f = plan.emit("featurize", "MLD", [plan.output], "matrix",
+                  pipeline_name="m", featurizers=pipe.featurizers,
+                  input_columns=pipe.input_columns())
+    m = plan.emit("predict_model", "MLD", [f], "matrix", model=pipe.model,
+                  model_name="m", proba=True, task="classification")
+    plan.output = plan.emit("attach_column", "RA", [plan.output, m],
+                            "table", name="p")
+    base = PredictionService(store)
+    svc = _sharded(store)
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    assert svc.shard_info()["join_executions"] == 1
+    base.close(); svc.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. Bit-exactness property: sharded == unsharded over random shapes
+# ---------------------------------------------------------------------------
+
+def _check_distributed_bit_exact(n_pids, fact_pids, fact_vals, fact_valid,
+                                 dim_valid, bounds, co_partitioned,
+                                 agg_fns):
+    fact_pids = np.sort(np.asarray(fact_pids, np.int32))
+    visits = _table(pid=fact_pids,
+                    amount=np.asarray(fact_vals, np.float32),
+                    valid=fact_valid)
+    patients = _table(pid=np.arange(n_pids, dtype=np.int32),
+                      region=(np.arange(n_pids) % 3).astype(np.int32),
+                      valid=dim_valid)
+    store = ModelStore()
+    store.register_table("visits", visits, partition_by="pid",
+                         partition_bounds=list(bounds))
+    dim_bounds = list(bounds) if co_partitioned \
+        else [b + 1 for b in bounds] + [max(bounds) + 2]
+    store.register_table("patients", patients, partition_by="pid",
+                         partition_bounds=dim_bounds)
+    aggs = {f"{fn}_{i}": (fn, "amount") for i, fn in enumerate(agg_fns)}
+    plan = _join_agg_plan(aggs=aggs, key="region", num_groups=3)
+    base = PredictionService(store, jit=False)
+    svc = _sharded(store, shard_morsel_rows=8)
+    try:
+        want = base.run(plan.copy())
+        got = svc.run(plan.copy())
+        _assert_tables_equal(got, want)
+        if not co_partitioned:
+            assert svc.stats.sharded_executions == 0
+    finally:
+        base.close(); svc.close()
+
+
+def test_distributed_randomized_sweep():
+    """Seeded twin of the hypothesis property below (runs everywhere,
+    mirrors the repo convention — change both together)."""
+    rng = np.random.RandomState(11)
+    for i in range(25):
+        n_pids = int(rng.randint(1, 13))
+        n_rows = int(rng.randint(1, 40))
+        n_bounds = int(rng.randint(1, 5))
+        bounds = sorted(int(b) for b in rng.randint(0, n_pids + 1,
+                                                    n_bounds))
+        _check_distributed_bit_exact(
+            n_pids=n_pids,
+            fact_pids=rng.randint(0, n_pids, n_rows),
+            fact_vals=rng.randint(-4, 5, n_rows),
+            fact_valid=rng.rand(n_rows) < rng.choice([0.0, 0.6, 1.0]),
+            dim_valid=rng.rand(n_pids) < 0.9,
+            bounds=bounds,
+            co_partitioned=bool(i % 5),          # every 5th must fall back
+            agg_fns=[AGG_FNS[rng.randint(len(AGG_FNS))]
+                     for _ in range(rng.randint(1, 4))])
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        n_pids=st.integers(min_value=1, max_value=12),
+        fact=st.lists(st.tuples(st.integers(0, 11),     # pid (clamped)
+                                st.integers(-4, 4),     # amount
+                                st.booleans()),         # valid
+                      min_size=1, max_size=32),
+        dim_valid_bits=st.lists(st.booleans(), min_size=12, max_size=12),
+        bounds=st.lists(st.integers(0, 12), min_size=1, max_size=4),
+        co_partitioned=st.booleans(),
+        agg_fns=st.lists(st.sampled_from(AGG_FNS), min_size=1,
+                         max_size=3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_distributed_bit_exact_property(n_pids, fact, dim_valid_bits,
+                                            bounds, co_partitioned,
+                                            agg_fns):
+        """Partition-wise join + two-phase aggregation == unsharded
+        execution, bitwise, across random partition layouts (empty
+        partitions included — bounds may repeat or fall outside the key
+        range) and row counts; the non-co-partitioned draw must fall back
+        to whole-table execution and still agree."""
+        _check_distributed_bit_exact(
+            n_pids=n_pids,
+            fact_pids=[min(p, n_pids - 1) for p, _v, _m in fact],
+            fact_vals=[v for _p, v, _m in fact],
+            fact_valid=[m for _p, _v, m in fact],
+            dim_valid=dim_valid_bits[:n_pids],
+            bounds=sorted(bounds),
+            co_partitioned=co_partitioned,
+            agg_fns=agg_fns)
