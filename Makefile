@@ -1,5 +1,5 @@
 .PHONY: verify verify-tier1 bench-subplan bench-batching bench-sharded \
-	bench-join-agg bench-json
+	bench-join-agg bench-tenants bench-json bench-rebaseline
 
 # Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").  verify.sh
 # exports REPRO_TEST_TIMEOUT so the threaded admission-loop tests fail
@@ -28,9 +28,22 @@ bench-sharded:
 bench-join-agg:
 	PYTHONPATH=src python -m benchmarks.sharded_join_agg
 
+# Multi-tenant front door under an adversarial flooder: DRR drain +
+# per-tenant backpressure keep the compliant cohort's p95 within 2.5x
+# its flood-free value.
+bench-tenants:
+	PYTHONPATH=src python -m benchmarks.multi_tenant_saturation
+
 # The quick benchmark suite with the machine-readable export + trajectory
-# check — exactly what the bench-trajectory CI job runs.
+# check — exactly what the bench-trajectory CI job runs.  BENCH_N is
+# numbered per PR so the uploaded artifacts form a perf history.
 bench-json:
-	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_5.json
-	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_5.json \
+	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_6.json
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_6.json \
 		benchmarks/baseline.json
+
+# Rewrite benchmarks/baseline.json from the latest export after an
+# *intentional* perf-profile change (then commit the diff).
+bench-rebaseline:
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_6.json \
+		benchmarks/baseline.json --rebaseline

@@ -19,6 +19,15 @@ not high-water marks: the gate exists to catch "the optimization stopped
 working", not machine-to-machine noise.
 
 Exit code = number of failing metrics; the CI job turns that into red.
+
+``--rebaseline`` rewrites ``baseline.json`` in place from the current
+export instead of checking against it: every tracked (row, metric) pair
+keeps its *identity* (and any per-entry ``tolerance``) but takes the
+exported value as its new floor.  The tracked set is deliberately not
+grown automatically — promoting a new metric into the gate is an
+editorial decision, made by hand.  Use after an intentional perf-profile
+change, then commit the diff; a metric missing from the export still
+fails rather than silently dropping out of the gate.
 """
 
 from __future__ import annotations
@@ -66,17 +75,54 @@ def check(bench: dict, baseline: dict, tolerance: float) -> int:
     return failures
 
 
+def rebaseline(bench: dict, baseline: dict, path: str) -> int:
+    """Rewrite ``path`` with the current export's values for every already
+    tracked (row, metric) pair.  Returns the number of tracked metrics the
+    export could not supply (each stays at its old floor and counts as a
+    failure — rebaselining must not quietly shrink the gate)."""
+    rows = bench.get("benchmarks", {})
+    missing = 0
+    new_baseline: dict = {}
+    for name, tracked in sorted(baseline.items()):
+        entry: dict = {}
+        derived = rows.get(name, {}).get("derived", {})
+        for metric, floor_of in sorted(tracked.items()):
+            if metric == "tolerance":
+                entry[metric] = floor_of
+                continue
+            current = derived.get(metric)
+            if isinstance(current, (int, float)):
+                entry[metric] = round(float(current), 2)
+                print(f"  {name}.{metric}: {floor_of} -> {entry[metric]}")
+            else:
+                entry[metric] = floor_of
+                print(f"FAIL {name}.{metric}: missing from export, "
+                      f"keeping {floor_of}")
+                missing += 1
+        new_baseline[name] = entry
+    with open(path, "w") as fh:
+        json.dump(new_baseline, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(new_baseline)} tracked entries to {path}")
+    return missing
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench_json", help="export from benchmarks.run --json")
     ap.add_argument("baseline_json", help="committed tracked metrics")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional regression (default 0.2)")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="rewrite baseline_json from the export instead "
+                         "of checking against it")
     args = ap.parse_args()
     with open(args.bench_json) as fh:
         bench = json.load(fh)
     with open(args.baseline_json) as fh:
         baseline = json.load(fh)
+    if args.rebaseline:
+        return rebaseline(bench, baseline, args.baseline_json)
     failures = check(bench, baseline, args.tolerance)
     if failures:
         print(f"{failures} tracked metric(s) regressed >"

@@ -68,8 +68,9 @@ def main() -> int:
 
     from . import (continuous_batching, fig2a_projection_pushdown,
                    fig2b_clustering, fig2c_inlining, fig2d_nn_translation,
-                   fig3_integration, lossy_pushdown, plan_cache, pruning,
-                   sharded_join_agg, sharded_scan, subplan_reuse)
+                   fig3_integration, lossy_pushdown, multi_tenant_saturation,
+                   plan_cache, pruning, sharded_join_agg, sharded_scan,
+                   subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -100,6 +101,9 @@ def main() -> int:
         ("continuous_batching", lambda: continuous_batching.run(
             n_rows=2_000 if args.quick else 4_000,
             n_requests=32 if args.quick else 64)),
+        ("multi_tenant", lambda: multi_tenant_saturation.run(
+            n_rows=2_000 if args.quick else 4_000,
+            reqs_per_tenant=16 if args.quick else 32)),
     ]
     failures = 0
     for name, job in jobs:

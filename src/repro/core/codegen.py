@@ -22,6 +22,7 @@ modes map to:
 from __future__ import annotations
 
 import functools
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -30,12 +31,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..relational import ops as rel_ops
+from ..relational.expr import bind_params, expr_params
 from ..relational.table import ColumnSchema, Schema, Table
-from .ir import Plan
+from .ir import Plan, plan_params
 
-__all__ = ["compile_plan", "execute", "ExecutionConfig", "compile_stats",
-           "reset_compile_stats", "add_compile_listener", "pow2_bucket",
-           "count_jit_trace"]
+__all__ = ["compile_plan", "execute", "resolve_params", "ExecutionConfig",
+           "compile_stats", "reset_compile_stats", "add_compile_listener",
+           "pow2_bucket", "count_jit_trace"]
+
+# XLA's CPU client owns a worker pool sized by the host's core count.  On a
+# one-core host that single worker executes the whole computation — including
+# any pure_callback, whose argument transfer (jax routes callback operands
+# through device_put, so materializing them needs the same worker) then waits
+# on the thread it is running on.  The external/container runtime wedges
+# exactly there once operands outgrow the inline-copy path.  Synchronous
+# dispatch keeps those transfers on the calling thread; with one core the
+# async pipeline had nothing to overlap anyway, so this costs nothing.
+if os.cpu_count() == 1:
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 
 class ExecutionConfig:
@@ -294,9 +307,25 @@ def compile_plan(plan: Plan, catalog,
         listener(plan)
     order = plan.topo_order()
     nodes = plan.nodes
+    # Filter/map nodes holding Param placeholders bind them *inside* the
+    # closure, against the reserved ``__params__`` entry of the tables dict:
+    # under jit the bound values are tracers, so one traced executable
+    # serves every literal binding (the parameterized-plan-reuse contract).
+    parametric = {nid for nid in order
+                  if nodes[nid].op in ("filter", "map")
+                  and plan_params(plan, [nid])}
 
     def run(tables: Dict[str, Table]) -> Any:
         env: Dict[str, Any] = {}
+
+        def bound(expr):
+            try:
+                return bind_params(expr, tables.get("__params__") or {})
+            except KeyError as k:
+                raise ValueError(
+                    f"unbound query parameter {k.args[0]!r}: pass "
+                    f"params= with a value for it") from None
+
         for nid in order:
             n = nodes[nid]
             op = n.op
@@ -307,7 +336,10 @@ def compile_plan(plan: Plan, catalog,
             elif op == "materialized":
                 env[nid] = tables[a["slot"]]
             elif op == "filter":
-                env[nid] = rel_ops.filter_(ins[0], a["predicate"])
+                pred = a["predicate"]
+                if nid in parametric:
+                    pred = bound(pred)
+                env[nid] = rel_ops.filter_(ins[0], pred)
             elif op == "project":
                 env[nid] = rel_ops.project(ins[0], a["columns"])
             elif op == "rename":
@@ -316,7 +348,10 @@ def compile_plan(plan: Plan, catalog,
                 cols = {mapping.get(k, k): v for k, v in t.columns.items()}
                 env[nid] = Table(cols, t.valid, t.schema.rename(mapping))
             elif op == "map":
-                env[nid] = rel_ops.with_column(ins[0], a["name"], a["expr"])
+                expr = a["expr"]
+                if nid in parametric:
+                    expr = bound(expr)
+                env[nid] = rel_ops.with_column(ins[0], a["name"], expr)
             elif op == "join":
                 env[nid] = rel_ops.join_unique(ins[0], ins[1], on=a["on"],
                                                how=a.get("how", "inner"))
@@ -419,15 +454,47 @@ def compile_plan(plan: Plan, catalog,
     return run
 
 
+def resolve_params(plan: Plan, params: Any) -> Dict[str, jnp.ndarray]:
+    """Normalize a ``params`` argument (positional sequence or name->value
+    mapping) into the ``__params__`` binding dict, validated against the
+    plan's unbound placeholders.  Positional sequences follow the parse
+    order recorded by the SQL frontend (``plan.param_order``); values are
+    canonicalized to jnp scalars so the jitted trace is stable across
+    bindings of the same dtype."""
+    names = plan_params(plan)
+    if params is None:
+        params = {}
+    if not isinstance(params, dict):
+        order = getattr(plan, "param_order", None)
+        if order is None:
+            raise ValueError(
+                "positional params need a plan with recorded parameter "
+                "order (parse_query output); pass a {name: value} dict")
+        if len(params) != len(order):
+            raise ValueError(
+                f"expected {len(order)} parameter(s) "
+                f"({', '.join(order)}), got {len(params)}")
+        params = dict(zip(order, params))
+    missing = sorted(names - set(params))
+    if missing:
+        raise ValueError(f"unbound query parameter(s): {', '.join(missing)}")
+    return {k: jnp.asarray(v) for k, v in params.items() if k in names}
+
+
 def execute(plan: Plan, catalog, config: Optional[ExecutionConfig] = None,
-            jit: bool = True, tables: Optional[Dict[str, Table]] = None
-            ) -> Any:
-    """Execute ``plan`` against catalog tables (or ``tables`` override)."""
+            jit: bool = True, tables: Optional[Dict[str, Table]] = None,
+            params: Any = None) -> Any:
+    """Execute ``plan`` against catalog tables (or ``tables`` override).
+
+    ``params`` binds query parameters (``?`` / ``:name`` placeholders from
+    the SQL frontend): a sequence for positional, a mapping for named."""
     needed = [n.attrs["table"] for n in plan.nodes.values() if n.op == "scan"]
     tabs = dict(tables or {})
     for name in needed:
         if name not in tabs:
             tabs[name] = catalog.get_table(name)
+    if params is not None or plan_params(plan):
+        tabs["__params__"] = resolve_params(plan, params)
     fn = compile_plan(plan, catalog, config)
     if jit:
         fn = jax.jit(fn)

@@ -21,11 +21,13 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, List, Optional,
+                    Sequence, Set, Tuple)
 
 __all__ = ["Category", "Node", "Plan", "canonical_form", "plan_signature",
            "subtree_signatures", "subtree_nodes", "is_deterministic_subtree",
-           "bucketed_signature", "sharded_signature", "ROW_LOCAL_OPS"]
+           "bucketed_signature", "sharded_signature", "ROW_LOCAL_OPS",
+           "plan_params"]
 
 
 class Category:
@@ -357,3 +359,21 @@ def is_deterministic_subtree(plan: Plan, root: str) -> bool:
     (the serving layer's result cache)."""
     return all(plan.nodes[nid].op not in _NONDETERMINISTIC_OPS
                for nid in subtree_nodes(plan, root))
+
+
+def plan_params(plan: Plan, nids: Optional[Sequence[str]] = None
+                ) -> FrozenSet[str]:
+    """Names of unbound :class:`~repro.relational.expr.Param` placeholders
+    appearing in the expressions of ``plan`` (or just the nodes in
+    ``nids``).  A parameterized plan canonicalizes by parameter *name*, so
+    one signature serves every literal binding — but its subtrees are not
+    result-cacheable (the cache key would not see the values) and its
+    execution needs a ``__params__`` binding; both call sites gate on this
+    helper."""
+    from ..relational.expr import Expr, expr_params
+    names: Set[str] = set()
+    for nid in (nids if nids is not None else plan.nodes):
+        for v in plan.nodes[nid].attrs.values():
+            if isinstance(v, Expr):
+                names |= expr_params(v)
+    return frozenset(names)

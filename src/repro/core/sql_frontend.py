@@ -19,22 +19,80 @@ model invocations embed: each distinct PREDICT call becomes a
 ``featurize -> predict_model -> attach_column`` IR chain and its expression
 site is rewritten to reference the attached column, keeping scalar expressions
 purely relational.
+
+Two front-door affordances live here rather than in the serving layer:
+
+- **Parameterized queries** — ``?`` (positional) and ``:name`` (named)
+  placeholders parse into :class:`~repro.relational.expr.Param` nodes, which
+  canonicalize by name so that repeated queries differing only in literals
+  share one plan signature (and therefore one compiled executable).  The
+  parser records binding order on the returned plan as ``plan.param_order``.
+- **Positioned errors** — every failure raises :class:`SqlError` carrying the
+  character offset (``err.pos``) plus a caret snippet, including unknown
+  tables/columns/models resolved against the catalog when it exposes schema
+  (``get_table``); catalogs without schema skip name resolution.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
-from ..relational.expr import BinOp, CaseWhen, Col, Const, Expr, UnaryOp
+from ..relational.expr import (BinOp, CaseWhen, Col, Const, Expr, Param,
+                               UnaryOp)
 from .ir import Category, Node, Plan
 
-__all__ = ["parse_query", "SqlError"]
+__all__ = ["parse_query", "SqlError", "SqlLookupError"]
+
+
+def _format_sql_error(message: str, sql: Optional[str],
+                      pos: Optional[int]) -> str:
+    """Render ``message`` with a single-line caret snippet pointing at
+    ``pos`` (character offset into ``sql``)."""
+    if sql is None or pos is None:
+        return message
+    pos = max(0, min(int(pos), len(sql)))
+    start = sql.rfind("\n", 0, pos) + 1
+    end = sql.find("\n", pos)
+    if end == -1:
+        end = len(sql)
+    col = pos - start
+    lo = max(0, col - 48)
+    hi = min(end - start, col + 48)
+    snippet = sql[start + lo:start + hi]
+    caret = " " * (col - lo) + "^"
+    return f"{message} (at offset {pos})\n    {snippet}\n    {caret}"
 
 
 class SqlError(ValueError):
-    pass
+    """Front-door parse/resolution error.
+
+    ``pos`` is the character offset of the offending token in the original
+    query text (always set by the parser) and ``str(err)`` includes a caret
+    snippet — the contract the fuzz tests pin: *every* malformed query
+    surfaces as a positioned ``SqlError``, never a raw exception.
+    """
+
+    def __init__(self, message: str, sql: Optional[str] = None,
+                 pos: Optional[int] = None):
+        self.message = message
+        self.sql = sql
+        self.pos = pos
+        super().__init__(_format_sql_error(message, sql, pos))
+
+
+class SqlLookupError(SqlError, KeyError):
+    """Unknown table/column/model.  Doubles as :class:`KeyError` because
+    that is what catalog lookups historically raised — callers written
+    against the old contract (``except KeyError``) keep working, while new
+    callers get the positioned caret snippet.
+
+    ``KeyError.__str__`` (which would repr-quote the message) is shadowed
+    by the explicit override so the snippet renders verbatim."""
+
+    def __str__(self) -> str:
+        return _format_sql_error(self.message, self.sql, self.pos)
 
 
 # ---------------------------------------------------------------------------
@@ -45,6 +103,7 @@ _TOKEN_RE = re.compile(r"""
     (?P<ws>\s+)
   | (?P<num>\d+\.\d*|\.\d+|\d+)
   | (?P<str>'[^']*')
+  | (?P<param>\?|:[A-Za-z_][A-Za-z_0-9]*)
   | (?P<op><=|>=|<>|!=|==|=|<|>|\+|-|\*|/|\(|\)|,|\.)
   | (?P<ident>[A-Za-z_][A-Za-z_0-9]*)
 """, re.VERBOSE)
@@ -59,8 +118,9 @@ _KEYWORDS = {
 
 @dataclasses.dataclass
 class Token:
-    kind: str       # num | str | op | ident | kw
+    kind: str       # num | str | op | ident | kw | param
     value: Any
+    pos: int = 0    # character offset of the token in the query text
 
 
 def _lex(sql: str) -> List[Token]:
@@ -69,23 +129,29 @@ def _lex(sql: str) -> List[Token]:
     while pos < len(sql):
         m = _TOKEN_RE.match(sql, pos)
         if not m:
-            raise SqlError(f"lex error at: {sql[pos:pos+20]!r}")
+            raise SqlError(f"cannot tokenize {sql[pos:pos + 20]!r}",
+                           sql=sql, pos=pos)
+        start = pos
         pos = m.end()
         if m.lastgroup == "ws":
             continue
         if m.lastgroup == "num":
             text = m.group()
-            out.append(Token("num", float(text) if "." in text else int(text)))
+            out.append(Token("num",
+                             float(text) if "." in text else int(text),
+                             start))
         elif m.lastgroup == "str":
-            out.append(Token("str", m.group()[1:-1]))
+            out.append(Token("str", m.group()[1:-1], start))
+        elif m.lastgroup == "param":
+            out.append(Token("param", m.group(), start))
         elif m.lastgroup == "op":
-            out.append(Token("op", m.group()))
+            out.append(Token("op", m.group(), start))
         else:
             word = m.group()
             if word.upper() in _KEYWORDS:
-                out.append(Token("kw", word.upper()))
+                out.append(Token("kw", word.upper(), start))
             else:
-                out.append(Token("ident", word))
+                out.append(Token("ident", word, start))
     return out
 
 
@@ -98,6 +164,7 @@ class _PredictCall:
     model_name: str
     proba: bool
     placeholder: str      # column name the expression references
+    pos: int = 0          # offset of the model-name literal (diagnostics)
 
 
 @dataclasses.dataclass
@@ -106,22 +173,36 @@ class _SelectItem:
     agg: Optional[Tuple[str, Optional[str]]]    # (fn, column)
     alias: str
     star: bool = False
+    pos: int = 0
 
 
 class _Parser:
-    def __init__(self, tokens: List[Token]):
+    def __init__(self, sql: str, tokens: List[Token]):
+        self.sql = sql
         self.toks = tokens
         self.i = 0
         self.predicts: List[_PredictCall] = []
+        self.param_order: List[str] = []
+        self._param_style: Optional[str] = None
+        # first-seen offset per referenced column name, for positioned
+        # unknown-column diagnostics after catalog resolution
+        self.col_sites: Dict[str, int] = {}
+        self.table_sites: List[Tuple[str, int]] = []
 
     # -- token helpers -------------------------------------------------------
+    def _err(self, message: str, pos: Optional[int] = None) -> None:
+        if pos is None:
+            tok = self.peek()
+            pos = tok.pos if tok is not None else len(self.sql)
+        raise SqlError(message, sql=self.sql, pos=pos)
+
     def peek(self) -> Optional[Token]:
         return self.toks[self.i] if self.i < len(self.toks) else None
 
     def next(self) -> Token:
         tok = self.peek()
         if tok is None:
-            raise SqlError("unexpected end of query")
+            self._err("unexpected end of query", pos=len(self.sql))
         self.i += 1
         return tok
 
@@ -135,8 +216,14 @@ class _Parser:
     def expect(self, kind: str, value: Any = None) -> Token:
         tok = self.accept(kind, value)
         if tok is None:
-            raise SqlError(f"expected {value or kind}, got {self.peek()}")
+            got = self.peek()
+            desc = f"{got.value!r}" if got is not None else "end of query"
+            self._err(f"expected {value or kind}, got {desc}")
         return tok
+
+    def _col(self, tok: Token) -> Col:
+        self.col_sites.setdefault(tok.value, tok.pos)
+        return Col(tok.value)
 
     # -- expressions ---------------------------------------------------------
     def parse_expr(self) -> Expr:
@@ -201,6 +288,8 @@ class _Parser:
             return Const(tok.value)
         if tok.kind == "str":
             return Const(tok.value)
+        if tok.kind == "param":
+            return self._param(tok)
         if tok.kind == "op" and tok.value == "(":
             e = self.parse_expr()
             self.expect("op", ")")
@@ -212,8 +301,24 @@ class _Parser:
         if tok.kind == "kw" and tok.value == "CASE":
             return self._case()
         if tok.kind == "ident":
-            return Col(tok.value)
-        raise SqlError(f"unexpected token {tok}")
+            return self._col(tok)
+        self._err(f"unexpected token {tok.value!r}", pos=tok.pos)
+
+    def _param(self, tok: Token) -> Expr:
+        if tok.value == "?":
+            style = "positional"
+            name = f"p{len(self.param_order)}"
+            self.param_order.append(name)
+        else:
+            style = "named"
+            name = tok.value[1:]
+            if name not in self.param_order:
+                self.param_order.append(name)
+        if self._param_style is not None and self._param_style != style:
+            self._err("cannot mix positional (?) and named (:name) "
+                      "parameters in one query", pos=tok.pos)
+        self._param_style = style
+        return Param(name)
 
     def _case(self) -> Expr:
         branches = []
@@ -232,14 +337,16 @@ class _Parser:
         self.expect("op", "(")
         self.expect("kw", "MODEL")
         self.expect("op", "=")
-        name = self.expect("str").value
+        name_tok = self.expect("str")
+        name = name_tok.value
         self.expect("op", ")")
         # One attach per distinct (model, proba) call.
         for pc in self.predicts:
             if pc.model_name == name and pc.proba == proba:
                 return Col(pc.placeholder)
         placeholder = f"__pred_{len(self.predicts)}_{name}"
-        self.predicts.append(_PredictCall(name, proba, placeholder))
+        self.predicts.append(_PredictCall(name, proba, placeholder,
+                                          name_tok.pos))
         return Col(placeholder)
 
     # -- query ---------------------------------------------------------------
@@ -249,24 +356,35 @@ class _Parser:
         while self.accept("op", ","):
             items.append(self._select_item())
         self.expect("kw", "FROM")
-        tables = [self.expect("ident").value]
+        tok = self.expect("ident")
+        tables = [tok.value]
+        self.table_sites.append((tok.value, tok.pos))
         join_keys: List[str] = []
         while self.accept("kw", "JOIN"):
-            tables.append(self.expect("ident").value)
+            tok = self.expect("ident")
+            tables.append(tok.value)
+            self.table_sites.append((tok.value, tok.pos))
             self.expect("kw", "ON")
-            join_keys.append(self.expect("ident").value)
+            key_tok = self.expect("ident")
+            self.col_sites.setdefault(key_tok.value, key_tok.pos)
+            join_keys.append(key_tok.value)
         where = None
         if self.accept("kw", "WHERE"):
             where = self.parse_expr()
         group_by = None
         if self.accept("kw", "GROUP"):
             self.expect("kw", "BY")
-            group_by = self.expect("ident").value
+            tok = self.expect("ident")
+            self.col_sites.setdefault(tok.value, tok.pos)
+            group_by = tok.value
         order_by = None
         descending = False
         if self.accept("kw", "ORDER"):
             self.expect("kw", "BY")
-            order_by = self.expect("ident").value
+            tok = self.expect("ident")
+            self.col_sites.setdefault(tok.value, tok.pos)
+            order_by = tok.value
+        if order_by is not None:
             if self.accept("kw", "DESC"):
                 descending = True
             else:
@@ -275,13 +393,15 @@ class _Parser:
         if self.accept("kw", "LIMIT"):
             lim = int(self.expect("num").value)
         if self.peek() is not None:
-            raise SqlError(f"trailing tokens at {self.peek()}")
+            self._err(f"trailing tokens starting at {self.peek().value!r}")
         return items, tables, join_keys, where, group_by, \
             (order_by, descending), lim
 
     def _select_item(self) -> _SelectItem:
+        start_tok = self.peek()
+        start = start_tok.pos if start_tok is not None else len(self.sql)
         if self.accept("op", "*"):
-            return _SelectItem(None, None, "*", star=True)
+            return _SelectItem(None, None, "*", star=True, pos=start)
         tok = self.peek()
         if tok and tok.kind == "kw" and tok.value in (
                 "SUM", "AVG", "COUNT", "MIN", "MAX"):
@@ -290,17 +410,19 @@ class _Parser:
             if self.accept("op", "*"):
                 column = None
             else:
-                column = self.expect("ident").value
+                col_tok = self.expect("ident")
+                self.col_sites.setdefault(col_tok.value, col_tok.pos)
+                column = col_tok.value
             self.expect("op", ")")
             alias = fn if column is None else f"{fn}_{column}"
             if self.accept("kw", "AS"):
                 alias = self.expect("ident").value
-            return _SelectItem(None, (fn, column), alias)
+            return _SelectItem(None, (fn, column), alias, pos=start)
         expr = self.parse_expr()
         alias = expr.name if isinstance(expr, Col) else f"expr_{self.i}"
         if self.accept("kw", "AS"):
             alias = self.expect("ident").value
-        return _SelectItem(expr, None, alias)
+        return _SelectItem(expr, None, alias, pos=start)
 
 
 # ---------------------------------------------------------------------------
@@ -311,12 +433,71 @@ def _expr_refs_any(expr: Expr, names: Sequence[str]) -> bool:
     return bool(expr.references() & set(names))
 
 
+def _catalog_columns(catalog, parser: _Parser) -> Optional[Set[str]]:
+    """Union of column names across the query's tables, or ``None`` when the
+    catalog cannot answer (no ``get_table`` — e.g. a bare model registry),
+    in which case name resolution is skipped entirely.  Unknown *tables*
+    are reported here, positioned at the table token."""
+    get_table = getattr(catalog, "get_table", None)
+    if get_table is None:
+        return None
+    known: Set[str] = set()
+    for name, pos in parser.table_sites:
+        try:
+            table = get_table(name)
+        except KeyError:
+            raise SqlLookupError(f"unknown table {name!r}", sql=parser.sql,
+                                     pos=pos)
+        except Exception:
+            return None           # catalog can't resolve schemas: skip
+        names = getattr(table, "names", None)
+        if names is None:
+            return None
+        known.update(names)
+    return known
+
+
 def parse_query(sql: str, catalog) -> Plan:
     """Parse ``sql`` into a Raven IR plan, resolving models via ``catalog``
-    (needs ``get_model(name) -> Pipeline``)."""
-    parser = _Parser(_lex(sql))
+    (needs ``get_model(name) -> Pipeline``; name resolution additionally
+    uses ``get_table`` when present).
+
+    The returned plan carries ``param_order`` — the tuple of parameter
+    names in binding order (``?`` placeholders are auto-named ``p0, p1,
+    ...``) — which the serving front door uses to bind positional
+    parameter lists.  Note the attribute lives on the parsed object only;
+    optimizer copies do not carry it (callers capture it at parse time).
+    """
+    parser = _Parser(sql, _lex(sql))
     items, tables, join_keys, where, group_by, (order_key, desc), lim = \
         parser.parse_query()
+
+    placeholders = [p.placeholder for p in parser.predicts]
+
+    # -- name resolution (positioned diagnostics) ---------------------------
+    known = _catalog_columns(catalog, parser)
+    if known is not None:
+        visible = known | set(placeholders)
+        aliases = {it.alias for it in items if not it.star}
+
+        def check(names, extra=()):
+            for nm in sorted(set(names) - visible - set(extra)):
+                raise SqlLookupError(f"unknown column {nm!r}", sql=sql,
+                                     pos=parser.col_sites.get(nm, 0))
+
+        for key in join_keys:
+            check([key])
+        if where is not None:
+            check(where.references())
+        for it in items:
+            if it.expr is not None:
+                check(it.expr.references())
+            elif it.agg is not None and it.agg[1] is not None:
+                check([it.agg[1]])
+        if group_by is not None:
+            check([group_by], extra=aliases)
+        if order_key is not None:
+            check([order_key], extra=aliases)
 
     plan = Plan()
     current = plan.emit("scan", Category.RA, [], "table", table=tables[0])
@@ -324,8 +505,6 @@ def parse_query(sql: str, catalog) -> Plan:
         right = plan.emit("scan", Category.RA, [], "table", table=t)
         current = plan.emit("join", Category.RA, [current, right], "table",
                             on=key, how="inner")
-
-    placeholders = [p.placeholder for p in parser.predicts]
 
     # WHERE: conjuncts that don't touch predictions filter *before* the model
     # runs (paper: this enables predicate-based model pruning); conjuncts
@@ -350,7 +529,11 @@ def parse_query(sql: str, catalog) -> Plan:
 
     # Attach one prediction column per distinct PREDICT call.
     for pc in parser.predicts:
-        pipeline = catalog.get_model(pc.model_name)
+        try:
+            pipeline = catalog.get_model(pc.model_name)
+        except KeyError:
+            raise SqlLookupError(f"unknown model {pc.model_name!r}", sql=sql,
+                                 pos=pc.pos)
         feats = plan.emit("featurize", Category.MLD, [current], "matrix",
                           pipeline_name=pc.model_name,
                           featurizers=pipeline.featurizers,
@@ -376,7 +559,8 @@ def parse_query(sql: str, catalog) -> Plan:
                 pass
             elif not it.star:
                 raise SqlError(
-                    f"non-aggregated select item {it.alias!r} with GROUP BY")
+                    f"non-aggregated select item {it.alias!r} with GROUP BY",
+                    sql=sql, pos=it.pos)
         current = plan.emit("group_agg", Category.RA, [current], "table",
                             key=group_by, aggs=aggs)
     else:
@@ -417,4 +601,5 @@ def parse_query(sql: str, catalog) -> Plan:
 
     plan.output = current
     plan.validate()
+    plan.param_order = tuple(parser.param_order)
     return plan

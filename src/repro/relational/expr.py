@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "Expr", "Col", "Const", "BinOp", "UnaryOp", "CaseWhen", "col", "const",
-    "lit", "conjuncts", "extract_constraints", "Constraint", "fold_constants",
+    "Expr", "Col", "Const", "Param", "BinOp", "UnaryOp", "CaseWhen", "col",
+    "const", "lit", "param", "conjuncts", "extract_constraints", "Constraint",
+    "fold_constants", "expr_params", "bind_params",
 ]
 
 
@@ -115,6 +116,81 @@ class Const(Expr):
 
     def __repr__(self):
         return f"const({self.value!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Param(Expr):
+    """A named query parameter — a placeholder literal bound at execution
+    time, not at plan-construction time.
+
+    The point of the node is *plan-signature stability*: it canonicalizes
+    by name only, so ``age > ?`` parsed with 100 different literal values
+    is one plan signature and therefore one compiled executable.  The
+    runtime value travels beside the tables (the codegen layer threads a
+    ``__params__`` mapping through the jitted ``run`` closure as a pytree
+    leaf), so across values jax sees the same trace with a different
+    array — no retrace.  A ``Param`` that reaches ``evaluate`` unbound is
+    a programming error, reported as such.
+    """
+
+    name: str
+
+    def evaluate(self, columns):
+        raise ValueError(
+            f"unbound query parameter :{self.name} — pass params= to "
+            f"execute()/sql(), or bind_params() before evaluating")
+
+    def references(self):
+        return frozenset()
+
+    def __repr__(self):
+        return f"param({self.name!r})"
+
+
+def param(name: str) -> Param:
+    return Param(name)
+
+
+def expr_params(expr: Expr) -> FrozenSet[str]:
+    """Names of all :class:`Param` placeholders in ``expr``."""
+    if isinstance(expr, Param):
+        return frozenset({expr.name})
+    if isinstance(expr, BinOp):
+        return expr_params(expr.left) | expr_params(expr.right)
+    if isinstance(expr, UnaryOp):
+        return expr_params(expr.operand)
+    if isinstance(expr, CaseWhen):
+        out = expr_params(expr.default)
+        for cond, val in expr.branches:
+            out |= expr_params(cond) | expr_params(val)
+        return out
+    return frozenset()
+
+
+def bind_params(expr: Expr, values: Mapping[str, Any]) -> Expr:
+    """Substitute :class:`Param` nodes with the bound values.
+
+    Values may be python scalars *or* jax tracers (``Const.evaluate`` is
+    ``jnp.asarray`` either way) — the codegen layer binds inside the jitted
+    closure so the bound value is a tracer and the executable is reused
+    across literal values.  Missing names raise ``KeyError`` with the
+    parameter name, which the front door converts into a user-facing error.
+    """
+    if isinstance(expr, Param):
+        if expr.name not in values:
+            raise KeyError(expr.name)
+        return Const(values[expr.name])
+    if isinstance(expr, BinOp):
+        return BinOp(expr.op, bind_params(expr.left, values),
+                     bind_params(expr.right, values))
+    if isinstance(expr, UnaryOp):
+        return UnaryOp(expr.op, bind_params(expr.operand, values))
+    if isinstance(expr, CaseWhen):
+        return CaseWhen(
+            tuple((bind_params(c, values), bind_params(v, values))
+                  for c, v in expr.branches),
+            bind_params(expr.default, values))
+    return expr
 
 
 _BINOPS: Dict[str, Callable] = {

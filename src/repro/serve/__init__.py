@@ -7,10 +7,11 @@ coalescing over shape-bucketed executables)."""
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, ManualClock, ReadyGroup, SystemClock)
 from .cache import CacheEntry, CostAwareCache, value_nbytes
+from .context import RequestContext, Session, TenantPolicy
 from .engine import InferenceEngine, Request, ServeConfig
 from .prediction_service import (CompiledPrediction, DistributedSpec,
                                  PredictionService, PredictionTicket,
-                                 ServiceStats, SubplanRef)
+                                 ServiceStats, SubplanRef, TenantStats)
 from .sampling import sample_token
 from .sharded import (Morsel, ShardedExecutor, ShardPlacement, plan_morsels,
                       side_bucket_rows)
@@ -21,4 +22,5 @@ __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "CacheEntry", "value_nbytes", "AdmissionConfig", "AdmissionLoop",
            "AdmissionQueueFull", "Batcher", "Clock", "ManualClock",
            "ReadyGroup", "SystemClock", "Morsel", "ShardedExecutor",
-           "ShardPlacement", "plan_morsels", "side_bucket_rows"]
+           "ShardPlacement", "plan_morsels", "side_bucket_rows",
+           "RequestContext", "Session", "TenantPolicy", "TenantStats"]

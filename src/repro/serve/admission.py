@@ -30,14 +30,38 @@ Backpressure: ``Batcher.offer`` blocks while the queue holds
 ``block_on_full=False`` — or when ``offer_timeout_s`` expires — it raises
 :class:`AdmissionQueueFull` instead, so callers can shed load rather than
 pile up unbounded work behind a wedged executor.
+
+**Multi-tenancy**: offers carrying a :class:`RequestContext` land in the
+per-tenant queue named by ``ctx.tenant`` (``None`` — every context-less
+offer — is the default tenant).  Groups never span tenants.  Three things
+change versus the single queue, and only when more than one tenant holds
+due work:
+
+- **drain order** — ``pop_ready`` releases every due group, but orders the
+  released list by weighted deficit-round-robin across tenants
+  (``TenantPolicy.weight``), so downstream execution order — and therefore
+  queue latency under saturation — is fair rather than FIFO-by-arrival;
+  within a tenant, higher ``ctx.priority`` groups drain first.
+- **backpressure** — a tenant with ``TenantPolicy.max_queue`` blocks (or
+  sheds) against its *own* bound; the global ``max_queue`` still bounds the
+  total.  A flooding tenant therefore fills its own queue and starts
+  rejecting while its neighbors keep admitting.
+- **deadlines** — ``ctx.deadline_s`` tightens (never loosens) the
+  service-wide latency budget for that request's group.
+
+With a single tenant (the entire pre-context API), every one of these
+reduces exactly to the old single-queue behavior.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from .context import RequestContext
 
 __all__ = ["AdmissionConfig", "AdmissionLoop", "AdmissionQueueFull",
            "Batcher", "Clock", "ManualClock", "ReadyGroup", "SystemClock"]
@@ -152,16 +176,51 @@ class _Admitted:
     item: Any
     admitted_at: float
     chunk: bool = True        # False: group must release whole (see offer)
+    ctx: Optional[RequestContext] = None
 
 
 @dataclasses.dataclass
 class ReadyGroup:
-    """A coalesced batch released by the batcher, plus why it released."""
+    """A coalesced batch released by the batcher, plus why it released.
+
+    ``ctx`` is the request context of the group's oldest member (groups are
+    tenant-homogeneous, so ``ctx.tenant`` attributes the whole batch)."""
 
     key: Any
     items: List[Any]
     reason: str                        # "deadline" | "full" | "drain"
     admitted_at: Tuple[float, ...] = ()
+    ctx: Optional[RequestContext] = None
+
+
+def _hook_arity(hook: Callable) -> Optional[int]:
+    """Positional-parameter count of ``hook``, ``None`` when it takes
+    ``*args`` (pass everything) — used to keep pre-context hooks working
+    unchanged while offering context-aware hooks the extra argument."""
+    try:
+        sig = inspect.signature(hook)
+    except (TypeError, ValueError):      # C callables without signatures
+        return None
+    count = 0
+    for p in sig.parameters.values():
+        if p.kind == p.VAR_POSITIONAL:
+            return None
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            count += 1
+    return count
+
+
+def _fire_hook(hook: Callable, *args: Any) -> None:
+    """Call ``hook`` with as many of ``args`` as it accepts; the last
+    argument is the request context, which legacy hooks don't take."""
+    n = _hook_arity(hook)
+    if n is None:
+        try:
+            hook(*args)
+        except TypeError:
+            hook(*args[:-1])
+        return
+    hook(*args) if n >= len(args) else hook(*args[:-1])
 
 
 # ---------------------------------------------------------------------------
@@ -173,9 +232,15 @@ class Batcher:
     path and the background loop.  Thread-safe; all waiting happens on
     ``self.cond`` (one condition for producers awaiting space, the loop
     awaiting work, and ``stop`` wakeups — predicates are re-checked after
-    every wait, so ``notify_all`` keeps everyone honest)."""
+    every wait, so ``notify_all`` keeps everyone honest).
 
-    def __init__(self, config: AdmissionConfig, clock: Optional[Clock] = None):
+    Requests live in per-tenant sub-queues (``ctx.tenant``; ``None`` for
+    every context-less offer).  ``tenant_policies`` maps tenant name to
+    :class:`~repro.serve.context.TenantPolicy` — the mapping is held by
+    reference, so policies registered later apply to queued work."""
+
+    def __init__(self, config: AdmissionConfig, clock: Optional[Clock] = None,
+                 tenant_policies: Optional[Mapping[str, Any]] = None):
         if config.adaptive_latency \
                 and config.min_latency_budget_s > config.max_latency_budget_s:
             raise ValueError(
@@ -184,22 +249,55 @@ class Batcher:
                 f"{config.max_latency_budget_s}")
         self.config = config
         self.clock = clock or SystemClock()
+        self.tenant_policies: Mapping[str, Any] = \
+            tenant_policies if tenant_policies is not None else {}
         # RLock so the loop can call next_deadline()/has_ready() while
         # already holding cond (single source of truth for readiness)
         self.cond = threading.Condition(threading.RLock())
-        self._queue: List[_Admitted] = []
+        self._queues: Dict[Optional[str], List[_Admitted]] = {}
         self._depth_ewma = 0.0
         self._closed = False
-        # test/observability seams — called synchronously, outside cond
-        self.on_admit: Optional[Callable[[Any], None]] = None
-        self.on_flush: Optional[Callable[[Any, List[Any], str], None]] = None
+        self.rejections: Dict[Optional[str], int] = {}
+        # test/observability seams — called synchronously, outside cond.
+        # Hooks may take the legacy shapes ``on_admit(item)`` /
+        # ``on_flush(key, items, reason)`` or append a trailing
+        # ``ctx: RequestContext`` parameter for per-tenant attribution.
+        self.on_admit: Optional[Callable] = None
+        self.on_flush: Optional[Callable] = None
 
     def __len__(self) -> int:
         with self.cond:
-            return len(self._queue)
+            return self._total()
+
+    def _total(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def depth(self, tenant: Optional[str] = None) -> int:
+        """Queued requests of one tenant (``None`` = default queue)."""
+        with self.cond:
+            return len(self._queues.get(tenant, ()))
+
+    def depths(self) -> Dict[Optional[str], int]:
+        with self.cond:
+            return {t: len(q) for t, q in self._queues.items() if q}
+
+    def _tenant_max(self, tenant: Optional[str]) -> int:
+        policy = self.tenant_policies.get(tenant) if tenant is not None \
+            else None
+        if policy is not None and policy.max_queue is not None:
+            return max(int(policy.max_queue), 1)
+        return max(self.config.max_queue, 1)
+
+    def _tenant_weight(self, tenant: Optional[str]) -> float:
+        policy = self.tenant_policies.get(tenant) if tenant is not None \
+            else None
+        if policy is None:
+            return 1.0
+        return max(float(policy.weight), 1e-6)
 
     # -- producer side -------------------------------------------------------
-    def offer(self, key: Any, item: Any, chunk: bool = True) -> None:
+    def offer(self, key: Any, item: Any, chunk: bool = True,
+              ctx: Optional[RequestContext] = None) -> None:
         """Admit ``item`` under ``key``; blocks while the queue is full
         (raises :class:`AdmissionQueueFull` on timeout / non-blocking).
         The offer timeout runs on *wall* time, not the injectable clock:
@@ -211,25 +309,38 @@ class Batcher:
         regardless of ``max_batch_requests`` — identical-catalog-table
         prediction requests all share ONE execution however many coalesce,
         so splitting them only multiplies full-plan executions.  The cap
-        still *triggers* their flush; it just never splits them."""
+        still *triggers* their flush; it just never splits them.
+
+        ``ctx`` routes the item to its tenant's queue and is checked
+        against both the global ``max_queue`` and the tenant's own
+        ``TenantPolicy.max_queue`` — a flooding tenant blocks/sheds on its
+        own bound without consuming its neighbors' admission capacity."""
         cfg = self.config
+        tenant = ctx.tenant if ctx is not None else None
         deadline = time.monotonic() + cfg.offer_timeout_s
         with self.cond:
-            while len(self._queue) >= max(cfg.max_queue, 1) \
-                    and not self._closed:
+            while (self._total() >= max(cfg.max_queue, 1)
+                   or len(self._queues.get(tenant, ()))
+                   >= self._tenant_max(tenant)) and not self._closed:
                 remaining = deadline - time.monotonic()
                 if not cfg.block_on_full or remaining <= 0:
+                    self.rejections[tenant] = \
+                        self.rejections.get(tenant, 0) + 1
+                    scope = "admission queue" if tenant is None \
+                        else f"tenant {tenant!r} queue"
                     raise AdmissionQueueFull(
-                        f"admission queue full ({cfg.max_queue} pending)")
+                        f"{scope} full "
+                        f"({len(self._queues.get(tenant, ()))} pending)")
                 self.clock.wait(self.cond, remaining)
             if self._closed:
                 raise RuntimeError("batcher is closed")
-            self._queue.append(
-                _Admitted(key, item, self.clock.monotonic(), chunk=chunk))
+            self._queues.setdefault(tenant, []).append(
+                _Admitted(key, item, self.clock.monotonic(), chunk=chunk,
+                          ctx=ctx))
             self._observe_depth()
             self.cond.notify_all()       # wake the loop to re-plan its wait
         if self.on_admit is not None:
-            self.on_admit(item)
+            _fire_hook(self.on_admit, item, ctx)
 
     def close(self) -> None:
         """Refuse further offers (pending items stay drainable)."""
@@ -242,7 +353,7 @@ class Batcher:
         """EWMA of queue depth; call with ``cond`` held at admission and
         release events (event-driven, so ManualClock tests stay exact)."""
         a = self.config.adaptive_alpha
-        self._depth_ewma += a * (len(self._queue) - self._depth_ewma)
+        self._depth_ewma += a * (self._total() - self._depth_ewma)
 
     @property
     def queue_depth_ewma(self) -> float:
@@ -265,31 +376,40 @@ class Batcher:
             + (cfg.max_latency_budget_s - cfg.min_latency_budget_s) * frac
 
     # -- consumer side -------------------------------------------------------
+    def _due_at(self, a: _Admitted, budget: float) -> float:
+        """When ``a`` must flush: its admission time plus the effective
+        budget, tightened (never loosened) by its context deadline."""
+        if a.ctx is not None and a.ctx.deadline_s is not None:
+            budget = min(budget, max(float(a.ctx.deadline_s), 0.0))
+        return a.admitted_at + budget
+
     def next_deadline(self) -> Optional[float]:
         with self.cond:
-            if not self._queue:
+            if not any(self._queues.values()):
                 return None
-            oldest = min(a.admitted_at for a in self._queue)
-            return oldest + self.effective_latency_budget()
+            budget = self.effective_latency_budget()
+            return min(self._due_at(a, budget)
+                       for q in self._queues.values() for a in q)
 
-    def _grouped(self) -> Dict[Any, List[_Admitted]]:
+    def _grouped(self, queue: List[_Admitted]) -> Dict[Any, List[_Admitted]]:
         groups: Dict[Any, List[_Admitted]] = {}
-        for a in self._queue:
+        for a in queue:
             groups.setdefault(a.key, []).append(a)
         return groups
 
     def has_ready(self, now: float) -> bool:
         with self.cond:
             return any(self._ready_reason(g, now) is not None
-                       for g in self._grouped().values())
+                       for q in self._queues.values()
+                       for g in self._grouped(q).values())
 
     def _ready_reason(self, group: List[_Admitted],
                       now: float) -> Optional[str]:
         # deadline first: once the oldest request is genuinely due the
         # whole group — sub-cap tail included — must go (the "full" tail
         # hold only applies while nothing has waited out its budget)
-        oldest = min(a.admitted_at for a in group)
-        if now >= oldest + self.effective_latency_budget():
+        budget = self.effective_latency_budget()
+        if now >= min(self._due_at(a, budget) for a in group):
             return "deadline"
         if len(group) >= self.config.max_batch_requests:
             return "full"
@@ -312,38 +432,91 @@ class Batcher:
         batch exactly when load is high enough that the next burst would
         have coalesced with them.  Deadline and drain releases still take
         the tail along: by then its oldest batch-mate has genuinely
-        expired, and a drain must leave nothing behind."""
+        expired, and a drain must leave nothing behind.
+
+        **Drain order**: with one tenant holding due work the released
+        list is in arrival order, exactly the historical behavior.  With
+        several, groups interleave by weighted deficit round-robin —
+        each pass credits every contending tenant its policy weight and
+        releases that many groups — so a tenant flooding the queue still
+        only advances in proportion to its weight while compliant
+        tenants' groups drain on schedule.  Within one tenant, higher
+        ``ctx.priority`` groups order first (stable for equal priority)."""
         if now is None:
             now = self.clock.monotonic()
         cap = max(self.config.max_batch_requests, 1)
-        ready: List[ReadyGroup] = []
+        per_tenant: Dict[Optional[str], List[ReadyGroup]] = {}
+        any_popped = False
         with self.cond:
-            popped_ids = set()
-            for key, group in self._grouped().items():
-                reason = "drain" if force else self._ready_reason(group, now)
-                if reason is None:
-                    continue
-                # a group is homogeneous in chunkability (same key)
-                release = group
-                if reason == "full" and group[0].chunk:
-                    release = group[:(len(group) // cap) * cap]
-                step = cap if group[0].chunk else len(release)
-                for lo in range(0, len(release), step):
-                    chunk = release[lo:lo + step]
-                    ready.append(ReadyGroup(
-                        key=key, items=[a.item for a in chunk],
-                        reason=reason,
-                        admitted_at=tuple(a.admitted_at for a in chunk)))
-                popped_ids.update(id(a) for a in release)
-            if ready:
-                # survivors keep their admission order
-                self._queue = [a for a in self._queue
-                               if id(a) not in popped_ids]
+            for tenant, queue in self._queues.items():
+                popped_ids = set()
+                groups: List[ReadyGroup] = []
+                for key, group in self._grouped(queue).items():
+                    reason = "drain" if force \
+                        else self._ready_reason(group, now)
+                    if reason is None:
+                        continue
+                    # a group is homogeneous in chunkability (same key)
+                    release = group
+                    if reason == "full" and group[0].chunk:
+                        release = group[:(len(group) // cap) * cap]
+                    step = cap if group[0].chunk else len(release)
+                    for lo in range(0, len(release), step):
+                        chunk = release[lo:lo + step]
+                        groups.append(ReadyGroup(
+                            key=key, items=[a.item for a in chunk],
+                            reason=reason,
+                            admitted_at=tuple(a.admitted_at
+                                              for a in chunk),
+                            ctx=chunk[0].ctx))
+                    popped_ids.update(id(a) for a in release)
+                if groups:
+                    # survivors keep their admission order
+                    self._queues[tenant] = [a for a in queue
+                                            if id(a) not in popped_ids]
+                    groups.sort(key=lambda g: -(g.ctx.priority
+                                                if g.ctx else 0))
+                    per_tenant[tenant] = groups
+                    any_popped = True
+            if any_popped:
                 self._observe_depth()
                 self.cond.notify_all()   # space freed: unblock producers
+        ready = self._drr_order(per_tenant)
         if self.on_flush is not None:
             for g in ready:
-                self.on_flush(g.key, g.items, g.reason)
+                _fire_hook(self.on_flush, g.key, g.items, g.reason, g.ctx)
+        return ready
+
+    def _drr_order(self, per_tenant: Dict[Optional[str], List[ReadyGroup]]
+                   ) -> List[ReadyGroup]:
+        """Interleave per-tenant due-group lists by weighted deficit
+        round-robin.  One contending tenant (the whole single-tenant API)
+        short-circuits to its own arrival-ordered list."""
+        per_tenant = {t: gs for t, gs in per_tenant.items() if gs}
+        if len(per_tenant) <= 1:
+            return next(iter(per_tenant.values()), [])
+        # deterministic tenant cycle: default queue first, then by name
+        cycle = sorted(per_tenant, key=lambda t: (t is not None, t or ""))
+        # normalize so the heaviest tenant earns one group per pass and a
+        # near-zero weight still makes progress (bounded pass count)
+        weights = {t: self._tenant_weight(t) for t in cycle}
+        top = max(weights.values())
+        credit = {t: max(w / top, 1e-3) for t, w in weights.items()}
+        deficit = {t: 0.0 for t in cycle}
+        cursors = {t: 0 for t in cycle}
+        ready: List[ReadyGroup] = []
+        remaining = sum(len(gs) for gs in per_tenant.values())
+        while remaining:
+            for t in cycle:
+                groups = per_tenant[t]
+                if cursors[t] >= len(groups):
+                    continue
+                deficit[t] += credit[t]
+                while deficit[t] >= 1.0 and cursors[t] < len(groups):
+                    ready.append(groups[cursors[t]])
+                    cursors[t] += 1
+                    deficit[t] -= 1.0
+                    remaining -= 1
         return ready
 
     def drain(self) -> List[ReadyGroup]:

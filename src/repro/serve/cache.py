@@ -24,6 +24,17 @@ references, ``("table", "patient_info")`` for every scan) so that
 ``ModelStore`` invalidation hooks can evict exactly the entries referencing
 a re-registered artifact — content digests already make stale entries
 unreachable, but without eviction they would keep occupying budget.
+
+**Tenant quotas** (multi-tenant front door): entries optionally carry the
+``tenant`` that produced them, and ``set_tenant_quota`` bounds one tenant's
+share of the cache (entries and/or bytes).  Quota enforcement is *local*:
+an over-quota insert evicts the lowest-weight entries of **that tenant
+only**, so a flooding tenant churns its own slice while its neighbors'
+entries stay resident (they can still be displaced by the global budget,
+which ranks all tenants' entries together — the global bound is a property
+of the machine, not of fairness).  Untenanted entries (``tenant=None``)
+are only ever subject to the global budgets, preserving the pre-tenant
+behavior byte for byte.
 """
 
 from __future__ import annotations
@@ -66,6 +77,7 @@ class CacheEntry:
     tags: Tuple[Any, ...]
     hits: int = 0
     seq: int = 0             # recency stamp (monotone)
+    tenant: Optional[str] = None   # quota ledger owner (None: global only)
 
     @property
     def weight(self) -> float:
@@ -89,6 +101,27 @@ class CostAwareCache:
         self.misses = 0
         self.evictions = 0
         self.bytes_in_use = 0
+        # tenant -> (max_entries, max_bytes); 0 = unbounded on that axis
+        self._tenant_quotas: Dict[str, Tuple[int, int]] = {}
+        self.tenant_evictions: Dict[str, int] = {}
+
+    # -- tenant quotas --------------------------------------------------------
+    def set_tenant_quota(self, tenant: str, max_entries: int = 0,
+                         max_bytes: int = 0) -> None:
+        """Bound ``tenant``'s share of the cache (0 = unbounded on that
+        axis).  Applies to future inserts; a tightened quota is enforced
+        on the tenant's next ``put``."""
+        with self._lock:
+            self._tenant_quotas[tenant] = (int(max_entries), int(max_bytes))
+
+    def tenant_usage(self, tenant: Optional[str] = None) -> Dict[str, int]:
+        """Resident entries/bytes plus quota-eviction count for one
+        tenant's slice of the cache."""
+        with self._lock:
+            mine = [e for e in self._entries.values() if e.tenant == tenant]
+            return {"entries": len(mine),
+                    "bytes": sum(e.nbytes for e in mine),
+                    "evictions": self.tenant_evictions.get(tenant, 0)}
 
     # -- lookup ---------------------------------------------------------------
     def get(self, key: Any, count: bool = True) -> Optional[Any]:
@@ -133,7 +166,8 @@ class CostAwareCache:
     # -- insert / evict -------------------------------------------------------
     def put(self, key: Any, value: Any, cost_s: float = 0.0,
             nbytes: Optional[int] = None,
-            tags: Iterable[Any] = ()) -> List[Any]:
+            tags: Iterable[Any] = (),
+            tenant: Optional[str] = None) -> List[Any]:
         """Insert (or refresh) ``key``; returns the keys evicted to make
         room.  Re-putting an existing key keeps its hit count.
 
@@ -141,7 +175,11 @@ class CostAwareCache:
         the key's byte charge — the old entry's bytes are released before
         the new charge lands, so refreshing a resident key never
         double-counts against ``max_bytes`` (which would spuriously evict
-        on a no-op re-put)."""
+        on a no-op re-put).
+
+        ``tenant`` charges the entry against that tenant's quota (see
+        ``set_tenant_quota``); over-quota inserts evict the tenant's own
+        lowest-weight entries before the global budgets run."""
         nbytes = value_nbytes(value) if nbytes is None else int(nbytes)
         with self._lock:
             self._seq += 1
@@ -155,14 +193,43 @@ class CostAwareCache:
                     old, value=value,
                     cost_s=cost_s if cost_s > 0 else old.cost_s,
                     nbytes=nbytes, tags=tuple(tags) or old.tags,
-                    seq=self._seq)
+                    seq=self._seq,
+                    tenant=tenant if tenant is not None else old.tenant)
             else:
                 entry = CacheEntry(key=key, value=value, cost_s=cost_s,
                                    nbytes=nbytes, tags=tuple(tags),
-                                   seq=self._seq)
+                                   seq=self._seq, tenant=tenant)
             self._entries[key] = entry
             self.bytes_in_use += nbytes
-            return self._enforce_budgets()
+            evicted = self._enforce_tenant_quota(entry.tenant)
+            return evicted + self._enforce_budgets()
+
+    def _enforce_tenant_quota(self, tenant: Optional[str]) -> List[Any]:
+        """Evict ``tenant``'s own lowest-weight entries until its slice fits
+        its quota.  Only that tenant's entries are candidates — quota
+        pressure never touches a neighbor."""
+        if tenant is None:
+            return []
+        quota = self._tenant_quotas.get(tenant)
+        if quota is None:
+            return []
+        q_entries, q_bytes = quota
+        evicted: List[Any] = []
+        while True:
+            mine = [e for e in self._entries.values() if e.tenant == tenant]
+            if not mine:
+                break
+            over = (q_entries and len(mine) > q_entries) \
+                or (q_bytes and sum(e.nbytes for e in mine) > q_bytes)
+            if not over:
+                break
+            victim = min(mine, key=lambda e: (e.weight, e.seq))
+            self._remove(victim.key)
+            evicted.append(victim.key)
+            self.evictions += 1
+            self.tenant_evictions[tenant] = \
+                self.tenant_evictions.get(tenant, 0) + 1
+        return evicted
 
     def _enforce_budgets(self) -> List[Any]:
         evicted: List[Any] = []
@@ -174,6 +241,9 @@ class CostAwareCache:
             self._remove(victim.key)
             evicted.append(victim.key)
             self.evictions += 1
+            if victim.tenant is not None:
+                self.tenant_evictions[victim.tenant] = \
+                    self.tenant_evictions.get(victim.tenant, 0) + 1
         return evicted
 
     def _remove(self, key: Any) -> None:
@@ -201,7 +271,19 @@ class CostAwareCache:
 
     def info(self) -> Dict[str, Any]:
         with self._lock:
-            return {"entries": len(self._entries),
-                    "bytes": self.bytes_in_use,
-                    "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions}
+            out = {"entries": len(self._entries),
+                   "bytes": self.bytes_in_use,
+                   "hits": self.hits, "misses": self.misses,
+                   "evictions": self.evictions}
+            if self._tenant_quotas or any(e.tenant is not None
+                                          for e in self._entries.values()):
+                by_tenant: Dict[str, Dict[str, int]] = {}
+                for e in self._entries.values():
+                    if e.tenant is None:
+                        continue
+                    d = by_tenant.setdefault(e.tenant,
+                                             {"entries": 0, "bytes": 0})
+                    d["entries"] += 1
+                    d["bytes"] += e.nbytes
+                out["tenants"] = by_tenant
+            return out

@@ -99,16 +99,16 @@ import dataclasses
 import threading
 import time
 import weakref
-from typing import Any, Dict, List, Optional, Set, Tuple, Union
+from typing import (Any, Dict, List, Mapping, Optional, Set, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.codegen import (ExecutionConfig, compile_plan, count_jit_trace,
-                            pow2_bucket)
+                            pow2_bucket, resolve_params)
 from ..core.ir import (Node, Plan, ROW_LOCAL_OPS, bucketed_signature,
-                       is_deterministic_subtree, plan_signature,
+                       is_deterministic_subtree, plan_params, plan_signature,
                        sharded_signature, subtree_nodes, subtree_signatures)
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
                               OptimizerConfig, referenced_models)
@@ -118,10 +118,12 @@ from ..relational.table import Schema, Table
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, ReadyGroup, SystemClock)
 from .cache import CostAwareCache, value_nbytes
+from .context import RequestContext, Session, TenantPolicy
 from .sharded import ShardedExecutor, side_bucket_rows
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
-           "CompiledPrediction", "DistributedSpec", "SubplanRef"]
+           "CompiledPrediction", "DistributedSpec", "SubplanRef",
+           "RequestContext", "Session", "TenantPolicy", "TenantStats"]
 
 
 # Ops whose output rows correspond 1:1 (positionally) to their input rows —
@@ -188,6 +190,22 @@ class ServiceStats:
                                     # partition-wise join
     shard_agg_combines: int = 0     # two-phase combine stages run
     shard_partial_aggs: int = 0     # per-morsel partial aggregates computed
+    # SQL front door
+    sql_parses: int = 0             # SQL texts parsed (parse-cache misses)
+    sql_parse_hits: int = 0         # SQL texts served from the parse cache
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant serving ledger (``tenant_info()``).  Latencies record
+    seconds each of the tenant's requests waited in admission, measured on
+    the injected clock — the p50/p95 the saturation benchmark bounds."""
+
+    submitted: int = 0
+    served: int = 0
+    coalesced: int = 0
+    latencies: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=2048))
 
 
 @dataclasses.dataclass
@@ -309,6 +327,12 @@ class _Pending:
     plan: Plan
     tables: Optional[Dict[str, Table]]
     ticket: PredictionTicket
+    # Resolved parameter bindings (name -> device scalar) for parameterized
+    # queries; None on the unparameterized path.  Requests only group when
+    # their bindings are bit-identical (the fingerprint is part of the
+    # batch key), so one group always shares one binding.
+    params: Optional[Dict[str, Any]] = None
+    ctx: Optional[RequestContext] = None
 
 
 # ---------------------------------------------------------------------------
@@ -463,7 +487,8 @@ class PredictionService:
                  result_cache_bytes: int = 256 << 20,
                  enable_result_cache: bool = True,
                  admission: Optional[AdmissionConfig] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 tenants: Optional[Mapping[str, TenantPolicy]] = None):
         self.catalog = catalog
         self.optimizer_config = optimizer_config or OptimizerConfig()
         self.execution_config = execution_config or ExecutionConfig()
@@ -471,12 +496,23 @@ class PredictionService:
         self.chunk_rows = int(chunk_rows)
         self.max_cache_entries = int(max_cache_entries)
         self.stats = ServiceStats()
+        # Multi-tenant front door: policies are held by reference (the
+        # Batcher reads the same dict), so register_tenant() takes effect
+        # on the next offer without rebuilding anything.
+        self.tenants: Dict[str, TenantPolicy] = dict(tenants or {})
+        self._tenant_stats: Dict[str, TenantStats] = {}
+        # SQL text -> parsed Plan.  Parsing is pure given the catalog
+        # (invalidation hooks clear it), and the optimizer copies its input
+        # plan, so a cached parse is never mutated by compilation.
+        self._parse_cache: Dict[str, Plan] = {}
         self._exec_cache = CostAwareCache(max_entries=max_cache_entries,
                                           max_bytes=exec_cache_bytes)
         self._result_cache: Optional[CostAwareCache] = (
             CostAwareCache(max_entries=result_cache_entries,
                            max_bytes=result_cache_bytes)
             if enable_result_cache else None)
+        for name, policy in self.tenants.items():
+            self._apply_tenant_quota(name, policy)
         self._lock = threading.Lock()          # stats
         self._flush_lock = threading.Lock()    # serializes batch execution
         # Partition-parallel executor (ExecutionConfig.sharded): built on
@@ -493,7 +529,8 @@ class PredictionService:
         self.batcher = Batcher(
             admission or AdmissionConfig(background=False,
                                          max_queue=1 << 62),
-            clock=self.clock)
+            clock=self.clock,
+            tenant_policies=self.tenants)
         self._queue_latencies: collections.deque = collections.deque(
             maxlen=4096)               # seconds waited in admission, per req
         self._loop: Optional[AdmissionLoop] = None
@@ -577,14 +614,79 @@ class PredictionService:
         evicted = len(self._exec_cache.evict_by_tag(tag))
         if self._result_cache is not None:
             evicted += len(self._result_cache.evict_by_tag(tag))
+        # Parsed plans resolve columns and models against the catalog, so a
+        # re-registration invalidates them wholesale (parsing is cheap; the
+        # expensive compile tier has its own content-digest keys).
+        self._parse_cache.clear()
         with self._lock:
             self.stats.invalidation_evictions += evicted
+
+    # -- tenants --------------------------------------------------------------
+    def _apply_tenant_quota(self, name: str, policy: TenantPolicy) -> None:
+        if self._result_cache is not None and (policy.result_cache_entries
+                                               or policy.result_cache_bytes):
+            self._result_cache.set_tenant_quota(
+                name, max_entries=policy.result_cache_entries,
+                max_bytes=policy.result_cache_bytes)
+
+    def register_tenant(self, name: str, policy: TenantPolicy) -> None:
+        """Register (or update) a tenant's isolation policy.  Takes effect
+        on the tenant's next submit — the Batcher reads the same policy
+        dict, and cache quotas are enforced on the tenant's next insert."""
+        self.tenants[name] = policy
+        self._apply_tenant_quota(name, policy)
+
+    def session(self, tenant: Optional[str] = None,
+                session_id: Optional[str] = None, priority: int = 0,
+                deadline_s: Optional[float] = None) -> Session:
+        """Open a long-lived front-door handle: every ``sql``/``submit``/
+        ``predict`` through it carries this tenant/priority/deadline
+        context.  Sessions are free to create and need no teardown (all
+        state lives in the service)."""
+        return Session(self, tenant=tenant, session_id=session_id,
+                       priority=priority, deadline_s=deadline_s)
+
+    def _tenant_stat(self, tenant: Optional[str]) -> Optional[TenantStats]:
+        """Tenant ledger accessor; call while holding ``self._lock``."""
+        if tenant is None:
+            return None
+        ts = self._tenant_stats.get(tenant)
+        if ts is None:
+            ts = self._tenant_stats[tenant] = TenantStats()
+        return ts
+
+    @staticmethod
+    def _resolve_ctx(ctx: Optional[RequestContext],
+                     tenant: Optional[str], priority: int,
+                     deadline_s: Optional[float]
+                     ) -> Optional[RequestContext]:
+        """Fold loose kwargs into a context.  Returns ``None`` when the
+        caller supplied nothing — the single-tenant path stays ctx-free so
+        its behavior (queueing, hooks, stats) is byte-for-byte the
+        pre-tenant one."""
+        if ctx is not None:
+            return ctx
+        if tenant is None and not priority and deadline_s is None:
+            return None
+        return RequestContext(tenant=tenant, priority=priority,
+                              deadline_s=deadline_s)
 
     # -- frontend -----------------------------------------------------------
     def _to_plan(self, query: Union[str, Plan]) -> Plan:
         if isinstance(query, Plan):
             return query
-        return parse_query(query, self.catalog)
+        plan = self._parse_cache.get(query)
+        if plan is not None:
+            with self._lock:
+                self.stats.sql_parse_hits += 1
+            return plan
+        plan = parse_query(query, self.catalog)
+        with self._lock:
+            self.stats.sql_parses += 1
+        if len(self._parse_cache) >= 1024:
+            self._parse_cache.clear()     # text churn: cheap full reset
+        self._parse_cache[query] = plan
+        return plan
 
     def _resolve_schema(self, name: str,
                         tables: Optional[Dict[str, Table]]) -> Schema:
@@ -659,12 +761,17 @@ class PredictionService:
                 continue
             if not is_deterministic_subtree(plan, nid):
                 continue
+            # A parameterized subtree's value depends on the bound literals,
+            # which the result key cannot see — never cache or splice it.
+            # Param-free subtrees of a parameterized plan remain fair game.
+            if plan_params(plan, nids):
+                continue
             out.append((nid, len(nids)))
         out.sort(key=lambda pair: -pair[1])
         return out
 
     def _store_result(self, ref: SubplanRef, value: Any, cost_s: float,
-                      producer: Any) -> None:
+                      producer: Any, tenant: Optional[str] = None) -> None:
         """``producer`` identifies who materialized the value (the exec-cache
         key of the capturing query, or a rematerialization marker): a
         capture-compiled entry on its warm hit path upgrades to splicing
@@ -685,7 +792,7 @@ class PredictionService:
             return                       # identical by construction
         evicted = self._result_cache.put(
             rkey, value, cost_s=cost_s,
-            tags=ref.tags + (("producer", producer),))
+            tags=ref.tags + (("producer", producer),), tenant=tenant)
         with self._lock:
             self.stats.result_puts += 1
             self.stats.result_evictions += len(evicted)
@@ -1020,6 +1127,53 @@ class PredictionService:
                 if self._loop is not None else None,
             }
 
+    def tenant_info(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant observability: queue depth, drain weight, p50/p95
+        queue latency (injected-clock seconds -> ms), coalesce rate,
+        backpressure rejections, and the tenant's slice of the result
+        cache (resident entries/bytes + quota evictions).  Keys are tenant
+        names; the ``tenant=None`` default path is deliberately absent —
+        its numbers are the service-wide ``admission_info()``."""
+        depths = self.batcher.depths()
+        rejections = dict(self.batcher.rejections)
+        out: Dict[str, Dict[str, Any]] = {}
+        with self._lock:
+            names = (set(self.tenants) | set(self._tenant_stats)
+                     | {t for t in depths if t is not None}
+                     | {t for t in rejections if t is not None})
+            for name in sorted(names):
+                ts = self._tenant_stats.get(name) or TenantStats()
+                policy = self.tenants.get(name)
+                lats = sorted(ts.latencies)
+
+                def pct(p: float) -> float:
+                    if not lats:
+                        return 0.0
+                    return lats[min(len(lats) - 1,
+                                    round(p * (len(lats) - 1)))]
+
+                usage = (self._result_cache.tenant_usage(name)
+                         if self._result_cache is not None
+                         else {"entries": 0, "bytes": 0, "evictions": 0})
+                out[name] = {
+                    "queue_depth": depths.get(name, 0),
+                    "weight": policy.weight if policy is not None else 1.0,
+                    "max_queue": policy.max_queue
+                    if policy is not None else None,
+                    "submitted": ts.submitted,
+                    "served": ts.served,
+                    "coalesced": ts.coalesced,
+                    "coalesce_rate": ts.coalesced / ts.served
+                    if ts.served else 0.0,
+                    "rejections": rejections.get(name, 0),
+                    "queue_p50_ms": pct(0.50) * 1e3,
+                    "queue_p95_ms": pct(0.95) * 1e3,
+                    "result_cache_entries": usage["entries"],
+                    "result_cache_bytes": usage["bytes"],
+                    "result_cache_evictions": usage["evictions"],
+                }
+        return out
+
     # -- execution -----------------------------------------------------------
     def _input_tables(self, compiled: CompiledPrediction,
                       tables: Optional[Dict[str, Table]]
@@ -1034,23 +1188,33 @@ class PredictionService:
 
     def _execute(self, compiled: CompiledPrediction,
                  tables: Optional[Dict[str, Table]],
-                 store_capture: bool = True) -> Any:
+                 store_capture: bool = True,
+                 params: Optional[Dict[str, Any]] = None,
+                 tenant: Optional[str] = None) -> Any:
         """``store_capture=False`` executes a capture-compiled plan without
         populating the result cache — used when the inputs are not the
-        catalog tables the cache key would claim (stacked micro-batches)."""
+        catalog tables the cache key would claim (stacked micro-batches).
+        ``params`` rides along in the tables dict under the reserved
+        ``__params__`` slot (bound inside the jitted closure, so every
+        binding shares one trace); parameterized serves skip the sharded
+        tier (the partition executor stacks tables, not binding dicts)."""
         tabs = self._input_tables(compiled, tables)
+        if params:
+            tabs["__params__"] = params
         compiled.serves += 1
         with self._lock:
             self.stats.batch_executions += 1
         if compiled.splice is not None:
             out = self._execute_spliced(compiled, tabs)
-        elif self._should_shard(compiled, tables):
+        elif not params and self._should_shard(compiled, tables):
             out = self._execute_sharded(compiled, tabs, store_capture)
         elif (self.chunk_rows and compiled.chunk_table is not None
                 and tabs[compiled.chunk_table].capacity > self.chunk_rows):
-            out = self._execute_chunked(compiled, tabs, store_capture)
+            out = self._execute_chunked(compiled, tabs, store_capture,
+                                        tenant=tenant)
         else:
-            out = self._execute_whole(compiled, tabs, store_capture)
+            out = self._execute_whole(compiled, tabs, store_capture,
+                                      tenant=tenant)
         # A served result is a *ready* result: external/container plans run
         # host callbacks under async dispatch, and letting those trail the
         # ticket resolution deadlocks against the caller's next dispatch.
@@ -1058,7 +1222,8 @@ class PredictionService:
 
     def _execute_whole(self, compiled: CompiledPrediction,
                        tabs: Dict[str, Table],
-                       store_capture: bool = True) -> Any:
+                       store_capture: bool = True,
+                       tenant: Optional[str] = None) -> Any:
         """One whole-input execution of the fused program (the base tier;
         also the fallback when a sharded execution loses its partitioning
         mid-flight)."""
@@ -1071,7 +1236,7 @@ class PredictionService:
         if store_capture:
             self._store_result(compiled.capture, captured,
                                time.perf_counter() - t0,
-                               producer=compiled.key)
+                               producer=compiled.key, tenant=tenant)
         return out
 
     # -- partition-parallel (sharded) tier ------------------------------------
@@ -1284,7 +1449,8 @@ class PredictionService:
 
     def _execute_chunked(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
-                         store_capture: bool = True) -> Any:
+                         store_capture: bool = True,
+                         tenant: Optional[str] = None) -> Any:
         """Morsel execution: every chunk (tail included, via padding) has the
         same static shape, so XLA compiles one chunk executable total."""
         name = compiled.chunk_table
@@ -1309,48 +1475,104 @@ class PredictionService:
                 _trim_rows(_concat_outputs(captured), n))
             self._store_result(compiled.capture, cap,
                                time.perf_counter() - t0,
-                               producer=compiled.key)
+                               producer=compiled.key, tenant=tenant)
         return _trim_rows(_concat_outputs(pieces), n)
 
     def run(self, query: Union[str, Plan],
-            tables: Optional[Dict[str, Table]] = None) -> Any:
+            tables: Optional[Dict[str, Table]] = None,
+            params: Any = None,
+            ctx: Optional[RequestContext] = None,
+            tenant: Optional[str] = None, priority: int = 0,
+            deadline_s: Optional[float] = None) -> Any:
         """Synchronous serve.  Goes through the admission queue, so requests
         issued concurrently from other threads coalesce with this one.
         Under a background admission loop the request is served within the
         latency budget; otherwise this flushes immediately."""
-        ticket = self.submit(query, tables)
+        ticket = self.submit(query, tables, params=params, ctx=ctx,
+                             tenant=tenant, priority=priority,
+                             deadline_s=deadline_s)
         if self._loop is None:
             self.flush()
         return ticket.result()
 
+    def sql(self, query: str, params: Any = None,
+            tables: Optional[Dict[str, Table]] = None,
+            ctx: Optional[RequestContext] = None,
+            tenant: Optional[str] = None, priority: int = 0,
+            deadline_s: Optional[float] = None) -> Any:
+        """Front door: serve a SQL text synchronously.
+
+        ``params`` binds the query's placeholders — positional (a sequence,
+        for ``?``) or named (a mapping, for ``:name``).  Differing literal
+        *values* share one plan signature, one compiled executable, and one
+        parse-cache entry; only the bound values travel with the request,
+        so a hot parameterized query never recompiles (satellite guarantee:
+        zero warm compiles across distinct literals).  ``tenant``/``ctx``
+        route the request through that tenant's admission queue, cache
+        quota and stats ledger; both default to the single-tenant path."""
+        return self.run(query, tables, params=params, ctx=ctx,
+                        tenant=tenant, priority=priority,
+                        deadline_s=deadline_s)
+
+    def predict(self, query: Union[str, Plan],
+                tables: Optional[Dict[str, Table]] = None, **kw) -> Any:
+        """Synchronous single-request serve (alias of :meth:`run`; the name
+        :class:`~repro.serve.context.Session` uses)."""
+        return self.run(query, tables, **kw)
+
     # -- micro-batch admission -----------------------------------------------
     def submit(self, query: Union[str, Plan],
-               tables: Optional[Dict[str, Table]] = None) -> PredictionTicket:
+               tables: Optional[Dict[str, Table]] = None,
+               params: Any = None,
+               ctx: Optional[RequestContext] = None,
+               tenant: Optional[str] = None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> PredictionTicket:
         """Admit one request.  Blocks under backpressure (bounded queue);
         raises :class:`~repro.serve.admission.AdmissionQueueFull` when the
         queue stays full past the offer timeout (or immediately with
         ``block_on_full=False``).  A request whose cache key cannot be
-        computed (e.g. unknown table) fails its ticket instead of
+        computed (e.g. unknown table) or whose parameter bindings do not
+        match the plan's placeholders fails its ticket instead of
         poisoning the batch it would have joined."""
+        ctx = self._resolve_ctx(ctx, tenant, priority, deadline_s)
         ticket = PredictionTicket()
-        plan = self._to_plan(query)
         try:
+            plan = self._to_plan(query)
             key, _ = self._cache_key(plan, tables)
+            bound = None
+            if params is not None or plan_params(plan):
+                bound = resolve_params(plan, params) or None
         except Exception as err:
             ticket._fail(err)
             return ticket
+        # Parameterized requests group by (cache key, binding fingerprint):
+        # different bindings share the executable but never one execution
+        # (their outputs differ); identical bindings still coalesce.  The
+        # unparameterized path offers the bare key — byte-for-byte the
+        # pre-parameter batch identity.
+        batch_key: Any = key
+        if bound is not None:
+            fp = tuple(sorted(
+                (k, str(np.asarray(v).dtype), np.asarray(v).tobytes())
+                for k, v in bound.items()))
+            batch_key = (key, "__params__", fp)
         try:
             # key[2] is the overridden-tables tuple: only override-table
             # requests stack (batch size matters); identical-catalog
             # groups share one execution and must never be split
-            self.batcher.offer(key, _Pending(plan, tables, ticket),
-                               chunk=bool(key[2]))
+            self.batcher.offer(batch_key,
+                               _Pending(plan, tables, ticket,
+                                        params=bound, ctx=ctx),
+                               chunk=bool(key[2]), ctx=ctx)
         except AdmissionQueueFull:
             with self._lock:
                 self.stats.queue_rejections += 1
             raise
         with self._lock:
             self.stats.submitted += 1
+            ts = self._tenant_stat(ctx.tenant if ctx else None)
+            if ts is not None:
+                ts.submitted += 1
         return ticket
 
     def flush(self) -> int:
@@ -1375,6 +1597,7 @@ class PredictionService:
         then serve it.  Called by the loop thread, ``flush()``, and
         ``admission_tick``; ``_flush_lock`` serializes the execution."""
         now = self.clock.monotonic()
+        tenant = group.ctx.tenant if group.ctx is not None else None
         with self._lock:
             if group.reason == "deadline":
                 self.stats.deadline_flushes += 1
@@ -1382,10 +1605,18 @@ class PredictionService:
                 self.stats.size_flushes += 1
             else:
                 self.stats.drain_flushes += 1
+            ts = self._tenant_stat(tenant)
             for t in group.admitted_at:
-                self._queue_latencies.append(max(0.0, now - t))
+                lat = max(0.0, now - t)
+                self._queue_latencies.append(lat)
+                if ts is not None:
+                    ts.latencies.append(lat)
         with self._flush_lock:
-            return self._serve_group(group.key, group.items)
+            served = self._serve_group(group.key, group.items)
+        if tenant is not None and served:
+            with self._lock:
+                self._tenant_stat(tenant).served += served
+        return served
 
     def _fail_group(self, group: ReadyGroup, err: BaseException) -> None:
         """Loop escape hatch: an error that got past ``_serve_group``'s own
@@ -1397,6 +1628,12 @@ class PredictionService:
 
     def _serve_group(self, key: Tuple, group: List[_Pending]) -> int:
         head = group[0]
+        # One group = one binding (the fingerprint is part of the batch
+        # key), so the head's resolved params and tenant speak for all.
+        params = head.params
+        tenant = head.ctx.tenant if head.ctx is not None else None
+        if params is not None:
+            key = key[0]               # strip the binding fingerprint
         try:
             # key[0] is the plan signature (first component of _cache_key)
             compiled = self.compile(head.plan, head.tables,
@@ -1410,19 +1647,26 @@ class PredictionService:
             if all(not p.tables for p in group):
                 # identical inputs (catalog tables): one execution at the
                 # catalog's natural (fixed) shape, fanned out to every ticket
-                out = self._execute(compiled, None)
+                out = self._execute(compiled, None, params=params,
+                                    tenant=tenant)
                 for p in group:
                     p.ticket._resolve(out)
                 with self._lock:
                     self.stats.coalesced_requests += len(group) - 1
+                    ts = self._tenant_stat(tenant)
+                    if ts is not None:
+                        ts.coalesced += len(group) - 1
             elif compiled.chunk_table is not None:
                 # caller-supplied row counts vary request to request, so
                 # even a group of one goes through the shape-bucketed
                 # stacked path — arrival patterns must not multiply compiles
-                self._serve_stacked(compiled, group)
+                self._serve_stacked(compiled, group, params=params,
+                                    tenant=tenant)
             else:
                 for p in group:
-                    p.ticket._resolve(self._execute(compiled, p.tables))
+                    p.ticket._resolve(self._execute(compiled, p.tables,
+                                                    params=params,
+                                                    tenant=tenant))
         except Exception as err:
             for p in group:
                 if not p.ticket.done:
@@ -1527,7 +1771,9 @@ class PredictionService:
         return jax.block_until_ready(raw)
 
     def _serve_stacked(self, compiled: CompiledPrediction,
-                       group: List[_Pending]):
+                       group: List[_Pending],
+                       params: Optional[Dict[str, Any]] = None,
+                       tenant: Optional[str] = None):
         """Row-local plans: stack every request's input rows into one padded
         execution, then split the output back by request offsets.  Padding
         goes to a power-of-two row bucket with its own cached executable
@@ -1545,14 +1791,18 @@ class PredictionService:
             stacked = _stack_pad_host(inputs,
                                       _round_up(total, self.chunk_rows))
             out = self._execute(compiled, {name: stacked},
-                                store_capture=False)
+                                store_capture=False, params=params,
+                                tenant=tenant)
         else:
             bucket = self._bucket_rows(total)
             bcompiled, fresh, btags = self._bucket_executable(compiled,
                                                               bucket)
             stacked = _stack_pad_host(inputs, bucket)
+            tabs: Dict[str, Any] = {name: stacked}
+            if params:
+                tabs["__params__"] = params
             t0 = time.perf_counter()
-            out = self._execute_direct(bcompiled, {name: stacked})
+            out = self._execute_direct(bcompiled, tabs)
             self._record_twin_cost(bcompiled, fresh, btags,
                                    time.perf_counter() - t0)
         # no device-side trim: the host-side split only reads rows up to
@@ -1561,3 +1811,6 @@ class PredictionService:
             p.ticket._resolve(piece)
         with self._lock:
             self.stats.coalesced_requests += len(group) - 1
+            ts = self._tenant_stat(tenant)
+            if ts is not None:
+                ts.coalesced += len(group) - 1

@@ -1,0 +1,211 @@
+"""SQL front-door diagnostics: every failure is a *positioned* SqlError.
+
+The contract under test (satellite of the multi-tenant front door): any
+malformed, truncated or mutated query string surfaces as
+:class:`~repro.core.sql_frontend.SqlError` carrying
+
+- ``pos`` — an integer character offset into the original text,
+  ``0 <= pos <= len(sql)``;
+- a caret snippet in ``str(err)`` whose ``^`` aligns with that offset;
+
+never a raw ``IndexError``/``StopIteration``/``AttributeError`` escaping
+the parser.  Unknown tables/columns/models (resolved against the catalog)
+raise :class:`SqlLookupError`, which is *also* a ``KeyError`` — the
+pre-front-door contract for catalog lookups.
+
+Without a ``hypothesis`` dependency the property is checked by exhaustive
+truncation plus seeded random mutation — deterministic across runs.
+"""
+
+import random
+import string
+
+import numpy as np
+import pytest
+
+from repro.core import ModelStore
+from repro.core.sql_frontend import SqlError, SqlLookupError, parse_query
+from repro.data import hospital_tables
+from repro.ml import DecisionTree, Pipeline, PipelineMetadata, StandardScaler
+
+pytestmark = pytest.mark.tier1
+
+FEATS = ["age", "gender", "pregnant", "rcount"]
+
+VALID_QUERIES = [
+    "SELECT pid, age FROM patient_info WHERE age > 30",
+    ("SELECT pid, PREDICT(MODEL='m') AS p FROM patient_info "
+     "WHERE age > 30 AND PREDICT(MODEL='m') > 5"),
+    ("SELECT gender, AVG(length_of_stay) AS alos FROM patient_info "
+     "GROUP BY gender ORDER BY alos DESC LIMIT 3"),
+    "SELECT pid FROM patient_info WHERE age > :lo AND age < :hi",
+    "SELECT pid, age FROM patient_info WHERE age > ? ORDER BY age LIMIT 5",
+]
+
+
+@pytest.fixture(scope="module")
+def store():
+    store = ModelStore()
+    for n, t in hospital_tables(200, seed=7).items():
+        store.register_table(n, t)
+    pi = store.get_table("patient_info")
+    data = {c: np.asarray(pi.column(c)) for c in pi.names}
+    sc = StandardScaler(FEATS).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression", max_depth=4),
+                    PipelineMetadata(name="m", task="regression"))
+    pipe.fit({k: data[k] for k in FEATS}, data["length_of_stay"])
+    store.register_model("m", pipe)
+    return store
+
+
+def _assert_positioned(err: SqlError, sql: str):
+    assert isinstance(err, SqlError)
+    assert isinstance(err.pos, int), f"no position on: {err.message}"
+    assert 0 <= err.pos <= len(sql)
+    rendered = str(err)
+    assert f"(at offset {err.pos})" in rendered
+    lines = rendered.splitlines()
+    if err.sql is not None:
+        # caret line aligns under the snippet line
+        assert lines[-1].strip() == "^"
+
+
+# ---------------------------------------------------------------------------
+# Directed cases: the offset points at the offending token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sql, fragment", [
+    ("SELECT FROM patient_info", "FROM"),
+    ("SELECT pid patient_info", "patient_info"),
+    ("SELECT pid FROM", None),                     # end of query
+    ("SELECT pid FROM patient_info WHERE", None),
+    ("SELECT pid FROM patient_info WHERE age >", None),
+    ("SELECT pid FROM patient_info WHERE age > 'x", "'x"),
+    ("SELECT pid FROM patient_info GROUP BY", None),
+    ("SELECT pid, PREDICT(MODEL=) AS p FROM patient_info", ")"),
+    ("SELECT pid, PREDICT(MODEL'm') AS p FROM patient_info", "'m'"),
+    ("SELECT pid, PREDICT() AS p FROM patient_info", ")"),
+    ("SELECT pid FROM patient_info WHERE age > 30 !", "!"),
+])
+def test_offset_points_at_offending_token(store, sql, fragment):
+    with pytest.raises(SqlError) as exc:
+        parse_query(sql, store)
+    _assert_positioned(exc.value, sql)
+    if fragment is None:
+        assert exc.value.pos == len(sql)
+    else:
+        assert exc.value.pos == sql.index(fragment)
+
+
+@pytest.mark.parametrize("sql, name, kind", [
+    ("SELECT pid FROM no_such_table", "no_such_table", "table"),
+    ("SELECT zzz FROM patient_info", "zzz", "column"),
+    ("SELECT pid FROM patient_info WHERE bogus > 1", "bogus", "column"),
+    ("SELECT pid FROM patient_info ORDER BY nope", "nope", "column"),
+    # model-name errors point at the string *token* (opening quote)
+    ("SELECT pid, PREDICT(MODEL='ghost') AS p FROM patient_info",
+     "'ghost'", "model"),
+])
+def test_unknown_names_are_lookup_errors(store, sql, name, kind):
+    with pytest.raises(SqlLookupError) as exc:
+        parse_query(sql, store)
+    _assert_positioned(exc.value, sql)
+    assert f"unknown {kind}" in exc.value.message
+    assert exc.value.pos == sql.index(name)
+    # backward compat: catalog misses were KeyErrors before positioning
+    assert isinstance(exc.value, KeyError)
+
+
+def test_caret_alignment_renders_under_offset(store):
+    sql = "SELECT pid FROM patient_info WHERE bogus > 1"
+    with pytest.raises(SqlError) as exc:
+        parse_query(sql, store)
+    rendered = str(exc.value).splitlines()
+    snippet, caret = rendered[-2], rendered[-1]
+    # both lines share the same indent, so the caret's string index lands
+    # exactly on the offending character in the snippet line
+    assert snippet[caret.index("^"):].startswith("bogus")
+
+
+def test_mixed_param_styles_rejected(store):
+    sql = "SELECT pid FROM patient_info WHERE age > ? AND age < :hi"
+    with pytest.raises(SqlError) as exc:
+        parse_query(sql, store)
+    _assert_positioned(exc.value, sql)
+    assert "mix" in exc.value.message
+
+
+# ---------------------------------------------------------------------------
+# Property: truncation and mutation never escape SqlError
+# ---------------------------------------------------------------------------
+
+def test_every_truncation_fails_positioned_or_parses(store):
+    for sql in VALID_QUERIES:
+        for cut in range(len(sql)):
+            trunc = sql[:cut]
+            try:
+                parse_query(trunc, store)
+            except SqlError as err:
+                _assert_positioned(err, trunc)
+            # no other exception type may escape
+
+
+def test_seeded_mutations_fail_positioned_or_parse(store):
+    rng = random.Random(0xC0FFEE)
+    alphabet = string.ascii_letters + string.digits + " '()<>=*,.?:!@#$%"
+    checked = failures = 0
+    for sql in VALID_QUERIES:
+        for _ in range(200):
+            s = list(sql)
+            for _ in range(rng.randint(1, 3)):
+                op = rng.randrange(3)
+                i = rng.randrange(len(s)) if s else 0
+                if op == 0 and s:
+                    s[i] = rng.choice(alphabet)         # substitute
+                elif op == 1 and s:
+                    del s[i]                            # delete
+                else:
+                    s.insert(i, rng.choice(alphabet))   # insert
+            mutated = "".join(s)
+            checked += 1
+            try:
+                parse_query(mutated, store)
+            except SqlError as err:
+                failures += 1
+                _assert_positioned(err, mutated)
+    assert checked == 1000
+    assert failures > 300, "mutation corpus too tame to mean anything"
+
+
+def test_random_garbage_fails_positioned(store):
+    rng = random.Random(7)
+    printable = string.printable
+    for _ in range(300):
+        garbage = "".join(rng.choice(printable)
+                          for _ in range(rng.randint(0, 60)))
+        try:
+            parse_query(garbage, store)
+        except SqlError as err:
+            _assert_positioned(err, garbage)
+
+
+# ---------------------------------------------------------------------------
+# Catalogs without schema skip name resolution (old contract)
+# ---------------------------------------------------------------------------
+
+class _ModelsOnly:
+    def get_model(self, name):
+        raise KeyError(name)
+
+
+def test_schemaless_catalog_skips_column_resolution():
+    plan = parse_query("SELECT anything FROM wherever WHERE x > 1",
+                       _ModelsOnly())
+    assert plan.output is not None
+
+
+def test_schemaless_catalog_still_positions_model_errors():
+    sql = "SELECT pid, PREDICT(MODEL='nope') AS p FROM t"
+    with pytest.raises(SqlLookupError) as exc:
+        parse_query(sql, _ModelsOnly())
+    assert exc.value.pos == sql.index("'nope'")
