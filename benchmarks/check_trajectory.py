@@ -10,7 +10,13 @@ metric regresses when
     current < (1 - tolerance) * baseline
 
 (default tolerance 20%; a ``"tolerance"`` key in a baseline entry
-overrides it for *every* metric of that entry).  A tracked row or metric
+overrides it for *every* metric of that entry).  A metric may instead be
+pinned as a **hard floor** — ``{"min_ratio": 1.0}`` — which is never
+scaled by tolerance: the export value must be ``>=`` the floor, full
+stop.  Use it for invariants the benchmark *constructs* (e.g. "the
+translated tree path is at least as fast as traversal at every size",
+where equality is emitted exactly when both compile to one executable)
+rather than for measured throughput.  A tracked row or metric
 *missing* from the export also
 fails — a benchmark silently vanishing is the quietest possible
 regression.  Baselines are deliberately conservative floors (chosen below
@@ -52,6 +58,20 @@ def check(bench: dict, baseline: dict, tolerance: float) -> int:
             if metric == "tolerance":
                 continue
             current = row.get("derived", {}).get(metric)
+            if isinstance(floor_of, dict) and "min_ratio" in floor_of:
+                # hard floor: tolerance never applies
+                floor = floor_of["min_ratio"]
+                if not isinstance(current, (int, float)):
+                    print(f"FAIL {name}.{metric}: missing from export "
+                          f"(derived={row.get('derived')})")
+                    failures += 1
+                    continue
+                status = "ok" if current >= floor else "FAIL"
+                print(f"{status:>4} {name}.{metric}: {current:.2f} "
+                      f"(hard floor {floor:.2f})")
+                if current < floor:
+                    failures += 1
+                continue
             if not isinstance(floor_of, (int, float)):
                 print(f"FAIL {name}.{metric}: baseline value "
                       f"{floor_of!r} is not numeric")
@@ -89,6 +109,13 @@ def rebaseline(bench: dict, baseline: dict, path: str) -> int:
         for metric, floor_of in sorted(tracked.items()):
             if metric == "tolerance":
                 entry[metric] = floor_of
+                continue
+            if isinstance(floor_of, dict) and "min_ratio" in floor_of:
+                # hard floors are editorial invariants, not measured
+                # high-water marks: rebaselining preserves them as-is
+                entry[metric] = floor_of
+                print(f"  {name}.{metric}: hard floor "
+                      f"{floor_of['min_ratio']} kept")
                 continue
             current = derived.get(metric)
             if isinstance(current, (int, float)):

@@ -68,9 +68,9 @@ def main() -> int:
 
     from . import (continuous_batching, fig2a_projection_pushdown,
                    fig2b_clustering, fig2c_inlining, fig2d_nn_translation,
-                   fig3_integration, lossy_pushdown, multi_tenant_saturation,
-                   plan_cache, pruning, sharded_join_agg, sharded_scan,
-                   subplan_reuse)
+                   fig2d_tree_gemm, fig3_integration, lossy_pushdown,
+                   multi_tenant_saturation, plan_cache, pruning,
+                   sharded_join_agg, sharded_scan, subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -88,6 +88,9 @@ def main() -> int:
         ("fig2c", lambda: fig2c_inlining.run(
             n_rows=min(n, 300_000) if not args.quick else 30_000)),
         ("fig2d", lambda: fig2d_nn_translation.run()),
+        ("fig2d_tree_gemm", lambda: fig2d_tree_gemm.run(
+            sizes=(1_000, 10_000) if args.quick
+            else (1_000, 10_000, 50_000))),
         ("fig3", lambda: fig3_integration.run(
             sizes=(1_000, 10_000) if args.quick
             else (1_000, 10_000, 100_000), per_tuple=True)),

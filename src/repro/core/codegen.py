@@ -24,7 +24,7 @@ from __future__ import annotations
 import functools
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -417,7 +417,13 @@ def compile_plan(plan: Plan, catalog,
                 env[nid] = (ins[0] > a["value"]).astype(jnp.float32)
             elif op == "tree_gemm":
                 ens = a["ensemble"]
-                if config.use_pallas_tree_gemm:
+                # Strategy chosen by the cost-model crossover at plan time
+                # (nn_translation); ``use_pallas_tree_gemm`` force-overrides
+                # for benchmarks/back-compat.  The strategy attr participates
+                # in the plan signature, so differently-lowered plans never
+                # share a cached executable.
+                strategy = a.get("strategy", "gemm")
+                if config.use_pallas_tree_gemm or strategy == "pallas":
                     from ..kernels.tree_gemm import ops as tg_ops
                     scores = tg_ops.tree_gemm(ens, ins[0])
                 else:
@@ -452,6 +458,46 @@ def compile_plan(plan: Plan, catalog,
         return env[plan.output]
 
     return run
+
+
+_STRUCTURAL_PARAM_ATTRS = {"limit": ("n",)}
+
+
+def bind_structural_params(plan: Plan, bound: Optional[Dict[str, Any]]
+                           ) -> Tuple[Plan, Optional[Dict[str, Any]]]:
+    """Substitute bindings for *plan-structural* parameters (``LIMIT :n``)
+    into a copy of the plan at plan-build time.
+
+    Expression parameters bind inside the jitted closure, so every binding
+    shares one plan signature and one executable.  Structural parameters
+    shape the plan itself and cannot be traced; they are bound here instead,
+    which deliberately gives each distinct value its own plan signature (a
+    ``LIMIT 10`` and a ``LIMIT 20`` request compile separately — the
+    documented cost of accepting parameters in structural positions).
+    Returns ``(plan, residual_bound)`` with consumed names dropped from the
+    binding dict; a no-op (same plan object) when nothing is structural.
+    """
+    from ..relational.expr import Param
+    if not bound:
+        return plan, bound
+    sites = []
+    for n in plan.nodes.values():
+        for attr in _STRUCTURAL_PARAM_ATTRS.get(n.op, ()):
+            v = n.attrs.get(attr)
+            if isinstance(v, Param):
+                sites.append((n.id, attr, v.name))
+    if not sites:
+        return plan, bound
+    out = plan.copy()
+    for nid, attr, name in sites:
+        out.nodes[nid].attrs[attr] = int(np.asarray(bound[name]))
+    # a name used only structurally is fully consumed; one also referenced
+    # by an expression (e.g. WHERE x > :n LIMIT :n) stays bound
+    remaining = plan_params(out)
+    residual = {k: v for k, v in bound.items() if k in remaining}
+    out.param_order = tuple(k for k in getattr(plan, "param_order", ())
+                            if k in remaining)
+    return out, residual
 
 
 def resolve_params(plan: Plan, params: Any) -> Dict[str, jnp.ndarray]:
@@ -494,7 +540,9 @@ def execute(plan: Plan, catalog, config: Optional[ExecutionConfig] = None,
         if name not in tabs:
             tabs[name] = catalog.get_table(name)
     if params is not None or plan_params(plan):
-        tabs["__params__"] = resolve_params(plan, params)
+        bound = resolve_params(plan, params)
+        plan, bound = bind_structural_params(plan, bound)
+        tabs["__params__"] = bound
     fn = compile_plan(plan, catalog, config)
     if jit:
         fn = jax.jit(fn)

@@ -28,7 +28,9 @@ from ..relational.expr import extract_constraints
 from .ir import Plan
 
 __all__ = ["CostParams", "estimate_rows", "tree_impl_costs",
-           "choose_tree_impl"]
+           "choose_tree_impl", "TreeStrategyCalibration",
+           "measure_tree_calibration", "calibrated_tree_costs",
+           "tree_strategy_costs", "choose_tree_strategy"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,7 +122,10 @@ def estimate_rows(plan: Plan, catalog) -> Dict[str, float]:
             rows[nid] = rows.get(n.inputs[0], 1e6)   # FK join: |left|
             src_table[nid] = src_table.get(n.inputs[0])
         elif n.op == "limit":
-            rows[nid] = min(rows.get(n.inputs[0], 1e6), float(n.attrs["n"]))
+            lim = n.attrs["n"]
+            rows[nid] = rows.get(n.inputs[0], 1e6)
+            if isinstance(lim, (int, float)):   # may be an unbound Param
+                rows[nid] = min(rows[nid], float(lim))
             src_table[nid] = src_table.get(n.inputs[0])
         elif n.op in ("group_agg", "partial_agg"):
             # partial_agg (two-phase local stage) has the same output
@@ -170,3 +175,186 @@ def choose_tree_impl(model, n_rows: float, n_features: int,
     params = params or CostParams.for_backend()
     costs = tree_impl_costs(model, n_rows, n_features, params)
     return min(costs, key=costs.get)
+
+
+# --------------------------------------------------------------------------
+# Measured tree-strategy crossover (Fig 2d repair).
+#
+# The abstract CostParams ratios above are fine for rule ordering but were
+# demonstrably wrong about the traversal/GEMM crossover (BENCH_6: the
+# translated path at 0.05-0.07x traversal on CPU).  The strategy choice now
+# runs on *measured* per-element constants: once per process we time a small
+# calibration forest through each strategy at two batch sizes, solve
+# time(n) = call_overhead + n * per_row for each, and cache the result both
+# module-wide and in the ModelStore so every optimizer instance sharing the
+# catalog reuses one measurement.
+# --------------------------------------------------------------------------
+
+_CAL_TREES, _CAL_DEPTH, _CAL_FEATURES = 8, 6, 8
+_CAL_SIZES = (512, 8192)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeStrategyCalibration:
+    """Measured linear cost models ``time(n) = call + n * per_row_unit``.
+
+    ``trav_step`` is seconds per (row x tree x depth-step); ``gemm_flop`` /
+    ``pallas_flop`` are seconds per padded flop of the dense lowering
+    (``pallas_flop`` is None off-TPU — interpret mode is a correctness
+    fallback, never a contender)."""
+
+    backend: str
+    trav_step: float
+    trav_call: float
+    gemm_flop: float
+    gemm_call: float
+    pallas_flop: Optional[float]
+    pallas_call: float
+
+
+def _time_call(fn, *args) -> float:
+    import time
+
+    import jax
+    jax.block_until_ready(fn(*args))            # compile + warm
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fit_linear(n_small, t_small, n_big, t_big):
+    per_row = max((t_big - t_small) / (n_big - n_small), 1e-12)
+    call = max(t_small - n_small * per_row, 0.0)
+    return per_row, call
+
+
+def _dense_flops_per_row(t, n_internal, n_leaves, n_out) -> float:
+    # gather-gated dense strategy: I gate ops + I*L path-count MACs + L*O
+    # payout MACs per tree per row (the F*I one-hot matmul is gone).
+    return float(t * (n_internal + n_internal * n_leaves
+                      + n_leaves * n_out))
+
+
+def _pallas_flops_per_row(t, n_features, n_internal, n_leaves,
+                          n_out) -> float:
+    # the kernel keeps the X @ A gating matmul (that's what feeds the MXU)
+    return float(t * (n_features * n_internal + n_internal * n_leaves
+                      + n_leaves * n_out))
+
+
+def measure_tree_calibration(backend: Optional[str] = None
+                             ) -> TreeStrategyCalibration:
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.tree_gemm import ops as tg_ops
+    from ..ml import (RandomForest, ensemble_to_gemm_mxu,
+                      predict_ensemble_gemm)
+
+    backend = backend or jax.default_backend()
+    rng = np.random.default_rng(7)
+    xf = rng.normal(size=(1024, _CAL_FEATURES)).astype(np.float32)
+    yf = (xf[:, 0] + xf[:, 1] > 0).astype(np.int32)
+    rf = RandomForest(n_trees=_CAL_TREES, max_depth=_CAL_DEPTH).fit(xf, yf)
+    ens = ensemble_to_gemm_mxu(rf.trees)
+    t = len(rf.trees)
+    depth = max(tt.depth for tt in rf.trees)
+    n_i, n_l, n_o = ens.a.shape[2], ens.c.shape[2], ens.e.shape[2]
+
+    times = {}
+    for n in _CAL_SIZES:
+        xs = jnp.asarray(rng.normal(size=(n, _CAL_FEATURES)),
+                         dtype=jnp.float32)
+        times[("trav", n)] = _time_call(
+            jax.jit(rf.predict_scores), xs)
+        times[("gemm", n)] = _time_call(
+            jax.jit(lambda v: predict_ensemble_gemm(ens, v)), xs)
+        if backend == "tpu":
+            times[("pallas", n)] = _time_call(
+                lambda v: tg_ops.tree_gemm(ens, v, interpret=False), xs)
+
+    n0, n1 = _CAL_SIZES
+    step, trav_call = _fit_linear(n0, times[("trav", n0)],
+                                  n1, times[("trav", n1)])
+    trav_step = step / (t * depth)
+    slope, gemm_call = _fit_linear(n0, times[("gemm", n0)],
+                                   n1, times[("gemm", n1)])
+    gemm_flop = slope / _dense_flops_per_row(t, n_i, n_l, n_o)
+    pallas_flop, pallas_call = None, 0.0
+    if backend == "tpu":
+        slope, pallas_call = _fit_linear(n0, times[("pallas", n0)],
+                                         n1, times[("pallas", n1)])
+        pallas_flop = slope / _pallas_flops_per_row(
+            t, _CAL_FEATURES, n_i, n_l, n_o)
+    return TreeStrategyCalibration(
+        backend=backend, trav_step=trav_step, trav_call=trav_call,
+        gemm_flop=gemm_flop, gemm_call=gemm_call,
+        pallas_flop=pallas_flop, pallas_call=pallas_call)
+
+
+_PROCESS_CALIBRATIONS: Dict[str, TreeStrategyCalibration] = {}
+
+
+def calibrated_tree_costs(backend: Optional[str] = None, catalog=None
+                          ) -> TreeStrategyCalibration:
+    """One measurement per (process, backend); the ModelStore doubles as a
+    cross-optimizer cache so every instance sharing a catalog reuses it."""
+    import jax
+    backend = backend or jax.default_backend()
+    getter = getattr(catalog, "get_calibration", None)
+    if getter is not None:
+        cached = getter(("tree_strategy", backend))
+        if cached is not None:
+            return cached
+    cal = _PROCESS_CALIBRATIONS.get(backend)
+    if cal is None:
+        cal = measure_tree_calibration(backend)
+        _PROCESS_CALIBRATIONS[backend] = cal
+    if getter is not None:
+        catalog.put_calibration(("tree_strategy", backend), cal)
+    return cal
+
+
+def tree_strategy_costs(model, n_rows: float, n_features: int,
+                        cal: TreeStrategyCalibration) -> Dict[str, float]:
+    """Estimated seconds per call for each runnable inference strategy."""
+    kind = getattr(model, "kind", None)
+    trees = [model.tree] if kind == "decision_tree" else model.trees
+    t = len(trees)
+    depth = max(tt.depth for tt in trees)
+    n_out = int(trees[0].n_outputs)
+
+    def up(x, pad):
+        return max(pad, ((x + pad - 1) // pad) * pad)
+
+    max_i = max((tt.n_nodes - len(tt.leaf_indices())) for tt in trees)
+    max_l = max(len(tt.leaf_indices()) for tt in trees)
+    # the dense strategy pads to small multiples (gather gating needs no MXU
+    # alignment); the Pallas kernel requires full 128-lane tiles
+    i8, l8 = up(max_i, 8), up(max_l, 8)
+    i128, l128 = up(max_i, 128), up(max_l, 128)
+    costs = {
+        "traversal": cal.trav_call + n_rows * t * depth * cal.trav_step,
+        "gemm": cal.gemm_call + n_rows * cal.gemm_flop
+        * _dense_flops_per_row(t, i8, l8, n_out),
+    }
+    if cal.pallas_flop is not None:
+        costs["pallas"] = cal.pallas_call + n_rows * cal.pallas_flop \
+            * _pallas_flops_per_row(t, n_features, i128, l128, n_out)
+    else:
+        costs["pallas"] = float("inf")
+    return costs
+
+
+def choose_tree_strategy(model, n_rows: float, n_features: int,
+                         backend: Optional[str] = None, catalog=None
+                         ) -> tuple:
+    """Measured crossover: pick the cheapest of traversal / dense GEMM /
+    Pallas for this (model, n_rows, n_features, backend).  Returns
+    ``(strategy, costs)`` so callers can log the margin."""
+    cal = calibrated_tree_costs(backend, catalog)
+    costs = tree_strategy_costs(model, n_rows, n_features, cal)
+    return min(costs, key=costs.get), costs

@@ -239,6 +239,7 @@ class ModelStore:
         self._table_versions: Dict[str, int] = {}
         self._stats: Dict[str, Dict[str, ColumnStats]] = {}
         self._clusters: Dict[str, Any] = {}
+        self._calibrations: Dict[Any, Any] = {}
         self._digests: Dict[Tuple[str, int], str] = {}
         self._audit_log: List[AuditRecord] = []
         self._invalidation_listeners: List[Any] = []
@@ -262,6 +263,18 @@ class ModelStore:
         # lock-order inversions.
         for fn in list(self._invalidation_listeners):
             fn(kind, name)
+
+    # -- measured calibrations ------------------------------------------------
+    def get_calibration(self, key) -> Any:
+        """Cached measurement (e.g. tree-strategy cost constants) or None.
+        Calibrations describe the *hardware*, not any registered artifact, so
+        re-registering models/tables never invalidates them."""
+        with self._lock:
+            return self._calibrations.get(key)
+
+    def put_calibration(self, key, value) -> None:
+        with self._lock:
+            self._calibrations[key] = value
 
     # -- audit ----------------------------------------------------------------
     def _audit(self, action: str, subject: str, version: Optional[int]):

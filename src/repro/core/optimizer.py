@@ -78,7 +78,14 @@ class OptimizerConfig:
     enable_model_inlining: bool = True
     enable_nn_translation: bool = True
     inline_max_nodes: int = 63        # trees at most this size inline to CASE
-    gemm_pad_to: int = 128            # MXU alignment for NN translation
+    # Dense tree-GEMM padding multiple.  The dense (XLA) strategy gates via
+    # gathers and needs no MXU alignment, so small pads waste fewer flops;
+    # the Pallas strategy always pads to 128 regardless of this knob.
+    gemm_pad_to: int = 8
+    # Tree-inference strategy: "auto" runs the measured cost-model crossover
+    # (core.cost_model.choose_tree_strategy) per (n_rows, n_trees, depth,
+    # backend); "traversal" / "gemm" / "pallas" force one implementation.
+    tree_strategy: str = "auto"
     # Hummingbird trades FLOPs for parallel hardware: the GEMM form wins on
     # TPU/GPU but loses to pointer-chasing traversal for *single* trees on
     # CPU (ensembles amortize either way).  "auto" = translate single trees

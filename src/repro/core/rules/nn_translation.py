@@ -16,7 +16,8 @@ from ..ir import Category, Node, Plan
 from .common import find_predict_chains
 
 
-def _translate_trees(plan, chain, cfg, report) -> bool:
+def _translate_trees(plan, chain, cfg, report,
+                     strategy: str = "gemm") -> bool:
     from ...ml.hummingbird import ensemble_to_gemm
     model = chain.predict.attrs["model"]
     kind = model.kind
@@ -30,13 +31,16 @@ def _translate_trees(plan, chain, cfg, report) -> bool:
         trees, average = model.trees, False
         bias, scale = model.base, model.learning_rate
         task = "regression"
-    ens = ensemble_to_gemm(trees, pad_to=cfg.gemm_pad_to, average=average)
+    # The Pallas kernel needs full 128-lane MXU tiles; the gather-gated dense
+    # strategy has no alignment requirement and wastes flops on padding.
+    pad = 128 if strategy == "pallas" else cfg.gemm_pad_to
+    ens = ensemble_to_gemm(trees, pad_to=pad, average=average)
     if scale != 1.0:
         ens.e = (ens.e * scale).astype(np.float32)
     node = Node(op="tree_gemm", category=Category.LA,
                 inputs=[chain.featurize.id],
                 attrs={"ensemble": ens, "task": task, "proba": proba,
-                       "bias": bias,
+                       "bias": bias, "strategy": strategy,
                        "model_name": chain.predict.attrs.get("model_name")},
                 out_kind="matrix")
     plan.add(node)
@@ -44,8 +48,8 @@ def _translate_trees(plan, chain, cfg, report) -> bool:
     plan.prune_dead()
     report.log("nn_translation",
                f"{chain.predict.attrs.get('model_name')}: {kind} -> "
-               f"tree_gemm [{ens.a.shape[0]}x{ens.a.shape[2]}i/"
-               f"{ens.c.shape[2]}l pad {cfg.gemm_pad_to}]")
+               f"tree_gemm/{strategy} [{ens.a.shape[0]}x{ens.a.shape[2]}i/"
+               f"{ens.c.shape[2]}l pad {pad}]")
     return True
 
 
@@ -126,43 +130,65 @@ def _translate_mlp(plan, chain, report) -> bool:
     return True
 
 
-def _single_tree_ok(cfg) -> bool:
-    mode = getattr(cfg, "nn_translate_single_trees", "auto")
-    if mode == "always":
-        return True
-    if mode == "never":
-        return False
-    import jax
-    return jax.default_backend() in ("tpu", "gpu")
+_TREE_KINDS = ("decision_tree", "random_forest", "gbt")
+
+
+def _pick_tree_strategy(plan, chain, model, catalog, cfg, report,
+                        rows) -> str:
+    """traversal / gemm / pallas for this chain.
+
+    Precedence: an explicit ``cfg.tree_strategy`` wins; then the single-tree
+    heuristic knob (``nn_translate_single_trees``: "always" forces the dense
+    form, "never" keeps traversal); otherwise the *measured* cost-model
+    crossover (``choose_tree_strategy``, calibrated once per process and
+    cached in the ModelStore) decides per (n_rows, n_trees, depth, backend).
+    """
+    forced = getattr(cfg, "tree_strategy", "auto")
+    if forced != "auto":
+        return forced
+    if model.kind == "decision_tree":
+        mode = getattr(cfg, "nn_translate_single_trees", "auto")
+        if mode == "always":
+            return "gemm"
+        if mode == "never":
+            return "traversal"
+    from ..cost_model import choose_tree_strategy, estimate_rows
+    if not rows:
+        rows.update(estimate_rows(plan, catalog))
+    n_feat = sum(f.mapping().n_features
+                 for f in chain.featurize.attrs["featurizers"])
+    n_rows = rows.get(chain.table_input, 1e6)
+    strategy, costs = choose_tree_strategy(model, n_rows, n_feat,
+                                           catalog=catalog)
+    pretty = ", ".join(f"{k} {v * 1e6:.0f}us" for k, v in
+                       sorted(costs.items(), key=lambda kv: kv[1]))
+    report.log("tree_strategy",
+               f"{chain.predict.attrs.get('model_name')}: {strategy} "
+               f"(est rows {n_rows:.3g}; {pretty})")
+    return strategy
 
 
 def apply(plan: Plan, catalog, cfg, report) -> bool:
     changed = False
-    rows = None
+    rows = {}
     for chain in find_predict_chains(plan):
         if chain.predict.runtime != "native":
             continue
         model = chain.predict.attrs["model"]
         kind = getattr(model, "kind", None)
-        if kind in ("decision_tree", "random_forest", "gbt") \
-                and getattr(cfg, "cost_based", False):
-            from ..cost_model import choose_tree_impl, estimate_rows
-            if rows is None:
-                rows = estimate_rows(plan, catalog)
-            n_feat = sum(f.mapping().n_features
-                         for f in chain.featurize.attrs["featurizers"])
-            choice = choose_tree_impl(model,
-                                      rows.get(chain.table_input, 1e6),
-                                      n_feat)
-            report.log("cost_based_choice",
-                       f"{chain.predict.attrs.get('model_name')}: {choice} "
-                       f"(est rows {rows.get(chain.table_input, 0):.3g})")
-            if choice != "gemm":
+        if kind in _TREE_KINDS:
+            strategy = _pick_tree_strategy(plan, chain, model, catalog, cfg,
+                                           report, rows)
+            if strategy == "traversal":
+                # Honest non-translation: the measured crossover says the
+                # native traversal is the fastest form here.  Record the
+                # decision on the node so runtime_selection (and plan
+                # signatures) see a deliberate choice, not a skipped rule.
+                if chain.predict.attrs.get("tree_strategy") != "traversal":
+                    chain.predict.attrs["tree_strategy"] = "traversal"
+                    changed = True
                 continue
-        elif kind == "decision_tree" and not _single_tree_ok(cfg):
-            continue    # traversal beats GEMM for lone trees on CPU
-        if kind in ("decision_tree", "random_forest", "gbt"):
-            changed |= _translate_trees(plan, chain, cfg, report)
+            changed |= _translate_trees(plan, chain, cfg, report, strategy)
         elif kind in ("linear_regression", "logistic_regression"):
             changed |= _translate_linear(plan, chain, report)
         elif kind == "mlp":

@@ -9,6 +9,7 @@ join when the referenced columns live entirely on one side.
 
 from __future__ import annotations
 
+from ...relational.expr import expr_params
 from ..ir import Category, Node, Plan
 from .common import produced_columns
 
@@ -26,6 +27,13 @@ def apply(plan: Plan, catalog, cfg, report) -> bool:
             refs = n.attrs["predicate"].references()
             if child.op in ("attach_column", "map"):
                 made = child.attrs["name"]
+                # Param-bearing filters stay *above* attach_column: the SQL
+                # frontend deliberately places them after the model chain so
+                # the expensive prefix is param-free and result-cacheable
+                # (see sql_frontend conjunct routing); pushing them back
+                # down would re-poison every cacheable subtree.
+                if expr_params(n.attrs["predicate"]):
+                    continue
                 if made not in refs and len(plan.consumers(child.id)) == 1:
                     # swap: filter moves below child
                     below = child.inputs[0]

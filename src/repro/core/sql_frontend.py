@@ -391,7 +391,17 @@ class _Parser:
                 self.accept("kw", "ASC")
         lim = None
         if self.accept("kw", "LIMIT"):
-            lim = int(self.expect("num").value)
+            # LIMIT is plan-structural (it shapes the plan, not a traced
+            # expression), so a parameter here binds at plan-build time:
+            # bind_structural_params substitutes the integer into a plan
+            # copy before signature computation, giving each distinct value
+            # its own plan signature (vs expression params, which bind
+            # inside one shared jitted closure).
+            ptok = self.accept("param")
+            if ptok is not None:
+                lim = self._param(ptok)
+            else:
+                lim = int(self.expect("num").value)
         if self.peek() is not None:
             self._err(f"trailing tokens starting at {self.peek().value!r}")
         return items, tables, join_keys, where, group_by, \
@@ -508,14 +518,21 @@ def parse_query(sql: str, catalog) -> Plan:
 
     # WHERE: conjuncts that don't touch predictions filter *before* the model
     # runs (paper: this enables predicate-based model pruning); conjuncts
-    # referencing PREDICT output filter after attachment.
+    # referencing PREDICT output filter after attachment.  Param-bearing
+    # conjuncts also go *after* the model chain even when they don't touch
+    # the prediction: filtering the attached table by a model-independent
+    # predicate commutes exactly with attach_column, and keeping Params out
+    # of the expensive featurize/predict prefix leaves that prefix
+    # result-cacheable (params only affect the cheap residual), so `:name`
+    # queries get cross-query splice hits just like literal ones.
     pre_conjuncts: List[Expr] = []
     post_conjuncts: List[Expr] = []
     if where is not None:
         from ..relational.expr import conjuncts as split
+        from ..relational.expr import expr_params
         for c in split(where):
             (post_conjuncts if _expr_refs_any(c, placeholders)
-             else pre_conjuncts).append(c)
+             or expr_params(c) else pre_conjuncts).append(c)
 
     def _conjoin(cs: List[Expr]) -> Expr:
         e = cs[0]

@@ -19,8 +19,15 @@ def _on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("average", "n_trees",
                                              "interpret"))
 def _run(x, a, b, c, d, e, n_trees: int, average: bool, interpret: bool):
-    out = tree_gemm_pallas(jnp.asarray(x, jnp.float32), a, b, c, d, e,
-                           interpret=interpret)
+    x = jnp.asarray(x, jnp.float32)
+    # The kernel gates via X @ A, and NaN/±inf would poison every gate column
+    # through 0 * NaN = NaN.  Mapping NaN/+inf -> fmax and -inf -> -fmax keeps
+    # the gate booleans identical to traversal's per-node comparisons: every
+    # real threshold is a finite data midpoint, so fmax <= t is False (like
+    # NaN <= t and inf <= t) and -fmax <= t is True (like -inf <= t).
+    fmax = float(jnp.finfo(jnp.float32).max)
+    x = jnp.nan_to_num(x, nan=fmax, posinf=fmax, neginf=-fmax)
+    out = tree_gemm_pallas(x, a, b, c, d, e, interpret=interpret)
     return out / n_trees if average else out
 
 

@@ -3,7 +3,8 @@
 from .featurize import (Bucketizer, FeatureMapping, Imputer, OneHotEncoder,
                         StandardScaler)
 from .hummingbird import (EnsembleGemm, TreeGemm, ensemble_to_gemm,
-                          predict_ensemble_gemm, predict_gemm, tree_to_gemm)
+                          ensemble_to_gemm_mxu, predict_ensemble_gemm,
+                          predict_gemm, tree_to_gemm)
 from .linear import LinearRegression, LogisticRegression
 from .mlp import MLP
 from .pipeline import Pipeline, PipelineMetadata
@@ -13,8 +14,8 @@ from .tree import (DecisionTree, GradientBoostedTrees, RandomForest,
 __all__ = [
     "Bucketizer", "FeatureMapping", "Imputer", "OneHotEncoder",
     "StandardScaler",
-    "EnsembleGemm", "TreeGemm", "ensemble_to_gemm", "predict_ensemble_gemm",
-    "predict_gemm", "tree_to_gemm",
+    "EnsembleGemm", "TreeGemm", "ensemble_to_gemm", "ensemble_to_gemm_mxu",
+    "predict_ensemble_gemm", "predict_gemm", "tree_to_gemm",
     "LinearRegression", "LogisticRegression", "MLP",
     "Pipeline", "PipelineMetadata",
     "DecisionTree", "GradientBoostedTrees", "RandomForest", "TreeArrays",

@@ -31,7 +31,7 @@ import numpy as np
 from .tree import TreeArrays
 
 __all__ = ["TreeGemm", "EnsembleGemm", "tree_to_gemm", "ensemble_to_gemm",
-           "predict_gemm", "predict_ensemble_gemm"]
+           "ensemble_to_gemm_mxu", "predict_gemm", "predict_ensemble_gemm"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -107,6 +107,12 @@ class EnsembleGemm:
     MXU-aligned shapes; padded leaves get D = +inf sentinel (never matched),
     padded internal nodes get B = +inf (condition trivially true but C rows
     are zero so they never contribute).
+
+    ``feat`` [T, I] carries each internal node's feature index (0 on padded
+    nodes).  The dense strategy gates via a gather ``x[:, feat] <= b`` — same
+    booleans as ``x @ a <= b`` for finite inputs, but NaN-exact vs traversal
+    (``NaN <= t`` is False ⇒ go right, matching ``TreeArrays.predict_jnp``)
+    and free of the one-hot matmul that dominated the old lowering's FLOPs.
     """
 
     a: np.ndarray  # [T, F, I]
@@ -116,6 +122,7 @@ class EnsembleGemm:
     e: np.ndarray  # [T, L, O]
     n_trees: int
     average: bool = True
+    feat: Optional[np.ndarray] = None  # [T, I] int32
 
     @property
     def n_features(self):
@@ -135,6 +142,7 @@ def ensemble_to_gemm(trees: Sequence[TreeArrays], pad_to: int = 128,
     c = np.zeros((T, max_i, max_l), np.float32)
     d = np.full((T, max_l), np.float32(np.finfo(np.float32).max))
     e = np.zeros((T, max_l, n_o), np.float32)
+    feat = np.zeros((T, max_i), np.int32)
     for t, g in enumerate(gemms):
         i, l = g.a.shape[1], g.c.shape[1]
         a[t, :, :i] = g.a
@@ -142,22 +150,49 @@ def ensemble_to_gemm(trees: Sequence[TreeArrays], pad_to: int = 128,
         c[t, :i, :l] = g.c
         d[t, :l] = g.d
         e[t, :l] = g.e
-    return EnsembleGemm(a, b, c, d, e, n_trees=T, average=average)
+        feat[t, :i] = np.argmax(g.a, axis=0).astype(np.int32)
+    return EnsembleGemm(a, b, c, d, e, n_trees=T, average=average, feat=feat)
+
+
+def ensemble_to_gemm_mxu(trees: Sequence[TreeArrays],
+                         average: bool = True) -> EnsembleGemm:
+    """MXU-aligned lowering consumed by the Pallas kernel: I and L padded to
+    multiples of 128 so every block the kernel touches is a full MXU tile."""
+    return ensemble_to_gemm(trees, pad_to=128, average=average)
 
 
 def predict_ensemble_gemm(ens: EnsembleGemm, x: jnp.ndarray) -> jnp.ndarray:
-    """Oracle: batched GEMMs over trees.  [n, F] -> [n, O]."""
-    a = jnp.asarray(ens.a)
+    """Dense GEMM strategy: [n, F] -> [n, O].
+
+    Bit-identical to forest traversal (``RandomForest.predict_scores``) by
+    construction: gather-based gating reproduces each node comparison exactly
+    (including NaN semantics); S = gates @ C sums only {-1, 0, +1} products so
+    every partial sum is an exact small integer; match @ E adds the exact leaf
+    value plus exact zeros; trees accumulate sequentially in tree order and
+    divide by n_trees last — the same float32 operation sequence as traversal.
+    """
+    import jax
+
     b = jnp.asarray(ens.b)
     c = jnp.asarray(ens.c)
     d = jnp.asarray(ens.d)
     e = jnp.asarray(ens.e)
-    # [T, n, I]
-    t = (jnp.einsum("nf,tfi->tni", x, a) <= b[:, None, :]).astype(jnp.float32)
-    s = jnp.einsum("tni,til->tnl", t, c)
-    match = (s == d[:, None, :]).astype(jnp.float32)
-    leaf = jnp.argmax(match, axis=-1)                       # [T, n]
-    out = jnp.take_along_axis(
-        e, leaf[:, :, None].repeat(e.shape[-1], -1), axis=1)  # [T, n, O]
-    total = jnp.sum(out, axis=0)
-    return total / ens.n_trees if ens.average else total
+    if ens.feat is not None:
+        feat = jnp.asarray(ens.feat)
+
+        def gate(t):
+            return (x[:, feat[t]] <= b[t]).astype(jnp.float32)
+    else:  # legacy ensembles without feature indices: one-hot matmul gating
+        a = jnp.asarray(ens.a)
+
+        def gate(t):
+            return (x @ a[t] <= b[t]).astype(jnp.float32)
+
+    def one_tree(t):
+        s = gate(t) @ c[t]                            # [n, L] exact ints
+        match = (s == d[t]).astype(jnp.float32)
+        return match @ e[t]                           # [n, O]
+
+    acc = jax.lax.fori_loop(
+        1, ens.n_trees, lambda t, acc: acc + one_tree(t), one_tree(0))
+    return acc / ens.n_trees if ens.average else acc

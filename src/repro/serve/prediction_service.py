@@ -105,8 +105,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.codegen import (ExecutionConfig, compile_plan, count_jit_trace,
-                            pow2_bucket, resolve_params)
+from ..core.codegen import (ExecutionConfig, bind_structural_params,
+                            compile_plan, count_jit_trace, pow2_bucket,
+                            resolve_params)
 from ..core.ir import (Node, Plan, ROW_LOCAL_OPS, bucketed_signature,
                        is_deterministic_subtree, plan_params, plan_signature,
                        sharded_signature, subtree_nodes, subtree_signatures)
@@ -1207,7 +1208,8 @@ class PredictionService:
         if compiled.splice is not None:
             out = self._execute_spliced(compiled, tabs)
         elif not params and self._should_shard(compiled, tables):
-            out = self._execute_sharded(compiled, tabs, store_capture)
+            out = self._execute_sharded(compiled, tabs, store_capture,
+                                        tenant=tenant)
         elif (self.chunk_rows and compiled.chunk_table is not None
                 and tabs[compiled.chunk_table].capacity > self.chunk_rows):
             out = self._execute_chunked(compiled, tabs, store_capture,
@@ -1277,14 +1279,19 @@ class PredictionService:
 
     def _execute_sharded(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
-                         store_capture: bool = True) -> Any:
+                         store_capture: bool = True,
+                         tenant: Optional[str] = None) -> Any:
         """Place the plan's surviving partitions across the data mesh and
         run the fused program per morsel (``serve/sharded.py``).  The
         partitioned table is re-read from the catalog (not the tabs dict)
         so partition ranges and data always describe the same object.
-        Captures are not stored from this path: a morsel's output rows are
-        partition slices, not the whole-table value the result-cache key
-        would claim."""
+        Capture-compiled plans keep their capture: the executor reassembles
+        per-morsel capture slices in partition order — bit-exact the
+        whole-table subtree value when every partition was scanned — and
+        the result cache is populated exactly as on the whole-table path.
+        When zone maps pruned partitions (or the pruned set was stale) the
+        reassembled capture covers only the surviving rows, which is *not*
+        the value the result-cache key claims, so it is discarded."""
         if compiled.dist is not None:
             return self._execute_distributed(compiled, tabs, store_capture)
         cfg = self.execution_config
@@ -1293,7 +1300,8 @@ class PredictionService:
         if pt is None:
             # partitioning vanished between _should_shard and here (the
             # table was re-registered unpartitioned): serve whole-table
-            return self._execute_whole(compiled, tabs, store_capture)
+            return self._execute_whole(compiled, tabs, store_capture,
+                                       tenant=tenant)
         executor = self._shard_executor()
         scan = next(n for n in compiled.plan.nodes.values()
                     if n.op == "scan")
@@ -1303,8 +1311,8 @@ class PredictionService:
         # separate catalog reads: stale stamp -> the pruned set describes
         # other data -> scan every partition of the pt we actually hold —
         # always sound, pruning is only ever an optimization
-        if surviving is None \
-                or (name, pt.version) not in compiled.catalog_versions \
+        version_fresh = (name, pt.version) in compiled.catalog_versions
+        if surviving is None or not version_fresh \
                 or any(i >= pt.n_partitions for i in surviving):
             surviving = tuple(range(pt.n_partitions))
         parts = [pt.partitions[i] for i in surviving]
@@ -1313,14 +1321,19 @@ class PredictionService:
             morsel_rows=cfg.shard_morsel_rows)
         twin, fresh, tags = self._sharded_executable(
             compiled, placement.bucket_rows)
-        unwrap = (lambda raw: raw[0]) if compiled.capture is not None \
-            else None
+        want_capture = compiled.capture is not None
         t0 = time.perf_counter()
         out = executor.execute(twin.fn, pt, name, parts, placement,
-                               unwrap=unwrap)
+                               capture=want_capture)
+        elapsed = time.perf_counter() - t0
+        if want_capture:
+            out, captured = out
+            if (store_capture and version_fresh
+                    and len(parts) == pt.n_partitions):
+                self._store_result(compiled.capture, captured, elapsed,
+                                   producer=compiled.key, tenant=tenant)
         twin.serves += 1
-        self._record_twin_cost(twin, fresh, tags,
-                               time.perf_counter() - t0)
+        self._record_twin_cost(twin, fresh, tags, elapsed)
         with self._lock:
             self.stats.sharded_executions += 1
             self.stats.shard_waves += placement.n_waves
@@ -1507,7 +1520,11 @@ class PredictionService:
         *values* share one plan signature, one compiled executable, and one
         parse-cache entry; only the bound values travel with the request,
         so a hot parameterized query never recompiles (satellite guarantee:
-        zero warm compiles across distinct literals).  ``tenant``/``ctx``
+        zero warm compiles across distinct literals).  The exception is
+        *structural* positions (``LIMIT :n``): those bind at plan-build
+        time, so each distinct value is its own signature/executable —
+        see :func:`repro.core.codegen.bind_structural_params`.
+        ``tenant``/``ctx``
         route the request through that tenant's admission queue, cache
         quota and stats ledger; both default to the single-tenant path."""
         return self.run(query, tables, params=params, ctx=ctx,
@@ -1538,10 +1555,15 @@ class PredictionService:
         ticket = PredictionTicket()
         try:
             plan = self._to_plan(query)
-            key, _ = self._cache_key(plan, tables)
             bound = None
             if params is not None or plan_params(plan):
                 bound = resolve_params(plan, params) or None
+                # Structural params (LIMIT :n) bind into a plan copy *before*
+                # the cache key: each distinct value is its own plan
+                # signature, so cached executables stay distinct per value.
+                plan, bound = bind_structural_params(plan, bound)
+                bound = bound or None
+            key, _ = self._cache_key(plan, tables)
         except Exception as err:
             ticket._fail(err)
             return ticket

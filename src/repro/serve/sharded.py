@@ -205,8 +205,8 @@ class ShardedExecutor:
                 placement: ShardPlacement,
                 unwrap: Optional[Callable[[Any], Any]] = None,
                 sides: Optional[Dict[str, Tuple[Any, int]]] = None,
-                combine: Optional[Callable[[List[Any]], Any]] = None
-                ) -> Any:
+                combine: Optional[Callable[[List[Any]], Any]] = None,
+                capture: bool = False) -> Any:
         """Execute ``fn`` over ``partitions`` of ``source`` per
         ``placement`` and reassemble the output in partition order.
 
@@ -216,8 +216,11 @@ class ShardedExecutor:
         paid per execution, proportional to *total* table size however
         many partitions were pruned).  ``fn`` must be the jitted fused
         plan taking ``{scan_name: Table, ...}``; ``unwrap`` post-processes
-        each morsel's raw result (the serving layer drops capture outputs
-        with it).
+        each morsel's raw result.  ``capture=True`` instead treats each raw
+        result as an ``(output, capture)`` pair — both row-local over the
+        anchor — and reassembles *both* in partition order, returning the
+        pair (so the serving layer's result cache keeps its capture instead
+        of dropping it whenever execution went sharded).
 
         ``sides`` maps additional scan names (partition-wise join inputs)
         to ``(PartitionedTable, bucket_rows)``: each morsel gathers the
@@ -233,6 +236,9 @@ class ShardedExecutor:
         state; they are folded host-side in ascending partition order
         (placement-independent, so any device count is bit-identical) and
         the combined value is returned."""
+        if capture and (combine is not None or unwrap is not None):
+            raise ValueError("capture=True is row-local reassembly; it "
+                             "composes with neither combine nor unwrap")
         part_map = {p.index: p for p in partitions}
         if hasattr(source, "host_view"):           # PartitionedTable
             host_cols, host_valid = source.host_view()
@@ -282,36 +288,46 @@ class ShardedExecutor:
                                           srows - rows, s_schema, device)
             return tables
 
-        def run_morsel(morsel: Morsel,
-                       tables: Dict[str, Table]) -> List[Tuple[int, Any]]:
-            parts = [part_map[i] for i in morsel.partitions]
-            raw = fn(tables)
-            if unwrap is not None:
-                raw = unwrap(raw)
-            raw = jax.block_until_ready(raw)
-            if combine is not None:
-                # partial-aggregate state: one mergeable value per morsel,
-                # ordered by its first partition for the combine fold
-                return [(parts[0].index, raw)]
-            # split back per partition, host-side (one transfer per morsel)
-            out: List[Tuple[int, Any]] = []
+        def split_rows(raw: Any, parts: Sequence[Partition]) -> List[Any]:
+            """Split one morsel's row-local result back per partition,
+            host-side (one transfer per morsel); trailing pad rows fall
+            off the last slice."""
+            pieces: List[Any] = []
             if isinstance(raw, Table):
                 out_cols = {k: np.asarray(v) for k, v in raw.columns.items()}
                 out_valid = np.asarray(raw.valid)
                 off = 0
                 for p in parts:
-                    piece = ({k: v[off:off + p.n_rows]
-                              for k, v in out_cols.items()},
-                             out_valid[off:off + p.n_rows], raw.schema)
-                    out.append((p.index, piece))
+                    pieces.append(({k: v[off:off + p.n_rows]
+                                    for k, v in out_cols.items()},
+                                   out_valid[off:off + p.n_rows], raw.schema))
                     off += p.n_rows
             else:
                 arr = np.asarray(raw)
                 off = 0
                 for p in parts:
-                    out.append((p.index, arr[off:off + p.n_rows]))
+                    pieces.append(arr[off:off + p.n_rows])
                     off += p.n_rows
-            return out
+            return pieces
+
+        def run_morsel(morsel: Morsel, tables: Dict[str, Table]
+                       ) -> List[Tuple[int, Any, Any]]:
+            parts = [part_map[i] for i in morsel.partitions]
+            raw = fn(tables)
+            cap = None
+            if capture:
+                raw, cap = raw
+            elif unwrap is not None:
+                raw = unwrap(raw)
+            raw = jax.block_until_ready(raw)
+            if combine is not None:
+                # partial-aggregate state: one mergeable value per morsel,
+                # ordered by its first partition for the combine fold
+                return [(parts[0].index, raw, None)]
+            outs = split_rows(raw, parts)
+            caps = (split_rows(jax.block_until_ready(cap), parts)
+                    if capture else [None] * len(parts))
+            return [(p.index, o, c) for p, o, c in zip(parts, outs, caps)]
 
         active = [d for d in range(self.n_devices)
                   if placement.assignments[d]]
@@ -319,8 +335,8 @@ class ShardedExecutor:
                         for m in placement.assignments[d]]
                     for d in active}
 
-        def run_device(d: int) -> List[Tuple[int, Any]]:
-            pieces: List[Tuple[int, Any]] = []
+        def run_device(d: int) -> List[Tuple[int, Any, Any]]:
+            pieces: List[Tuple[int, Any, Any]] = []
             for morsel, tables in prepared[d]:
                 pieces.extend(run_morsel(morsel, tables))
             return pieces
@@ -344,18 +360,25 @@ class ShardedExecutor:
                     in side_views.items():
                 tables[name] = zeros_table(s_cols, srows, s_schema)
             raw = fn(tables)
-            if unwrap is not None:
+            cap = None
+            if capture:
+                raw, cap = raw
+            elif unwrap is not None:
                 raw = unwrap(raw)
             raw = jax.block_until_ready(raw)
             if combine is not None:
                 return combine([raw])
-            if isinstance(raw, Table):
-                return Table(
-                    {k: v[:0] for k, v in raw.columns.items()},
-                    raw.valid[:0], raw.schema)
-            return raw[:0]
 
-        results: Dict[int, List[Tuple[int, Any]]] = {}
+            def empty(v: Any) -> Any:
+                if isinstance(v, Table):
+                    return Table({k: c[:0] for k, c in v.columns.items()},
+                                 v.valid[:0], v.schema)
+                return v[:0]
+            if capture:
+                return empty(raw), empty(jax.block_until_ready(cap))
+            return empty(raw)
+
+        results: Dict[int, List[Tuple[int, Any, Any]]] = {}
         errors: List[BaseException] = []
 
         def worker(d: int):
@@ -381,12 +404,19 @@ class ShardedExecutor:
                         key=lambda pair: pair[0])
         if combine is not None:
             return combine([p[1] for p in pieces])
-        if isinstance(pieces[0][1], tuple):        # Table morsels
-            schema = pieces[0][1][2]
-            names = pieces[0][1][0].keys()
-            cols = {k: jnp.asarray(
-                np.concatenate([p[1][0][k] for p in pieces], axis=0))
-                for k in names}
-            valid = jnp.asarray(np.concatenate([p[1][1] for p in pieces]))
-            return Table(cols, valid, schema)
-        return jnp.asarray(np.concatenate([p[1] for p in pieces], axis=0))
+
+        def reassemble(items: List[Any]) -> Any:
+            if isinstance(items[0], tuple):        # Table morsels
+                schema = items[0][2]
+                names = items[0][0].keys()
+                cols = {k: jnp.asarray(
+                    np.concatenate([it[0][k] for it in items], axis=0))
+                    for k in names}
+                valid = jnp.asarray(np.concatenate([it[1] for it in items]))
+                return Table(cols, valid, schema)
+            return jnp.asarray(np.concatenate(items, axis=0))
+
+        out = reassemble([p[1] for p in pieces])
+        if capture:
+            return out, reassemble([p[2] for p in pieces])
+        return out

@@ -453,6 +453,39 @@ def test_service_sharded_unpruned_full_bit_exact(partitioned_store):
     base.close(); svc.close()
 
 
+def test_service_sharded_capture_populates_result_cache(partitioned_store):
+    """Sharded execution used to drop the capture output with ``unwrap``,
+    so a sharded full scan never populated the result cache.  The executor
+    now reassembles per-morsel capture slices in partition order; the
+    stored value is bit-exact the whole-table serve's capture, so a second
+    query splices from it."""
+    store, _ = partitioned_store
+    sql = "SELECT pid, PREDICT(MODEL='m') AS s FROM people"
+    svc = _sharded_service(store)
+    svc.run(sql)
+    assert svc.stats.sharded_executions == 1
+    assert svc.stats.result_puts == 1
+    out = svc.run("SELECT pid, x, PREDICT(MODEL='m') AS s FROM people")
+    assert svc.stats.result_hits == 1
+    assert svc.stats.spliced_executions == 1
+    base = PredictionService(store)   # unsharded, uncached reference
+    want = base.run("SELECT pid, x, PREDICT(MODEL='m') AS s FROM people")
+    _assert_same_valid_rows(out, want)
+    base.close(); svc.close()
+
+
+def test_service_sharded_pruned_serve_skips_capture(partitioned_store):
+    """When zone maps pruned partitions the reassembled capture covers
+    only surviving rows — not the value the result-cache key claims — so
+    it must be discarded, never stored."""
+    store, _ = partitioned_store
+    svc = _sharded_service(store)
+    svc.run(SQL)                                   # age < 30: prunes
+    assert svc.shard_info()["partitions_pruned"] > 0
+    assert svc.stats.result_puts == 0
+    svc.close()
+
+
 def test_service_override_tables_never_prune_or_shard(partitioned_store):
     store, t = partitioned_store
     svc = _sharded_service(store)

@@ -111,6 +111,48 @@ def test_rematerialization_after_result_eviction(store, assert_tables_equal):
     assert_tables_equal(out1, out2)
 
 
+def test_parameterized_query_populates_and_reuses_cache(store):
+    """A parameter in the WHERE clause used to poison every enclosing
+    subtree (`plan_params` vetoed the candidate), so hot parameterized
+    queries never captured.  The frontend now routes param-bearing
+    conjuncts above ``attach_column``, leaving the inference prefix
+    cacheable; distinct bindings then splice from one entry."""
+    svc = PredictionService(store)
+    q = ("SELECT pid, PREDICT(MODEL='m') AS s FROM patient_info "
+         "WHERE age > :lo")
+    out1 = svc.run(q, params={"lo": 40.0})
+    assert svc.stats.result_puts == 1
+    out2 = svc.run(q, params={"lo": 55.0})   # same signature: warm executable
+    # a *different* query sharing the inference prefix splices the value
+    # the parameterized query captured
+    out3 = svc.run("SELECT pid, age, PREDICT(MODEL='m') AS s "
+                   "FROM patient_info WHERE age > :lo", params={"lo": 30.0})
+    assert svc.stats.result_hits == 1
+    assert svc.stats.spliced_executions == 1
+    # bindings behave like the literal queries they stand for
+    lit = PredictionService(store, enable_result_cache=False)
+    for out, lo in ((out1, 40.0), (out2, 55.0)):
+        want = lit.run("SELECT pid, PREDICT(MODEL='m') AS s "
+                       f"FROM patient_info WHERE age > {lo}")
+        assert out.to_pydict() == want.to_pydict()
+
+
+def test_structural_limit_param_binds_per_value(store):
+    """``LIMIT :n`` binds at plan-build time: each value is its own plan
+    signature (documented tradeoff), results are exact, and repeats of a
+    value reuse its executable."""
+    svc = PredictionService(store)
+    q = "SELECT pid FROM patient_info LIMIT :n"
+    r10 = svc.run(q, params={"n": 10})
+    r20 = svc.run(q, params={"n": 20})
+    r10b = svc.run(q, params={"n": 10})
+    assert len(r10.to_pydict()["pid"]) == 10
+    assert len(r20.to_pydict()["pid"]) == 20
+    assert r10b.to_pydict() == r10.to_pydict()
+    assert svc.stats.cache_misses == 2      # one signature per LIMIT value
+    assert svc.stats.cache_hits == 1
+
+
 def test_overridden_tables_never_capture_or_splice(store):
     pi = store.get_table("patient_info")
     sub = Table({k: v[:100] for k, v in pi.columns.items()},
