@@ -38,12 +38,12 @@ bench-tenants:
 # check — exactly what the bench-trajectory CI job runs.  BENCH_N is
 # numbered per PR so the uploaded artifacts form a perf history.
 bench-json:
-	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_6.json
-	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_6.json \
+	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_8.json
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_8.json \
 		benchmarks/baseline.json
 
 # Rewrite benchmarks/baseline.json from the latest export after an
 # *intentional* perf-profile change (then commit the diff).
 bench-rebaseline:
-	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_6.json \
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_8.json \
 		benchmarks/baseline.json --rebaseline

@@ -70,7 +70,8 @@ def main() -> int:
                    fig2b_clustering, fig2c_inlining, fig2d_nn_translation,
                    fig2d_tree_gemm, fig3_integration, lossy_pushdown,
                    multi_tenant_saturation, plan_cache, pruning,
-                   sharded_join_agg, sharded_scan, subplan_reuse)
+                   sharded_join_agg, sharded_scan, shuffle_join,
+                   subplan_reuse)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -82,6 +83,7 @@ def main() -> int:
         # steals enough of a small CI machine to flake those asserts
         ("sharded_scan", lambda: sharded_scan.run(n_rows=n)),
         ("sharded_join_agg", lambda: sharded_join_agg.run(n_rows=n)),
+        ("shuffle_join", lambda: shuffle_join.run(n_rows=n)),
         ("pruning", lambda: pruning.run(n_rows=n)),
         ("fig2a", lambda: fig2a_projection_pushdown.run(n_rows=n)),
         ("fig2b", lambda: fig2b_clustering.run(n_rows=n)),

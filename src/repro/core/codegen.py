@@ -62,6 +62,15 @@ class ExecutionConfig:
     ``shard_morsel_rows`` caps morsel granularity (a huge table on few
     devices runs as multiple same-shaped waves instead of one giant
     executable); ``shard_min_bucket_rows`` floors the pow-2 morsel bucket.
+
+    Exchange execution (``serve/exchange.py``): ``shard_exchange=True``
+    lets equi-joins whose sides are *not* co-partitioned shard anyway via
+    a hash-repartition shuffle on the join key.
+    ``shard_exchange_cost_gate`` keeps the bytes-moved-vs-whole-table
+    cost check (``core.cost_model.exchange_beneficial``) in front of the
+    shuffle — small tables fall back to whole-table execution where the
+    per-bucket dispatch overhead would dominate; tests that must pin the
+    exchange path deterministically turn the gate off.
     """
 
     def __init__(self, container_latency_s: float = 0.05,
@@ -70,7 +79,9 @@ class ExecutionConfig:
                  sharded: bool = False,
                  shard_devices: int = 0,
                  shard_morsel_rows: int = 1 << 16,
-                 shard_min_bucket_rows: int = 64):
+                 shard_min_bucket_rows: int = 64,
+                 shard_exchange: bool = True,
+                 shard_exchange_cost_gate: bool = True):
         self.container_latency_s = container_latency_s
         self.external_latency_s = external_latency_s
         self.use_pallas_tree_gemm = use_pallas_tree_gemm
@@ -78,13 +89,16 @@ class ExecutionConfig:
         self.shard_devices = shard_devices
         self.shard_morsel_rows = shard_morsel_rows
         self.shard_min_bucket_rows = shard_min_bucket_rows
+        self.shard_exchange = shard_exchange
+        self.shard_exchange_cost_gate = shard_exchange_cost_gate
 
     def cache_key(self) -> tuple:
         """Hashable identity for compiled-executable caching: two configs
         with equal knobs produce identical executables."""
         return (self.container_latency_s, self.external_latency_s,
                 self.use_pallas_tree_gemm, self.sharded, self.shard_devices,
-                self.shard_morsel_rows, self.shard_min_bucket_rows)
+                self.shard_morsel_rows, self.shard_min_bucket_rows,
+                self.shard_exchange, self.shard_exchange_cost_gate)
 
 
 # Observability hooks: every compile_plan() call counts under

@@ -30,7 +30,8 @@ from .ir import Plan
 __all__ = ["CostParams", "estimate_rows", "tree_impl_costs",
            "choose_tree_impl", "TreeStrategyCalibration",
            "measure_tree_calibration", "calibrated_tree_costs",
-           "tree_strategy_costs", "choose_tree_strategy"]
+           "tree_strategy_costs", "choose_tree_strategy",
+           "exchange_cost", "whole_join_cost", "exchange_beneficial"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +58,62 @@ class CostParams:
 
 
 _DEFAULT_SELECTIVITY = 1.0 / 3.0
+
+
+# -- hash-repartition exchange gate ------------------------------------------
+#
+# The shuffle moves every participating row host->device once (gather +
+# device_put) and pays a fixed dispatch/padding overhead per hash bucket;
+# in exchange the sort-merge join compute divides across the mesh.  On
+# small inputs the per-bucket overhead dominates — whole-table execution
+# on one device is simply cheaper — so the serving layer asks
+# ``exchange_beneficial`` with the *actual* (post-pruning) row counts
+# before committing to the shuffle and falls back otherwise.
+
+# Abstract cost of launching one padded bucket (device_put latency, thread
+# dispatch, padding waste).  Calibrated coarsely: at 8 devices the
+# crossover lands at a few thousand rows, far below any table worth
+# sharding and above the toy sizes where whole-table wins outright.
+_EXCHANGE_DISPATCH_COST = 4096.0
+
+
+def _log2_rows(n: float) -> float:
+    return float(np.log2(max(n, 2.0)))
+
+
+def whole_join_cost(anchor_rows: float, side_rows: float,
+                    params: Optional[CostParams] = None) -> float:
+    """Single-device sort-merge equi-join: both sides sorted/probed
+    (``c_cmp`` per compare level) plus a gather per output row."""
+    p = params or CostParams()
+    total = float(anchor_rows) + float(side_rows)
+    return total * (p.c_cmp * _log2_rows(side_rows) + p.c_gather)
+
+
+def exchange_cost(anchor_rows: float, side_rows: float, n_devices: int,
+                  n_buckets: int,
+                  params: Optional[CostParams] = None) -> float:
+    """Hash-repartition shuffle + per-bucket joins: every row is hashed,
+    gathered host-side and uploaded once (bytes moved — ``c_row_io``
+    each way), the join compute divides across ``n_devices``, and each
+    bucket pays a fixed dispatch overhead."""
+    p = params or CostParams()
+    total = float(anchor_rows) + float(side_rows)
+    moved = total * p.c_row_io * 2.0
+    per_device = total / max(int(n_devices), 1)
+    compute = per_device * (p.c_cmp * _log2_rows(side_rows) + p.c_gather)
+    dispatch = max(int(n_buckets), 1) * _EXCHANGE_DISPATCH_COST
+    return moved + compute + dispatch
+
+
+def exchange_beneficial(anchor_rows: float, side_rows: float,
+                        n_devices: int, n_buckets: int,
+                        params: Optional[CostParams] = None) -> bool:
+    """True when shuffling beats whole-table single-device execution for
+    these (post-pruning) row counts."""
+    return exchange_cost(anchor_rows, side_rows, n_devices, n_buckets,
+                         params) \
+        < whole_join_cost(anchor_rows, side_rows, params)
 
 
 def _predicate_selectivity(pred, catalog, table_hint: Optional[str]) -> float:

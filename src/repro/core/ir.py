@@ -277,7 +277,8 @@ def bucketed_signature(sig: str, bucket_rows: int) -> str:
 
 def sharded_signature(sig: str, bucket_rows: int,
                       mesh_shape: Tuple[int, ...],
-                      side_buckets: Sequence[Tuple[str, int]] = ()) -> str:
+                      side_buckets: Sequence[Tuple[str, int]] = (),
+                      exchange: Optional[Tuple[int, int]] = None) -> str:
     """Identity of a partition-parallel executable: the structural
     signature plus the per-device morsel row bucket it was jitted for and
     the mesh shape it is placed across.  Note the structural half is
@@ -290,11 +291,24 @@ def sharded_signature(sig: str, bucket_rows: int,
     non-anchor join input is gathered at its own padded row bucket
     (``(table name, bucket rows)`` pairs), and those shapes are part of
     what XLA specialized the executable for — two placements whose side
-    buckets differ must not share a trace."""
+    buckets differ must not share a trace.
+
+    ``exchange`` extends the identity for hash-repartition shuffle
+    execution: ``(n_buckets, anchor_bucket_rows)`` — the number of hash
+    buckets the join key was split into and the padded per-bucket anchor
+    row capacity.  An exchanged execution pads both join sides to
+    bucket-local capacities that depend on the hash split, not on the
+    catalog partition layout, so the same structural plan exchanged at a
+    different bucket count (or re-registered with different data skew)
+    must map to a distinct executable entry."""
     mesh = "x".join(str(int(d)) for d in mesh_shape)
     sides = "".join(f"@{name}:{int(rows)}"
                     for name, rows in sorted(side_buckets))
-    return f"{sig}@rows{int(bucket_rows)}@mesh{mesh}{sides}"
+    exch = ""
+    if exchange is not None:
+        n_buckets, anchor_rows = exchange
+        exch = f"@exch{int(n_buckets)}:{int(anchor_rows)}"
+    return f"{sig}@rows{int(bucket_rows)}@mesh{mesh}{sides}{exch}"
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,10 @@ class OptimizerConfig:
     # distributed_plan.py).  Off for override tables for the same reason:
     # co-partitioning is a property of the *registered* data.
     enable_distributed_plan: bool = True
+    # Hash-repartition exchange marking for equi-joins whose sides are
+    # partition-local but *not* co-partitioned (serve/exchange.py runs the
+    # shuffle).  Subordinate to enable_distributed_plan.
+    enable_exchange: bool = True
     enable_projection_pushdown: bool = True
     enable_join_elimination: bool = True
     enable_model_query_splitting: bool = False   # opt-in (duplicates rows)

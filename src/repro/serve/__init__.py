@@ -2,14 +2,19 @@
 prediction-query service with its three-tier cache (plan-signature
 executable cache -> cross-query materialized result cache -> cost-aware
 eviction/invalidation) plus continuous-batching admission (latency-budget
-coalescing over shape-bucketed executables)."""
+coalescing over shape-bucketed executables) and the hash-repartition
+exchange that shards non-co-partitioned equi-joins."""
 
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
-                        Batcher, Clock, ManualClock, ReadyGroup, SystemClock)
+                        Batcher, Clock, DeadlineUnmeetable, ManualClock,
+                        ReadyGroup, SystemClock)
 from .cache import CacheEntry, CostAwareCache, value_nbytes
 from .context import RequestContext, Session, TenantPolicy
 from .engine import InferenceEngine, Request, ServeConfig
-from .prediction_service import (CompiledPrediction, DistributedSpec,
+from .exchange import (ExchangePlacement, choose_bucket_count, hash_buckets,
+                       plan_exchange)
+from .prediction_service import (AggStage, CompiledPrediction,
+                                 DistributedSpec, ExchangeSpec,
                                  PredictionService, PredictionTicket,
                                  ServiceStats, SubplanRef, TenantStats)
 from .sampling import sample_token
@@ -18,9 +23,12 @@ from .sharded import (Morsel, ShardedExecutor, ShardPlacement, plan_morsels,
 
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
-           "DistributedSpec", "ServiceStats", "SubplanRef", "CostAwareCache",
+           "DistributedSpec", "AggStage", "ExchangeSpec", "ServiceStats",
+           "SubplanRef", "CostAwareCache",
            "CacheEntry", "value_nbytes", "AdmissionConfig", "AdmissionLoop",
-           "AdmissionQueueFull", "Batcher", "Clock", "ManualClock",
-           "ReadyGroup", "SystemClock", "Morsel", "ShardedExecutor",
-           "ShardPlacement", "plan_morsels", "side_bucket_rows",
+           "AdmissionQueueFull", "Batcher", "Clock", "DeadlineUnmeetable",
+           "ManualClock", "ReadyGroup", "SystemClock", "Morsel",
+           "ShardedExecutor", "ShardPlacement", "plan_morsels",
+           "side_bucket_rows", "ExchangePlacement", "choose_bucket_count",
+           "hash_buckets", "plan_exchange",
            "RequestContext", "Session", "TenantPolicy", "TenantStats"]

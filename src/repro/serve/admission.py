@@ -64,11 +64,21 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 from .context import RequestContext
 
 __all__ = ["AdmissionConfig", "AdmissionLoop", "AdmissionQueueFull",
-           "Batcher", "Clock", "ManualClock", "ReadyGroup", "SystemClock"]
+           "Batcher", "Clock", "DeadlineUnmeetable", "ManualClock",
+           "ReadyGroup", "SystemClock"]
 
 
 class AdmissionQueueFull(RuntimeError):
     """The bounded admission queue stayed full past the offer timeout."""
+
+
+class DeadlineUnmeetable(RuntimeError):
+    """The request's ``ctx.deadline_s`` cannot possibly be met: the
+    observed queue-wait EWMA plus the calibrated execution estimate for
+    its plan already exceed the deadline, so admitting it would only serve
+    it late.  Raised at admission (``PredictionService.submit``) so the
+    caller can shed or retry elsewhere instead of burning a queue slot on
+    a doomed request."""
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +164,16 @@ class AdmissionConfig:
       ``max_batch_requests``.  The EWMA updates at admission and release
       events (``adaptive_alpha`` smoothing), so it is fully deterministic
       under a :class:`ManualClock`.
+    - ``max_tenant_compiles`` — cap on *cold* (uncompiled-signature)
+      groups released per tenant per ``pop_ready`` pass (0 = unlimited).
+      A tenant minting novel plan signatures otherwise monopolizes the
+      serve thread with cold compiles and starves compliant tenants' warm
+      path: with the cap, excess cold groups simply stay queued behind
+      the tenant's own DRR slot and release on later passes, so other
+      tenants' due work interleaves between compiles.  Needs the
+      ``Batcher.is_cold`` seam (the service injects an executable-cache
+      peek); warm groups are never deferred, and ``drain()`` ignores the
+      cap — an explicit flush leaves nothing behind.
     """
 
     latency_budget_s: float = 0.002
@@ -168,6 +188,7 @@ class AdmissionConfig:
     min_latency_budget_s: float = 5e-4
     max_latency_budget_s: float = 8e-3
     adaptive_alpha: float = 0.2
+    max_tenant_compiles: int = 0
 
 
 @dataclasses.dataclass
@@ -258,6 +279,11 @@ class Batcher:
         self._depth_ewma = 0.0
         self._closed = False
         self.rejections: Dict[Optional[str], int] = {}
+        # ``max_tenant_compiles`` seam: the service injects a predicate
+        # answering "would serving this batch key compile cold right
+        # now?" (an executable-cache peek).  None disables the cap.
+        self.is_cold: Optional[Callable[[Any], bool]] = None
+        self.compile_deferrals = 0       # cold groups held back by the cap
         # test/observability seams — called synchronously, outside cond.
         # Hooks may take the legacy shapes ``on_admit(item)`` /
         # ``on_flush(key, items, reason)`` or append a trailing
@@ -441,21 +467,43 @@ class Batcher:
         releases that many groups — so a tenant flooding the queue still
         only advances in proportion to its weight while compliant
         tenants' groups drain on schedule.  Within one tenant, higher
-        ``ctx.priority`` groups order first (stable for equal priority)."""
+        ``ctx.priority`` groups order first (stable for equal priority).
+
+        **Compile cap** (``max_tenant_compiles`` + the ``is_cold`` seam):
+        a non-forced pass releases at most that many *cold* groups per
+        tenant; further cold groups stay queued (already past due, so the
+        next pass reconsiders them — by which time earlier compiles have
+        warmed their keys).  Warm groups always release, and at least one
+        due group per tenant always releases, so the loop never spins on
+        a fully-deferred queue."""
         if now is None:
             now = self.clock.monotonic()
         cap = max(self.config.max_batch_requests, 1)
+        cold_cap = 0 if force else max(int(self.config.max_tenant_compiles),
+                                       0)
         per_tenant: Dict[Optional[str], List[ReadyGroup]] = {}
         any_popped = False
+        deferred = 0
         with self.cond:
             for tenant, queue in self._queues.items():
                 popped_ids = set()
                 groups: List[ReadyGroup] = []
+                cold_released = 0
                 for key, group in self._grouped(queue).items():
                     reason = "drain" if force \
                         else self._ready_reason(group, now)
                     if reason is None:
                         continue
+                    if cold_cap > 0 and self.is_cold is not None:
+                        try:
+                            cold = bool(self.is_cold(key))
+                        except Exception:    # defensive: treat as warm
+                            cold = False
+                        if cold:
+                            if cold_released >= cold_cap:
+                                deferred += 1
+                                continue     # stays queued, due next pass
+                            cold_released += 1
                     # a group is homogeneous in chunkability (same key)
                     release = group
                     if reason == "full" and group[0].chunk:
@@ -478,6 +526,7 @@ class Batcher:
                                                 if g.ctx else 0))
                     per_tenant[tenant] = groups
                     any_popped = True
+            self.compile_deferrals += deferred
             if any_popped:
                 self._observe_depth()
                 self.cond.notify_all()   # space freed: unblock producers

@@ -117,14 +117,16 @@ from ..core.sql_frontend import parse_query
 from ..relational.ops import combine_partials
 from ..relational.table import Schema, Table
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
-                        Batcher, Clock, ReadyGroup, SystemClock)
+                        Batcher, Clock, DeadlineUnmeetable, ReadyGroup,
+                        SystemClock)
 from .cache import CostAwareCache, value_nbytes
 from .context import RequestContext, Session, TenantPolicy
 from .sharded import ShardedExecutor, side_bucket_rows
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
-           "CompiledPrediction", "DistributedSpec", "SubplanRef",
-           "RequestContext", "Session", "TenantPolicy", "TenantStats"]
+           "CompiledPrediction", "DistributedSpec", "AggStage",
+           "ExchangeSpec", "SubplanRef", "RequestContext", "Session",
+           "TenantPolicy", "TenantStats"]
 
 
 # Ops whose output rows correspond 1:1 (positionally) to their input rows —
@@ -188,9 +190,15 @@ class ServiceStats:
     partitions_pruned: int = 0      # partitions skipped via zone maps
     # distributed plans (partition-wise joins / two-phase aggregation)
     shard_join_executions: int = 0  # sharded serves containing a
-                                    # partition-wise join
+                                    # partition-wise or exchange join
     shard_agg_combines: int = 0     # two-phase combine stages run
     shard_partial_aggs: int = 0     # per-morsel partial aggregates computed
+    # hash-repartition exchange (serve/exchange.py)
+    exchange_executions: int = 0    # shuffle-exchange stages run
+    exchange_fallbacks: int = 0     # exchanges the cost gate sent whole-table
+    exchange_bytes_moved: int = 0   # actual shuffle payload (pre-padding)
+    # deadline-based shedding (admission front door)
+    deadline_rejections: int = 0    # submits shed as DeadlineUnmeetable
     # SQL front door
     sql_parses: int = 0             # SQL texts parsed (parse-cache misses)
     sql_parse_hits: int = 0         # SQL texts served from the parse cache
@@ -205,6 +213,7 @@ class TenantStats:
     submitted: int = 0
     served: int = 0
     coalesced: int = 0
+    deadline_rejections: int = 0     # submits shed as DeadlineUnmeetable
     latencies: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=2048))
 
@@ -226,30 +235,64 @@ class SubplanRef:
         return f"{root.op}[{self.n_nodes} nodes] over {self.scan_tables}"
 
 
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """One hash-repartition shuffle inside a local plan: the equi-join's
+    key column (intact at both scans, so the same name addresses it on
+    both sides) and the two partitioned tables to bucket.  ``left`` is
+    the anchor — output rows follow its rows through the scatter-back."""
+
+    on: str                           # join key column name
+    left: str                         # anchor-side partitioned table
+    right: str                        # other side's partitioned table
+    join_id: str = ""                 # plan node carrying the mark
+
+
+@dataclasses.dataclass
+class AggStage:
+    """One two-phase aggregation's local half: the sub-plan below the
+    ``group_agg`` capped with a ``partial_agg`` head, plus everything the
+    executor needs to run it partition-wise (or via an exchange) and fold
+    the per-morsel partials into the residual's ``slot``."""
+
+    key: Optional[str]                # group-by column (None = scalar aggs)
+    aggs: Dict[str, Tuple]            # out name -> (fn, col)
+    slot: str                         # materialized-slot the residual reads
+    anchor: str                       # partitioned table driving placement
+    part_tables: Tuple[str, ...]      # partitioned scans, anchor first
+    local_plan: Plan
+    local_raw_fn: Any
+    local_sig: str
+    n_joins: int = 0                  # partition-wise joins in local_plan
+    exchange: Optional[ExchangeSpec] = None
+
+
 @dataclasses.dataclass
 class DistributedSpec:
     """Local/global split of a distributed-rewritten plan
     (``core/rules/distributed_plan.py``), derived once at compile time.
 
-    The *local* plan runs per morsel on the sharded executor: the whole
-    plan for a partition-wise join chain, or the sub-plan below the
-    aggregation capped with a ``partial_agg`` head for a two-phase
-    aggregation.  The *global* stage — only present for two-phase — is the
-    host-side ``combine_partials`` fold plus whatever sat above the
-    aggregation, compiled to read the combined table through a
-    ``materialized`` slot."""
+    Join-only plans use the top-level fields: the *local* plan is the
+    whole plan, run per morsel (co-partitioned) or per hash bucket
+    (``exchange``).  Two-phase aggregation plans carry one
+    :class:`AggStage` per eligible ``group_agg`` in ``stages`` — each
+    stage's partials fold independently into its slot, and ``global_fn``
+    (the residual above the aggregations, reading every slot through
+    ``materialized`` leaves) runs host-side over the tiny combined
+    tables."""
 
     anchor: str                       # partitioned table driving placement
-    part_tables: Tuple[str, ...]      # all partitioned scans, anchor first
-    local_plan: Plan                  # per-morsel program
+    part_tables: Tuple[str, ...]      # union of partitioned scans across
+                                      # stages (version-check set)
+    local_plan: Plan                  # per-morsel program (join-only mode)
     local_raw_fn: Any                 # unjitted closure for local_plan
     local_sig: str                    # plan_signature(local_plan): the
                                       # sharded-twin identity half
     n_joins: int = 0                  # partition-wise joins in local_plan
-    # two-phase aggregation pieces (None for join-only plans):
-    agg: Optional[Tuple[Optional[str], Dict[str, Tuple], str]] = None
-                                      # (key, aggs, slot)
-    global_fn: Any = None             # residual above the agg; reads slot
+    exchange: Optional[ExchangeSpec] = None   # join-only shuffle, if any
+    # two-phase aggregation stages (empty for join-only plans):
+    stages: Tuple[AggStage, ...] = ()
+    global_fn: Any = None             # residual above the aggs; reads slots
 
 
 @dataclasses.dataclass
@@ -532,8 +575,31 @@ class PredictionService:
                                          max_queue=1 << 62),
             clock=self.clock,
             tenant_policies=self.tenants)
+        # Per-tenant compile concurrency cap (AdmissionConfig.
+        # max_tenant_compiles): the batcher asks *us* whether a batch key
+        # is cold — a signature is cold until its executable-cache entry
+        # exists, i.e. until its first group compiled.  Weak trampoline:
+        # the batcher outlives us on the loop thread, and a bound method
+        # here would pin the service against GC.
+        wcold = weakref.ref(self)
+
+        def _is_cold(batch_key, _w=wcold):
+            svc = _w()
+            return False if svc is None else svc._is_cold_key(batch_key)
+
+        self.batcher.is_cold = _is_cold
         self._queue_latencies: collections.deque = collections.deque(
             maxlen=4096)               # seconds waited in admission, per req
+        # Deadline-based shedding calibration, both on the injected clock:
+        # EWMA of admission queue wait (all requests) and per-cache-key
+        # EWMA of group execution time.  A submit whose ctx.deadline_s is
+        # below their sum is doomed — reject it at admission instead of
+        # letting it occupy queue and batch space only to miss anyway.
+        # Both must be warm before anything sheds (a cold signature has no
+        # execution estimate, and shedding on no evidence would reject
+        # the very request that would calibrate it).
+        self._queue_wait_ewma: Optional[float] = None
+        self._exec_ewma: Dict[Any, float] = {}
         self._loop: Optional[AdmissionLoop] = None
         self._loop_finalizer = None
         if admission is not None and admission.background:
@@ -671,6 +737,28 @@ class PredictionService:
             return None
         return RequestContext(tenant=tenant, priority=priority,
                               deadline_s=deadline_s)
+
+    def _is_cold_key(self, batch_key: Any) -> bool:
+        """Whether serving this batch key would compile (no executable-
+        cache entry yet).  Parameterized batch keys carry a binding
+        fingerprint — strip it; bindings share the signature's
+        executable, so only the first binding of a signature is cold."""
+        key = batch_key
+        if isinstance(key, tuple) and len(key) == 3 \
+                and key[1] == "__params__":
+            key = key[0]
+        return self._exec_cache.get(key, count=False) is None
+
+    def _deadline_estimate(self, key: Any) -> Optional[float]:
+        """Calibrated time-to-result estimate for one request of this
+        cache key: queue-wait EWMA + the key's execution-time EWMA, or
+        ``None`` while either is uncalibrated (cold keys never shed)."""
+        with self._lock:
+            qw = self._queue_wait_ewma
+            ex = self._exec_ewma.get(key)
+        if qw is None or ex is None:
+            return None
+        return qw + ex
 
     # -- frontend -----------------------------------------------------------
     def _to_plan(self, query: Union[str, Plan]) -> Plan:
@@ -952,63 +1040,139 @@ class PredictionService:
         whole-table tier, which is always correct."""
         if not self.execution_config.sharded or overridden:
             return None
-        from ..core.rules.distributed_plan import (local_anchor,
-                                                   two_phase_candidate)
+        from ..core.rules.distributed_plan import (local_info,
+                                                   two_phase_candidates)
         nodes = exec_plan.nodes.values()
-        has_join = any(n.op == "join" and n.attrs.get("partition_wise")
+        has_join = any(n.op == "join" and (n.attrs.get("partition_wise")
+                                           or n.attrs.get("exchange"))
                        for n in nodes)
         has_agg = any(n.op == "group_agg" and n.attrs.get("two_phase")
                       for n in nodes)
         if not has_join and not has_agg:
             return None
-        agg_spec = None
-        global_fn = None
+
+        def stage_scans(local_plan: Plan, anchor: str) -> Tuple[str, ...]:
+            scans = sorted({n.attrs["table"]
+                            for n in local_plan.nodes.values()
+                            if n.op == "scan"})
+            return (anchor,) + tuple(t for t in scans if t != anchor)
+
+        def stage_joins(local_plan: Plan) -> int:
+            return sum(1 for n in local_plan.nodes.values()
+                       if n.op == "join" and n.attrs.get("partition_wise"))
+
         if has_agg:
-            gid = two_phase_candidate(exec_plan, self.catalog)
-            if gid is None:
+            gids = two_phase_candidates(exec_plan, self.catalog)
+            if not gids:
                 return None
-            g = exec_plan.nodes[gid]
-            anchor = local_anchor(exec_plan, g.inputs[0], self.catalog)
-            nids = subtree_nodes(exec_plan, g.inputs[0])
-            local_plan = Plan({i: exec_plan.nodes[i].copy() for i in nids},
-                              output=g.inputs[0])
-            head = Node(op="partial_agg", category=g.category,
-                        inputs=[local_plan.output],
-                        attrs={"key": g.attrs.get("key"),
-                               "aggs": dict(g.attrs["aggs"]),
-                               "num_groups": g.attrs.get("num_groups")},
-                        out_kind="table")
-            local_plan.output = local_plan.add(head)
-            slot = "__combined__"
+            stages: List[AggStage] = []
             residual = exec_plan.copy()
-            leaf = Node(op="materialized", category=g.category, inputs=[],
-                        attrs={"slot": slot, "sig": "two_phase_combined"},
-                        out_kind=g.out_kind)
-            residual.replace(gid, leaf)
+            for i, gid in enumerate(gids):
+                g = exec_plan.nodes[gid]
+                info = local_info(exec_plan, g.inputs[0], self.catalog)
+                if info is None:
+                    return None
+                anchor, _intact, exch_join = info
+                exchange = None
+                if exch_join is not None:
+                    exchange = self._exchange_spec(exec_plan, exch_join)
+                    if exchange is None:
+                        return None  # shuffle disabled or mark went stale
+                nids = subtree_nodes(exec_plan, g.inputs[0])
+                local_plan = Plan(
+                    {n2: exec_plan.nodes[n2].copy() for n2 in nids},
+                    output=g.inputs[0])
+                head = Node(op="partial_agg", category=g.category,
+                            inputs=[local_plan.output],
+                            attrs={"key": g.attrs.get("key"),
+                                   "aggs": dict(g.attrs["aggs"]),
+                                   "num_groups": g.attrs.get("num_groups")},
+                            out_kind="table")
+                local_plan.output = local_plan.add(head)
+                # keep the historical slot name for the single-agg shape
+                slot = "__combined__" if len(gids) == 1 \
+                    else f"__combined_{i}__"
+                leaf = Node(op="materialized", category=g.category,
+                            inputs=[],
+                            attrs={"slot": slot,
+                                   "sig": f"two_phase_combined_{i}"},
+                            out_kind=g.out_kind)
+                residual.replace(gid, leaf)
+                stages.append(AggStage(
+                    key=g.attrs.get("key"), aggs=dict(g.attrs["aggs"]),
+                    slot=slot, anchor=anchor,
+                    part_tables=stage_scans(local_plan, anchor),
+                    local_plan=local_plan,
+                    local_raw_fn=compile_plan(local_plan, self.catalog,
+                                              self.execution_config),
+                    local_sig=plan_signature(local_plan),
+                    n_joins=stage_joins(local_plan), exchange=exchange))
             residual.prune_dead()
             # tiny (num_groups rows) and host-side: no jit, zero traces
             global_fn = compile_plan(residual, self.catalog,
                                      self.execution_config)
-            local_raw_fn = compile_plan(local_plan, self.catalog,
-                                        self.execution_config)
-            agg_spec = (g.attrs.get("key"), dict(g.attrs["aggs"]), slot)
-        else:
-            anchor = local_anchor(exec_plan, exec_plan.output, self.catalog)
-            if anchor is None:
-                return None          # join marked but plan not fully local
-            local_plan = exec_plan
-            local_raw_fn = raw_fn    # shares the (capture-aware) closure
-        scans = sorted({n.attrs["table"]
-                        for n in local_plan.nodes.values()
-                        if n.op == "scan"})
-        n_joins = sum(1 for n in local_plan.nodes.values()
-                      if n.op == "join" and n.attrs.get("partition_wise"))
+            part_tables = tuple(dict.fromkeys(
+                t for s in stages for t in s.part_tables))
+            first = stages[0]
+            return DistributedSpec(
+                anchor=first.anchor, part_tables=part_tables,
+                local_plan=first.local_plan,
+                local_raw_fn=first.local_raw_fn,
+                local_sig=first.local_sig, n_joins=first.n_joins,
+                stages=tuple(stages), global_fn=global_fn)
+
+        info = local_info(exec_plan, exec_plan.output, self.catalog)
+        if info is None:
+            return None              # join marked but plan not fully local
+        anchor, _intact, exch_join = info
+        exchange = None
+        if exch_join is not None:
+            exchange = self._exchange_spec(exec_plan, exch_join)
+            if exchange is None:
+                return None
+        local_plan = exec_plan
+        local_raw_fn = raw_fn        # shares the (capture-aware) closure
         return DistributedSpec(
             anchor=anchor,
-            part_tables=(anchor,) + tuple(t for t in scans if t != anchor),
+            part_tables=stage_scans(local_plan, anchor),
             local_plan=local_plan, local_raw_fn=local_raw_fn,
-            local_sig=plan_signature(local_plan), n_joins=n_joins,
-            agg=agg_spec, global_fn=global_fn)
+            local_sig=plan_signature(local_plan),
+            n_joins=stage_joins(local_plan), exchange=exchange)
+
+    def _exchange_spec(self, plan: Plan,
+                       join_id: str) -> Optional[ExchangeSpec]:
+        """Derive the shuffle identity for the exchange-marked join
+        ``join_id``: the (intact) key column and the two partitioned
+        tables to bucket.  ``None`` — which sends the whole plan to
+        whole-table execution — when the exchange knob is off or the mark
+        no longer matches the final plan's shape."""
+        if not getattr(self.execution_config, "shard_exchange", True):
+            return None
+        from ..core.rules.distributed_plan import local_info
+        join = plan.nodes.get(join_id)
+        if join is None or join.op != "join" \
+                or not join.attrs.get("exchange"):
+            return None
+        left = local_info(plan, join.inputs[0], self.catalog)
+        right = local_info(plan, join.inputs[1], self.catalog)
+        if left is None or right is None \
+                or left[2] is not None or right[2] is not None:
+            return None
+        on = join.attrs["on"]
+        if on not in left[1] or on not in right[1]:
+            return None
+        # the shuffle executor buckets exactly two tables: each side must
+        # be a single-scan chain (a nested partition-wise join below an
+        # exchange would need its own aligned gather per bucket)
+        for nid, table in ((join.inputs[0], left[0]),
+                           (join.inputs[1], right[0])):
+            scans = {plan.nodes[i].attrs["table"]
+                     for i in subtree_nodes(plan, nid)
+                     if plan.nodes[i].op == "scan"}
+            if scans != {table}:
+                return None
+        return ExchangeSpec(on=on, left=left[0], right=right[0],
+                            join_id=join_id)
 
     def _maybe_upgrade_to_splice(self, key: Tuple, hit: CompiledPrediction
                                  ) -> Optional[CompiledPrediction]:
@@ -1122,6 +1286,8 @@ class PredictionService:
                 "size_flushes": s.size_flushes,
                 "drain_flushes": s.drain_flushes,
                 "queue_rejections": s.queue_rejections,
+                "deadline_rejections": s.deadline_rejections,
+                "compile_deferrals": self.batcher.compile_deferrals,
                 "background_loop": self._loop is not None
                 and self._loop.running,
                 "loop_error": self._loop.last_error
@@ -1167,6 +1333,7 @@ class PredictionService:
                     "coalesce_rate": ts.coalesced / ts.served
                     if ts.served else 0.0,
                     "rejections": rejections.get(name, 0),
+                    "deadline_rejections": ts.deadline_rejections,
                     "queue_p50_ms": pct(0.50) * 1e3,
                     "queue_p95_ms": pct(0.95) * 1e3,
                     "result_cache_entries": usage["entries"],
@@ -1357,7 +1524,6 @@ class PredictionService:
         whole-table execution — pruning and distribution are only ever
         optimizations."""
         dist = compiled.dist
-        cfg = self.execution_config
         getter = getattr(self.catalog, "get_partitioned", None)
         pts = {}
         for t in dist.part_tables:
@@ -1365,59 +1531,182 @@ class PredictionService:
             if pt is None or (t, pt.version) not in compiled.catalog_versions:
                 return self._execute_whole(compiled, tabs, store_capture)
             pts[t] = pt
-        anchor_pt = pts[dist.anchor]
-        scan = next(n for n in dist.local_plan.nodes.values()
-                    if n.op == "scan" and n.attrs["table"] == dist.anchor)
+        if dist.stages:
+            slots: Dict[str, Any] = {}
+            for stage in dist.stages:
+                combine = (lambda partials, _s=stage:
+                           combine_partials(partials, _s.key, _s.aggs))
+                if stage.exchange is not None:
+                    ok, combined, n_units = self._run_exchange(
+                        compiled, stage, pts, combine=combine)
+                    if not ok:     # cost gate: shuffle loses to whole-table
+                        return self._execute_whole(compiled, tabs,
+                                                   store_capture)
+                else:
+                    combined, n_units = self._run_partition_wise(
+                        compiled, stage, pts, combine=combine)
+                slots[stage.slot] = combined
+                with self._lock:
+                    self.stats.shard_agg_combines += 1
+                    self.stats.shard_partial_aggs += n_units
+            out = dist.global_fn(slots)
+            with self._lock:
+                self.stats.sharded_executions += 1
+                if any(s.n_joins or s.exchange for s in dist.stages):
+                    self.stats.shard_join_executions += 1
+            return out
+        # join-only: the local plan IS the whole plan; drop the capture
+        # half when present (a shuffled/sharded capture is not the value
+        # the result-cache key would claim)
+        unwrap = (lambda raw: raw[0]) if compiled.capture is not None \
+            else None
+        if dist.exchange is not None:
+            ok, out, _units = self._run_exchange(compiled, dist, pts,
+                                                 unwrap=unwrap)
+            if not ok:
+                return self._execute_whole(compiled, tabs, store_capture)
+        else:
+            out, _units = self._run_partition_wise(compiled, dist, pts,
+                                                   unwrap=unwrap)
+        with self._lock:
+            self.stats.sharded_executions += 1
+            if dist.n_joins or dist.exchange is not None:
+                self.stats.shard_join_executions += 1
+        return out
+
+    def _run_partition_wise(self, compiled: CompiledPrediction, stage: Any,
+                            pts: Dict[str, Any],
+                            combine: Optional[Any] = None,
+                            unwrap: Optional[Any] = None
+                            ) -> Tuple[Any, int]:
+        """Run one local program (a :class:`DistributedSpec` or one
+        :class:`AggStage` — both carry anchor/part_tables/local_*) over
+        the anchor's surviving partitions with aligned co-partitioned
+        sides.  Returns ``(output, #morsels)``."""
+        cfg = self.execution_config
+        executor = self._shard_executor()
+        anchor_pt = pts[stage.anchor]
+        scan = next(n for n in stage.local_plan.nodes.values()
+                    if n.op == "scan" and n.attrs["table"] == stage.anchor)
         surviving = scan.attrs.get("partitions")
         if surviving is None \
                 or any(i >= anchor_pt.n_partitions for i in surviving):
             surviving = tuple(range(anchor_pt.n_partitions))
         parts = [anchor_pt.partitions[i] for i in surviving]
-        executor = self._shard_executor()
         placement = executor.plan(
             parts, min_bucket_rows=cfg.shard_min_bucket_rows,
             morsel_rows=cfg.shard_morsel_rows)
         sides = {t: (pts[t], side_bucket_rows(placement,
                                               pts[t].partitions,
                                               cfg.shard_min_bucket_rows))
-                 for t in dist.part_tables[1:]}
+                 for t in stage.part_tables[1:]}
         side_buckets = tuple(sorted((t, b) for t, (_pt, b)
                                     in sides.items()))
         twin, fresh, tags = self._twin_executable(
             compiled,
-            sharded_signature(dist.local_sig, placement.bucket_rows,
+            sharded_signature(stage.local_sig, placement.bucket_rows,
                               executor.mesh_shape, side_buckets),
             placement.bucket_rows, "shard_hits", "shard_compiles",
-            raw_fn=dist.local_raw_fn)
-        unwrap = None
-        if dist.agg is None and compiled.capture is not None:
-            unwrap = (lambda raw: raw[0])
-        combine = None
-        if dist.agg is not None:
-            key, aggs, slot = dist.agg
-            combine = (lambda partials: combine_partials(partials, key,
-                                                         aggs))
+            raw_fn=stage.local_raw_fn)
         t0 = time.perf_counter()
-        out = executor.execute(twin.fn, anchor_pt, dist.anchor, parts,
+        out = executor.execute(twin.fn, anchor_pt, stage.anchor, parts,
                                placement, unwrap=unwrap, sides=sides,
                                combine=combine)
-        if dist.agg is not None:
-            out = dist.global_fn({dist.agg[2]: out})
         twin.serves += 1
         self._record_twin_cost(twin, fresh, tags,
                                time.perf_counter() - t0)
         with self._lock:
-            self.stats.sharded_executions += 1
             self.stats.shard_waves += placement.n_waves
             self.stats.partitions_scanned += len(parts)
             self.stats.partitions_pruned += \
                 anchor_pt.n_partitions - len(parts)
-            if dist.n_joins:
-                self.stats.shard_join_executions += 1
-            if dist.agg is not None:
-                self.stats.shard_agg_combines += 1
-                self.stats.shard_partial_aggs += max(placement.n_morsels, 1)
-        return out
+        return out, max(placement.n_morsels, 1)
+
+    def _run_exchange(self, compiled: CompiledPrediction, stage: Any,
+                      pts: Dict[str, Any], combine: Optional[Any] = None,
+                      unwrap: Optional[Any] = None
+                      ) -> Tuple[bool, Any, int]:
+        """Run one local program via the hash-repartition shuffle
+        (``serve/exchange.py`` + ``ShardedExecutor.execute_exchange``).
+
+        Both sides' surviving rows are gathered host-side (in partition
+        order — the original row order the scatter-back restores), hashed
+        on the join key into a data-deterministic bucket split, and the
+        per-bucket joins run as device waves.  Returns ``(ok, output,
+        #buckets)``; ``ok=False`` means the cost model gated the shuffle
+        off (bytes moved + dispatch exceed the whole-table win) and the
+        caller should fall back."""
+        from ..core.cost_model import exchange_beneficial
+        from .exchange import choose_bucket_count, plan_exchange
+        cfg = self.execution_config
+        executor = self._shard_executor()
+        exch = stage.exchange
+
+        def gather(table_name: str):
+            pt = pts[table_name]
+            scan = next(n for n in stage.local_plan.nodes.values()
+                        if n.op == "scan"
+                        and n.attrs["table"] == table_name)
+            surviving = scan.attrs.get("partitions")
+            if surviving is None \
+                    or any(i >= pt.n_partitions for i in surviving):
+                surviving = tuple(range(pt.n_partitions))
+            cols, valid = pt.host_view()
+            if len(surviving) != pt.n_partitions:
+                sl = [slice(pt.partitions[i].start, pt.partitions[i].stop)
+                      for i in surviving]
+                cols = {k: (np.concatenate([v[s] for s in sl])
+                            if sl else v[:0]) for k, v in cols.items()}
+                valid = np.concatenate([valid[s] for s in sl]) \
+                    if sl else valid[:0]
+            return (cols, valid, pt.table.schema,
+                    len(surviving), pt.n_partitions)
+
+        a_cols, a_valid, a_schema, a_used, a_total = gather(exch.left)
+        s_cols, s_valid, s_schema, s_used, s_total = gather(exch.right)
+        n_buckets = choose_bucket_count(len(a_valid), executor.n_devices,
+                                        cfg.shard_morsel_rows)
+        if cfg.shard_exchange_cost_gate and not exchange_beneficial(
+                len(a_valid), len(s_valid), executor.n_devices, n_buckets):
+            with self._lock:
+                self.stats.exchange_fallbacks += 1
+            return False, None, 0
+        placement = plan_exchange(a_cols[exch.on], s_cols[exch.on],
+                                  n_buckets, cfg.shard_min_bucket_rows)
+        twin, fresh, tags = self._twin_executable(
+            compiled,
+            sharded_signature(stage.local_sig, placement.anchor_rows,
+                              executor.mesh_shape,
+                              ((exch.right, placement.side_rows),),
+                              exchange=(placement.n_buckets,
+                                        placement.anchor_rows)),
+            placement.anchor_rows, "shard_hits", "shard_compiles",
+            raw_fn=stage.local_raw_fn)
+        t0 = time.perf_counter()
+        out = executor.execute_exchange(
+            twin.fn, (a_cols, a_valid, a_schema), exch.left,
+            (s_cols, s_valid, s_schema), exch.right, placement,
+            unwrap=unwrap, combine=combine)
+        twin.serves += 1
+        self._record_twin_cost(twin, fresh, tags,
+                               time.perf_counter() - t0)
+
+        def row_bytes(cols: Dict[str, np.ndarray]) -> int:
+            total = 1                          # validity byte
+            for v in cols.values():
+                width = int(np.prod(v.shape[1:])) if v.ndim > 1 else 1
+                total += int(v.dtype.itemsize) * width
+            return total
+
+        moved = placement.bytes_moved(row_bytes(a_cols), row_bytes(s_cols))
+        with self._lock:
+            self.stats.exchange_executions += 1
+            self.stats.exchange_bytes_moved += moved
+            self.stats.shard_waves += placement.n_waves(executor.n_devices)
+            self.stats.partitions_scanned += a_used + s_used
+            self.stats.partitions_pruned += \
+                (a_total - a_used) + (s_total - s_used)
+        return True, out, max(len(placement.active_buckets), 1)
 
     def shard_info(self) -> Dict[str, Any]:
         """Partition-parallel ledger: mesh geometry plus how much work the
@@ -1443,6 +1732,9 @@ class PredictionService:
                 "join_executions": s.shard_join_executions,
                 "agg_combines": s.shard_agg_combines,
                 "partial_aggs": s.shard_partial_aggs,
+                "exchange_executions": s.exchange_executions,
+                "exchange_fallbacks": s.exchange_fallbacks,
+                "exchange_bytes_moved": s.exchange_bytes_moved,
             }
 
     def _execute_spliced(self, compiled: CompiledPrediction,
@@ -1567,6 +1859,25 @@ class PredictionService:
         except Exception as err:
             ticket._fail(err)
             return ticket
+        # Deadline-based shedding: once the queue-wait EWMA and this key's
+        # execution EWMA are both calibrated, a request whose deadline is
+        # below their sum is doomed — admitting it would only occupy queue
+        # and batch space to miss anyway.  Cold signatures never shed (no
+        # estimate), and the estimate rides the injected clock, so the
+        # fake-clock tests pin the behavior deterministically.
+        if ctx is not None and ctx.deadline_s is not None:
+            est = self._deadline_estimate(key)
+            if est is not None and est > ctx.deadline_s:
+                err = DeadlineUnmeetable(
+                    f"deadline {ctx.deadline_s:.4f}s unmeetable: estimated "
+                    f"queue wait + execution is {est:.4f}s")
+                with self._lock:
+                    self.stats.deadline_rejections += 1
+                    ts = self._tenant_stat(ctx.tenant)
+                    if ts is not None:
+                        ts.deadline_rejections += 1
+                ticket._fail(err)
+                raise err
         # Parameterized requests group by (cache key, binding fingerprint):
         # different bindings share the executable but never one execution
         # (their outputs differ); identical bindings still coalesce.  The
@@ -1633,6 +1944,12 @@ class PredictionService:
                 self._queue_latencies.append(lat)
                 if ts is not None:
                     ts.latencies.append(lat)
+                # deadline-shedding calibration (injected-clock seconds)
+                if self._queue_wait_ewma is None:
+                    self._queue_wait_ewma = lat
+                else:
+                    self._queue_wait_ewma += \
+                        0.2 * (lat - self._queue_wait_ewma)
         with self._flush_lock:
             served = self._serve_group(group.key, group.items)
         if tenant is not None and served:
@@ -1665,6 +1982,7 @@ class PredictionService:
                 if not p.ticket.done:
                     p.ticket._fail(err)
             return 0
+        t0 = self.clock.monotonic()
         try:
             if all(not p.tables for p in group):
                 # identical inputs (catalog tables): one execution at the
@@ -1694,6 +2012,15 @@ class PredictionService:
                 if not p.ticket.done:
                     p.ticket._fail(err)
             return 0
+        # execution-time EWMA per cache key (injected clock; excludes the
+        # one-off compile) — the other half of the deadline-shed estimate
+        dt = max(0.0, self.clock.monotonic() - t0)
+        with self._lock:
+            if len(self._exec_ewma) >= 1024:
+                self._exec_ewma.clear()     # key churn: cheap full reset
+            prev = self._exec_ewma.get(key)
+            self._exec_ewma[key] = dt if prev is None \
+                else prev + 0.2 * (dt - prev)
         return len(group)
 
     def _bucket_rows(self, n: int) -> int:

@@ -50,7 +50,14 @@ Beyond row-local scans (``core/rules/distributed_plan.py``):
   combine=...)`` skips the per-partition split and folds the partials
   host-side in ascending partition order (deterministic however morsels
   were placed, so 1-device and 8-device runs of the same placement are
-  bit-identical).
+  bit-identical);
+- **exchange stage** — for an equi-join whose sides are *not*
+  co-partitioned, :meth:`ShardedExecutor.execute_exchange` runs the
+  hash-repartition shuffle planned by ``serve/exchange.py``: both sides
+  bucket by join-key hash, bucket ``b`` joins locally on device
+  ``b % n_devices``, and the row-local outputs scatter back to the
+  anchor's original row positions (bit-exact against whole-table by the
+  contract documented in ``serve/exchange.py``).
 """
 
 from __future__ import annotations
@@ -415,6 +422,180 @@ class ShardedExecutor:
                 valid = jnp.asarray(np.concatenate([it[1] for it in items]))
                 return Table(cols, valid, schema)
             return jnp.asarray(np.concatenate(items, axis=0))
+
+        out = reassemble([p[1] for p in pieces])
+        if capture:
+            return out, reassemble([p[2] for p in pieces])
+        return out
+
+    def execute_exchange(self, fn: Callable[[Dict[str, Table]], Any],
+                         anchor: Tuple[Dict[str, np.ndarray], np.ndarray, Any],
+                         scan_name: str,
+                         side: Tuple[Dict[str, np.ndarray], np.ndarray, Any],
+                         side_name: str, placement,
+                         unwrap: Optional[Callable[[Any], Any]] = None,
+                         combine: Optional[Callable[[List[Any]], Any]] = None,
+                         capture: bool = False) -> Any:
+        """Execute ``fn`` via a hash-repartition shuffle exchange.
+
+        ``anchor`` and ``side`` are host ``(columns, valid, schema)``
+        triples already restricted to the surviving rows (in original
+        order — the rows the placement's index arrays address);
+        ``placement`` is the :class:`~repro.serve.exchange
+        .ExchangePlacement` planned from their join-key columns.  Bucket
+        ``b`` gathers both sides' bucket-``b`` rows, pads each to its
+        side's shared pow-2 capacity, uploads to device
+        ``b % n_devices``, and runs the same jitted ``fn`` — one
+        executable shape for every bucket, so warm repeats compile
+        nothing.
+
+        Row-local output (``combine=None``): bucket outputs scatter back
+        to the anchor rows' original positions, so the result is bitwise
+        the whole-table output (valid rows and validity mask alike) for
+        any bucket count or device count.  With ``combine`` each bucket
+        yields a mergeable partial state, folded in ascending bucket
+        order — deterministic however buckets were placed."""
+        if capture and (combine is not None or unwrap is not None):
+            raise ValueError("capture=True is row-local reassembly; it "
+                             "composes with neither combine nor unwrap")
+        from .exchange import take_pad
+        a_cols, a_valid, a_schema = anchor
+        s_cols, s_valid, s_schema = side
+
+        def bucket_table(cols, valid, idx, cap, schema, device) -> Table:
+            dev_cols = {k: jax.device_put(take_pad(arr, idx, cap), device)
+                        for k, arr in cols.items()}
+            return Table(dev_cols,
+                         jax.device_put(take_pad(valid, idx, cap), device),
+                         schema)
+
+        active = list(placement.active_buckets)
+        if not active:
+            # no surviving anchor rows anywhere: run one all-padding
+            # bucket to learn the output schema (identity partial for a
+            # combine stage), exactly as ``execute`` does when every
+            # partition was pruned
+            def zeros_table(cols, rows, schema):
+                z = {k: np.zeros((rows,) + arr.shape[1:], arr.dtype)
+                     for k, arr in cols.items()}
+                return Table({k: jax.device_put(v, self.devices[0])
+                              for k, v in z.items()},
+                             jax.device_put(np.zeros(rows, np.bool_),
+                                            self.devices[0]), schema)
+
+            tables = {scan_name: zeros_table(a_cols, placement.anchor_rows,
+                                             a_schema),
+                      side_name: zeros_table(s_cols, placement.side_rows,
+                                             s_schema)}
+            raw = fn(tables)
+            cap = None
+            if capture:
+                raw, cap = raw
+            elif unwrap is not None:
+                raw = unwrap(raw)
+            raw = jax.block_until_ready(raw)
+            if combine is not None:
+                return combine([raw])
+
+            def empty(v: Any) -> Any:
+                if isinstance(v, Table):
+                    return Table({k: c[:0] for k, c in v.columns.items()},
+                                 v.valid[:0], v.schema)
+                return v[:0]
+            if capture:
+                return empty(raw), empty(jax.block_until_ready(cap))
+            return empty(raw)
+
+        # bucket b -> device b % n_devices; several buckets on one device
+        # execute as sequential waves, mirroring the morsel scheduler
+        per_device: Dict[int, List[int]] = {}
+        for b in active:
+            per_device.setdefault(b % self.n_devices, []).append(b)
+        # gather + upload on the caller thread, serially (same GIL
+        # rationale as ``prepare_morsel``)
+        prepared = {
+            d: [(b, {scan_name: bucket_table(
+                        a_cols, a_valid, placement.anchor_index[b],
+                        placement.anchor_rows, a_schema, self.devices[d]),
+                     side_name: bucket_table(
+                        s_cols, s_valid, placement.side_index[b],
+                        placement.side_rows, s_schema, self.devices[d])})
+                for b in buckets]
+            for d, buckets in per_device.items()}
+
+        def trim(raw: Any, rows: int) -> Any:
+            """Host-side copy of one bucket's output, padding dropped."""
+            if isinstance(raw, Table):
+                return ({k: np.asarray(v)[:rows]
+                         for k, v in raw.columns.items()},
+                        np.asarray(raw.valid)[:rows], raw.schema)
+            return np.asarray(raw)[:rows]
+
+        def run_device(d: int) -> List[Tuple[int, Any, Any]]:
+            pieces: List[Tuple[int, Any, Any]] = []
+            for b, tables in prepared[d]:
+                raw = fn(tables)
+                cap = None
+                if capture:
+                    raw, cap = raw
+                elif unwrap is not None:
+                    raw = unwrap(raw)
+                raw = jax.block_until_ready(raw)
+                if combine is not None:
+                    pieces.append((b, raw, None))
+                    continue
+                rows = len(placement.anchor_index[b])
+                pieces.append((b, trim(raw, rows),
+                               trim(jax.block_until_ready(cap), rows)
+                               if capture else None))
+            return pieces
+
+        results: Dict[int, List[Tuple[int, Any, Any]]] = {}
+        errors: List[BaseException] = []
+
+        def worker(d: int):
+            try:
+                results[d] = run_device(d)
+            except BaseException as err:   # propagate to the caller
+                errors.append(err)
+
+        devices = sorted(prepared)
+        if len(devices) == 1:
+            results[devices[0]] = run_device(devices[0])
+        else:
+            threads = [threading.Thread(target=worker, args=(d,),
+                                        name=f"exchange-exec-{d}")
+                       for d in devices]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+
+        pieces = sorted((trip for r in results.values() for trip in r),
+                        key=lambda trip: trip[0])
+        if combine is not None:
+            return combine([p[1] for p in pieces])
+
+        # scatter bucket outputs back to original anchor row positions:
+        # `order` is where each stacked row came from, `inv` sends it home
+        order = np.concatenate(
+            [placement.anchor_index[b] for b, _, _ in pieces])
+        inv = np.empty(placement.total_rows, np.int64)
+        inv[order] = np.arange(len(order))
+
+        def reassemble(items: List[Any]) -> Any:
+            if isinstance(items[0], tuple):        # Table buckets
+                schema = items[0][2]
+                names = items[0][0].keys()
+                cols = {k: jnp.asarray(np.concatenate(
+                    [it[0][k] for it in items], axis=0)[inv])
+                    for k in names}
+                valid = jnp.asarray(
+                    np.concatenate([it[1] for it in items])[inv])
+                return Table(cols, valid, schema)
+            return jnp.asarray(np.concatenate(items, axis=0)[inv])
 
         out = reassemble([p[1] for p in pieces])
         if capture:

@@ -225,15 +225,24 @@ def test_rule_marks_co_partitioned_join_and_two_phase_agg():
     assert plan_signature(opt) != plan_signature(opt2)
 
 
-def test_rule_skips_non_co_partitioned_join():
+def test_rule_marks_non_co_partitioned_join_as_exchange():
     store, visits, patients = _co_store()
-    # re-register the dim side with different bounds: no longer aligned
+    # re-register the dim side with different bounds: no longer aligned —
+    # the join cannot go partition-wise, but a hash-repartition exchange
+    # restores locality, so the rule marks it `exchange` and the agg above
+    # it stays two-phase eligible (per-bucket partials fold the same way)
     store.register_table("patients", patients, partition_by="pid",
                          partition_bounds=[6])
-    opt, _ = _optimize(store, _join_agg_plan())
-    assert "partition_wise" not in opt.find("join")[0].attrs
-    # the agg over the (non-local) join is ineligible too
-    assert "two_phase" not in opt.find("group_agg")[0].attrs
+    opt, report = _optimize(store, _join_agg_plan())
+    join = opt.find("join")[0]
+    assert "partition_wise" not in join.attrs
+    assert join.attrs.get("exchange") is True
+    assert opt.find("group_agg")[0].attrs.get("two_phase") is True
+    assert report.fired("distributed_plan")
+    # the exchange knob turns the mark off wholesale
+    opt2, _ = _optimize(store, _join_agg_plan(), enable_exchange=False)
+    assert "exchange" not in opt2.find("join")[0].attrs
+    assert "partition_wise" not in opt2.find("join")[0].attrs
 
 
 def test_rule_requires_intact_join_key_provenance():

@@ -1,0 +1,450 @@
+"""Hash-repartition shuffle exchange: *any* equi-join shards.
+
+Four layers:
+
+1. **Shuffle-planner units** — ``hash_buckets`` determinism (float ``-0.0``
+   folding, bools, full-range coverage), ``choose_bucket_count`` doubling,
+   ``plan_exchange`` row conservation / skew handling / pow-2 capacities,
+   ``take_pad`` zero-padding.
+2. **Service integration** — a non-co-partitioned equi-join routes through
+   the exchange (``exchange_executions``), matches whole-table execution on
+   the validity mask and valid rows (join) or bitwise (join + two-phase
+   aggregation), repeats warm with zero compiles, and is independent of
+   bucket-count knobs (placement independence).  Multi-aggregation plans
+   split every aggregation, including one fed by an exchange join.
+3. **Cost gate** — with the gate on (default), tiny tables fall back to
+   whole-table execution (``exchange_fallbacks``) and still agree;
+   ``shard_exchange=False`` disables the path outright.
+4. **Bit-exactness property** (hypothesis + seeded twin): random partition
+   layouts (misaligned bounds, empty partitions), row counts, validity
+   (NULL join keys), and key skew (all rows one bucket) — exchange ==
+   whole-table bitwise.  Change the seeded sweep and the property together.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ExecutionConfig, ModelStore
+from repro.core.ir import Plan
+from repro.serve import PredictionService
+from repro.serve.exchange import (choose_bucket_count, hash_buckets,
+                                  plan_exchange, take_pad)
+
+pytestmark = pytest.mark.tier1
+
+AGG_FNS = ["sum", "count", "avg", "min", "max"]
+
+
+def _table(**cols):
+    from repro.relational.table import Table
+    valid = cols.pop("valid", None)
+    t = Table.from_pydict({k: np.asarray(v) for k, v in cols.items()})
+    if valid is not None:
+        t = t.with_valid(np.asarray(valid, bool))
+    return t
+
+
+def _xc_store(n_pids=12, n_rows=60, fact_bounds=(4, 8), seed=0,
+              fact_valid=None, dim_valid=None, fact_pids=None):
+    """Fact ``visits`` + dim ``patients``, both range-partitioned on
+    ``pid`` but with *misaligned* bounds (dim gets one extra partition),
+    so ``compatible_partitioning`` is False and the only way to shard the
+    join is the hash-repartition exchange."""
+    rng = np.random.RandomState(seed)
+    if fact_pids is None:
+        fact_pids = rng.randint(0, n_pids, n_rows)
+    fact_pids = np.sort(np.asarray(fact_pids, np.int32))
+    visits = _table(pid=fact_pids,
+                    amount=rng.randint(-4, 5, len(fact_pids))
+                    .astype(np.float32),
+                    valid=fact_valid)
+    patients = _table(pid=np.arange(n_pids, dtype=np.int32),
+                      region=(np.arange(n_pids) % 3).astype(np.int32),
+                      weight=rng.randint(0, 4, n_pids).astype(np.float32),
+                      valid=dim_valid)
+    dim_bounds = [b + 1 for b in fact_bounds] + [max(fact_bounds) + 2]
+    store = ModelStore()
+    store.register_table("visits", visits, partition_by="pid",
+                         partition_bounds=list(fact_bounds))
+    store.register_table("patients", patients, partition_by="pid",
+                         partition_bounds=dim_bounds)
+    return store, visits, patients
+
+
+def _join_plan(filter_pred=None):
+    plan = Plan()
+    v = plan.emit("scan", "RA", [], "table", table="visits")
+    if filter_pred is not None:
+        v = plan.emit("filter", "RA", [v], "table", predicate=filter_pred)
+    p = plan.emit("scan", "RA", [], "table", table="patients")
+    plan.output = plan.emit("join", "RA", [v, p], "table", on="pid",
+                            how="inner")
+    return plan
+
+
+def _join_agg_plan(aggs=None, key="region", num_groups=3,
+                   filter_pred=None):
+    plan = _join_plan(filter_pred)
+    aggs = aggs if aggs is not None else {
+        "total": ("sum", "amount"), "n": ("count", None),
+        "avg_a": ("avg", "amount"), "lo": ("min", "amount"),
+        "hi": ("max", "amount")}
+    plan.output = plan.emit("group_agg", "RA", [plan.output], "table",
+                            key=key, aggs=aggs, num_groups=num_groups)
+    return plan
+
+
+def _sharded(store, **knobs):
+    knobs.setdefault("shard_min_bucket_rows", 4)
+    knobs.setdefault("shard_morsel_rows", 16)
+    knobs.setdefault("shard_exchange_cost_gate", False)
+    return PredictionService(store, execution_config=ExecutionConfig(
+        sharded=True, **knobs))
+
+
+def _assert_tables_equal(got, want):
+    assert got.capacity == want.capacity
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    assert set(got.columns) == set(want.columns)
+    for k in want.columns:
+        g, w = np.asarray(got.columns[k]), np.asarray(want.columns[k])
+        assert (g == w).all(), k
+
+
+def _assert_same_valid_rows(got, want):
+    vg, vw = np.asarray(got.valid), np.asarray(want.valid)
+    assert set(got.columns) == set(want.columns)
+    for k in want.columns:
+        g = np.asarray(got.columns[k])[vg]
+        w = np.asarray(want.columns[k])[vw]
+        assert g.shape == w.shape and (g == w).all(), k
+
+
+# ---------------------------------------------------------------------------
+# 1. Shuffle-planner units
+# ---------------------------------------------------------------------------
+
+def test_hash_buckets_deterministic_and_covering():
+    keys = np.arange(100, dtype=np.int64)
+    b = hash_buckets(keys, 8)
+    assert b.dtype == np.int64
+    assert b.min() >= 0 and b.max() < 8
+    assert set(b.tolist()) == set(range(8))      # splitmix64 spreads
+    assert (hash_buckets(keys, 8) == b).all()    # pure value hashing
+
+
+def test_hash_buckets_key_dtypes_agree():
+    # equal-comparing keys must share a bucket whatever their container:
+    # -0.0 == +0.0, f32 widens exactly to f64, ints hash their value
+    assert (hash_buckets(np.asarray([-0.0]), 4)
+            == hash_buckets(np.asarray([0.0]), 4)).all()
+    f32 = hash_buckets(np.arange(32, dtype=np.float32), 16)
+    f64 = hash_buckets(np.arange(32, dtype=np.float64), 16)
+    assert (f32 == f64).all()
+    b = hash_buckets(np.asarray([True, False, True]), 4)
+    assert (b[0] == b[2]) and b.min() >= 0 and b.max() < 4
+
+
+def test_choose_bucket_count_doubles_past_morsel_cap():
+    assert choose_bucket_count(100, 4, morsel_rows=64) == 4
+    assert choose_bucket_count(1000, 4, morsel_rows=64) == 16
+    assert choose_bucket_count(0, 0, morsel_rows=64) == 1
+    assert choose_bucket_count(10, 8, morsel_rows=64) == 8
+
+
+def test_plan_exchange_conserves_rows_and_aligns_sides():
+    rng = np.random.RandomState(3)
+    a_keys = rng.randint(0, 20, 100).astype(np.int64)
+    s_keys = np.arange(20, dtype=np.int64)
+    pl = plan_exchange(a_keys, s_keys, 8, min_bucket_rows=4)
+    # every row lands in exactly one bucket, ascending within each
+    cat = np.concatenate([i for i in pl.anchor_index])
+    assert sorted(cat.tolist()) == list(range(100))
+    for idx in pl.anchor_index:
+        assert (np.diff(idx) > 0).all() if len(idx) > 1 else True
+    # same key value -> same bucket on both sides
+    ab = hash_buckets(a_keys, 8)
+    sb = hash_buckets(s_keys, 8)
+    assert (sb[a_keys] == ab).all()
+    # pow-2 capacities cover the largest bucket
+    assert pl.anchor_rows >= max(len(i) for i in pl.anchor_index)
+    assert pl.anchor_rows & (pl.anchor_rows - 1) == 0
+    assert pl.total_rows == 100
+
+
+def test_plan_exchange_skew_all_keys_one_bucket():
+    keys = np.full(40, 7, dtype=np.int64)
+    pl = plan_exchange(keys, keys[:10], 8, min_bucket_rows=4)
+    assert len(pl.active_buckets) == 1
+    (b,) = pl.active_buckets
+    assert len(pl.anchor_index[b]) == 40 and len(pl.side_index[b]) == 10
+    assert pl.anchor_rows >= 40
+    assert pl.n_waves(8) == 1                    # one device does it all
+    assert pl.bytes_moved(8, 8) == 50 * 8
+
+
+def test_take_pad_zero_pads_to_capacity():
+    arr = np.arange(10, dtype=np.float32)
+    out = take_pad(arr, np.asarray([3, 5, 7]), 8)
+    assert out.shape == (8,)
+    assert (out[:3] == [3, 5, 7]).all() and (out[3:] == 0).all()
+    empty = take_pad(arr, np.asarray([], np.int64), 4)
+    assert empty.shape == (4,) and (empty == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# 2. Service integration
+# ---------------------------------------------------------------------------
+
+def test_exchange_join_valid_rows_exact():
+    store, *_ = _xc_store(n_pids=12, n_rows=60)
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    # inner join: unmatched left rows carry garbage-but-masked right
+    # columns, so equality is on the mask and the valid rows
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    info = svc.shard_info()
+    assert info["exchange_executions"] == 1
+    assert info["exchange_fallbacks"] == 0
+    assert info["exchange_bytes_moved"] > 0
+    assert svc.stats.sharded_executions == 1
+    base.close(); svc.close()
+
+
+def test_exchange_join_agg_bit_exact():
+    store, *_ = _xc_store(n_pids=12, n_rows=80, fact_bounds=(3, 6, 9))
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_agg_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    info = svc.shard_info()
+    assert info["exchange_executions"] == 1
+    assert info["agg_combines"] == 1
+    base.close(); svc.close()
+
+
+def test_exchange_warm_repeats_compile_nothing():
+    store, *_ = _xc_store()
+    svc = _sharded(store)
+    plan = _join_agg_plan()
+    svc.run(plan.copy())
+    before = (svc.stats.cache_misses, svc.stats.shard_compiles,
+              svc.stats.jit_traces)
+    for _ in range(3):
+        svc.run(plan.copy())
+    after = (svc.stats.cache_misses, svc.stats.shard_compiles,
+             svc.stats.jit_traces)
+    assert before == after          # bucket capacities are data-determined
+    assert svc.shard_info()["exchange_executions"] == 4
+    svc.close()
+
+
+def test_exchange_placement_independent():
+    """Different bucket-count knobs (morsel cap drives
+    ``choose_bucket_count``) produce bitwise-identical results — the
+    scatter-back contract makes placement unobservable."""
+    store, *_ = _xc_store(n_pids=12, n_rows=80, fact_bounds=(3, 6, 9))
+    plan = _join_agg_plan()
+    svc_few = _sharded(store, shard_morsel_rows=1 << 16)
+    svc_many = _sharded(store, shard_morsel_rows=8)
+    got_few = svc_few.run(plan.copy())
+    got_many = svc_many.run(plan.copy())
+    _assert_tables_equal(got_many, got_few)
+    assert svc_few.shard_info()["exchange_executions"] == 1
+    assert svc_many.shard_info()["exchange_executions"] == 1
+    svc_few.close(); svc_many.close()
+
+
+def test_exchange_with_filter_and_null_keys():
+    """Invalid (NULL-key) anchor rows ride the shuffle masked and scatter
+    back to their original positions; a filter below the join narrows
+    validity without breaking key intactness."""
+    from repro.relational.expr import col
+    store, *_ = _xc_store(
+        n_rows=50, fact_valid=[i % 4 != 1 for i in range(50)],
+        dim_valid=[i % 5 != 2 for i in range(12)])
+    base = PredictionService(store)
+    svc = _sharded(store)
+    plan = _join_agg_plan(filter_pred=col("amount") > -2)
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    assert svc.shard_info()["exchange_executions"] == 1
+    base.close(); svc.close()
+
+
+def test_exchange_multi_agg_stages():
+    """Two sibling aggregations — one over the exchange join, one over a
+    plain partitioned scan — each split two-phase independently; the
+    global stage joins the combined tables."""
+    store, *_ = _xc_store(n_pids=10, n_rows=70)
+    plan = Plan()
+    v = plan.emit("scan", "RA", [], "table", table="visits")
+    p = plan.emit("scan", "RA", [], "table", table="patients")
+    j = plan.emit("join", "RA", [v, p], "table", on="pid", how="inner")
+    a1 = plan.emit("group_agg", "RA", [j], "table", key="region",
+                   aggs={"total": ("sum", "amount"), "n": ("count", None)},
+                   num_groups=3)
+    p2 = plan.emit("scan", "RA", [], "table", table="patients")
+    a2 = plan.emit("group_agg", "RA", [p2], "table", key="region",
+                   aggs={"w": ("sum", "weight")}, num_groups=3)
+    plan.output = plan.emit("join", "RA", [a1, a2], "table", on="region",
+                            how="inner")
+    base = PredictionService(store)
+    svc = _sharded(store)
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    assert svc.stats.shard_agg_combines == 2     # one combine per stage
+    assert svc.shard_info()["exchange_executions"] == 1
+    assert svc.stats.sharded_executions == 1
+    base.close(); svc.close()
+
+
+def test_multi_agg_two_phase_without_exchange():
+    """Join of two aggregation outputs: both aggs split two-phase even
+    though the joining happens in the global stage."""
+    store, *_ = _xc_store(n_pids=10, n_rows=70)
+    plan = Plan()
+    v = plan.emit("scan", "RA", [], "table", table="visits")
+    a1 = plan.emit("group_agg", "RA", [v], "table", key="pid",
+                   aggs={"total": ("sum", "amount")}, num_groups=10)
+    p = plan.emit("scan", "RA", [], "table", table="patients")
+    a2 = plan.emit("group_agg", "RA", [p], "table", key="pid",
+                   aggs={"w": ("sum", "weight")}, num_groups=10)
+    plan.output = plan.emit("join", "RA", [a1, a2], "table", on="pid",
+                            how="inner")
+    base = PredictionService(store)
+    svc = _sharded(store)
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    assert (np.asarray(got.valid) == np.asarray(want.valid)).all()
+    _assert_same_valid_rows(got, want)
+    assert svc.stats.shard_agg_combines == 2
+    assert svc.stats.sharded_executions == 1
+    base.close(); svc.close()
+
+
+# ---------------------------------------------------------------------------
+# 3. Cost gate and kill switch
+# ---------------------------------------------------------------------------
+
+def test_cost_gate_falls_back_on_tiny_tables():
+    store, *_ = _xc_store(n_pids=12, n_rows=60)
+    base = PredictionService(store)
+    svc = _sharded(store, shard_exchange_cost_gate=True)
+    plan = _join_agg_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    info = svc.shard_info()
+    assert info["exchange_fallbacks"] >= 1       # gate said not worth it
+    assert info["exchange_executions"] == 0
+    assert svc.stats.sharded_executions == 0     # whole-table execution
+    base.close(); svc.close()
+
+
+def test_shard_exchange_off_is_whole_table():
+    store, *_ = _xc_store()
+    base = PredictionService(store)
+    svc = _sharded(store, shard_exchange=False)
+    plan = _join_agg_plan()
+    want = base.run(plan.copy())
+    got = svc.run(plan.copy())
+    _assert_tables_equal(got, want)
+    info = svc.shard_info()
+    assert info["exchange_executions"] == 0
+    assert svc.stats.sharded_executions == 0
+    base.close(); svc.close()
+
+
+# ---------------------------------------------------------------------------
+# 4. Bit-exactness property: exchange == whole-table over random shapes
+# ---------------------------------------------------------------------------
+
+def _check_exchange_bit_exact(n_pids, fact_pids, fact_valid, dim_valid,
+                              fact_bounds, agg_fns, seed=0):
+    store, *_ = _xc_store(n_pids=n_pids, fact_bounds=fact_bounds,
+                          seed=seed, fact_valid=fact_valid,
+                          dim_valid=dim_valid, fact_pids=fact_pids)
+    aggs = {f"{fn}_{i}": (fn, "amount") for i, fn in enumerate(agg_fns)}
+    plan = _join_agg_plan(aggs=aggs, key="region", num_groups=3)
+    base = PredictionService(store, jit=False)
+    svc = _sharded(store, shard_morsel_rows=8)
+    try:
+        want = base.run(plan.copy())
+        got = svc.run(plan.copy())
+        _assert_tables_equal(got, want)
+        assert svc.shard_info()["exchange_executions"] == 1
+    finally:
+        base.close(); svc.close()
+
+
+def test_exchange_randomized_sweep():
+    """Seeded twin of the hypothesis property below (runs everywhere,
+    mirrors the repo convention — change both together)."""
+    rng = np.random.RandomState(23)
+    for i in range(20):
+        n_pids = int(rng.randint(1, 13))
+        n_rows = int(rng.randint(1, 40))
+        n_bounds = int(rng.randint(1, 5))
+        bounds = sorted(int(b) for b in rng.randint(0, n_pids + 1,
+                                                    n_bounds))
+        if i % 4 == 0:          # key skew: every row in one hash bucket
+            fact_pids = np.full(n_rows, rng.randint(0, n_pids))
+        else:
+            fact_pids = rng.randint(0, n_pids, n_rows)
+        _check_exchange_bit_exact(
+            n_pids=n_pids,
+            fact_pids=fact_pids,
+            fact_valid=rng.rand(n_rows) < rng.choice([0.0, 0.6, 1.0]),
+            dim_valid=rng.rand(n_pids) < 0.9,
+            fact_bounds=bounds,
+            agg_fns=[AGG_FNS[rng.randint(len(AGG_FNS))]
+                     for _ in range(rng.randint(1, 4))],
+            seed=i)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        n_pids=st.integers(min_value=1, max_value=12),
+        fact=st.lists(st.tuples(st.integers(0, 11),     # pid (clamped)
+                                st.booleans()),         # valid
+                      min_size=1, max_size=32),
+        dim_valid_bits=st.lists(st.booleans(), min_size=12, max_size=12),
+        bounds=st.lists(st.integers(0, 12), min_size=1, max_size=4),
+        skew=st.booleans(),
+        agg_fns=st.lists(st.sampled_from(AGG_FNS), min_size=1,
+                         max_size=3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_exchange_bit_exact_property(n_pids, fact, dim_valid_bits,
+                                         bounds, skew, agg_fns):
+        """Hash-repartition exchange == whole-table execution, bitwise,
+        across random misaligned partition layouts (empty partitions
+        included), row counts, NULL join keys (invalid rows), and key
+        skew (every row hashing to one bucket)."""
+        pids = [min(p, n_pids - 1) for p, _m in fact]
+        if skew:
+            pids = [pids[0]] * len(pids)
+        _check_exchange_bit_exact(
+            n_pids=n_pids,
+            fact_pids=pids,
+            fact_valid=[m for _p, m in fact],
+            dim_valid=dim_valid_bits[:n_pids],
+            fact_bounds=sorted(bounds),
+            agg_fns=agg_fns)

@@ -17,6 +17,14 @@ Pinned guarantees (ManualClock, no threads, no sleeps unless noted):
    context; legacy lower-arity hooks keep working unmodified.
 6. **Default-path neutrality** — ``tenant=None`` requests flow through the
    default queue with the old behavior and never appear in tenant ledgers.
+7. **Deadline shedding** — once the queue-wait and per-key execution EWMAs
+   are calibrated, a submit whose ``deadline_s`` is below their sum raises
+   ``DeadlineUnmeetable`` instead of occupying queue space to miss anyway;
+   cold keys (no estimate) never shed.
+8. **Compile caps** — ``max_tenant_compiles`` releases at most that many
+   *cold* (uncompiled-signature) groups per tenant per pass, so a
+   signature-flooding tenant compiles serially in the background while a
+   compliant tenant's warm traffic drains on schedule (p95 regression).
 """
 
 import numpy as np
@@ -30,8 +38,9 @@ from repro.data import hospital_tables
 from repro.ml import DecisionTree, Pipeline, PipelineMetadata, StandardScaler
 from repro.relational.table import Table
 from repro.serve import (AdmissionConfig, AdmissionQueueFull, Batcher,
-                         CostAwareCache, ManualClock, PredictionService,
-                         RequestContext, Session, TenantPolicy)
+                         CostAwareCache, DeadlineUnmeetable, ManualClock,
+                         PredictionService, RequestContext, Session,
+                         TenantPolicy)
 
 pytestmark = pytest.mark.tier1
 
@@ -427,3 +436,130 @@ def test_register_tenant_applies_immediately(base):
     with pytest.raises(AdmissionQueueFull):
         s.submit(SQL_PARAM, params={"lo": 2})
     svc.flush()
+
+
+# ---------------------------------------------------------------------------
+# 7. Deadline-based shedding
+# ---------------------------------------------------------------------------
+
+def test_deadline_unmeetable_sheds_at_submit(base):
+    store, _, _ = base
+    clock = ManualClock()
+    svc = _service(store, clock=clock, latency_budget_s=5.0)
+    s = svc.session(tenant="acme")
+    s.sql(SQL_PARAM, params={"lo": 30})      # warm: exec EWMA calibrated
+    s.submit(SQL_PARAM, params={"lo": 30})
+    clock.advance(2.0)
+    svc.admission_tick(force=True)           # queue-wait EWMA -> 0.4s
+    with pytest.raises(DeadlineUnmeetable, match="unmeetable"):
+        svc.submit(SQL_PARAM, params={"lo": 30}, tenant="acme",
+                   deadline_s=0.05)
+    assert svc.stats.deadline_rejections == 1
+    assert svc.admission_info()["deadline_rejections"] == 1
+    assert svc.tenant_info()["acme"]["deadline_rejections"] == 1
+    # a meetable deadline still admits and serves normally
+    t = svc.submit(SQL_PARAM, params={"lo": 30}, tenant="acme",
+                   deadline_s=10.0)
+    svc.flush()
+    assert t.result(timeout=5.0) is not None
+    assert svc.stats.deadline_rejections == 1
+
+
+def test_cold_keys_never_shed(base):
+    """No execution estimate for a never-compiled signature -> admit (the
+    shed must not block first-time traffic however tight the deadline)."""
+    store, _, _ = base
+    clock = ManualClock()
+    svc = _service(store, clock=clock, latency_budget_s=5.0)
+    s = svc.session(tenant="acme")
+    s.sql(SQL_PARAM, params={"lo": 30})
+    s.submit(SQL_PARAM, params={"lo": 31})
+    clock.advance(4.0)
+    svc.admission_tick(force=True)           # queue-wait EWMA calibrated
+    t = svc.submit("SELECT pid, age FROM patient_info WHERE age > 77",
+                   tenant="acme", deadline_s=1e-6)
+    svc.flush()
+    assert t.result(timeout=5.0) is not None
+    assert svc.stats.deadline_rejections == 0
+
+
+# ---------------------------------------------------------------------------
+# 8. Per-tenant compile caps
+# ---------------------------------------------------------------------------
+
+def test_compile_cap_defers_cold_groups():
+    clock = ManualClock()
+    b = Batcher(AdmissionConfig(background=False, latency_budget_s=1.0,
+                                max_tenant_compiles=1), clock=clock)
+    b.is_cold = lambda key: key != "warm"
+    for i in range(3):
+        b.offer(("cold", i), f"c{i}", ctx=_ctx("flood"))
+    b.offer("warm", "w", ctx=_ctx("flood"))
+    clock.advance(2.0)
+    released = [g.items[0] for g in b.pop_ready(clock.monotonic())]
+    # one cold group + every warm group release; other colds stay queued
+    assert "w" in released
+    assert sum(1 for x in released if x.startswith("c")) == 1
+    assert b.compile_deferrals == 2
+    # the next pass releases the next cold group: deferral, not starvation
+    second = [g.items[0] for g in b.pop_ready(clock.monotonic())]
+    assert sum(1 for x in second if x.startswith("c")) == 1
+    assert b.compile_deferrals == 3
+    # drain (force) bypasses the cap and takes the tail
+    assert len(b.drain()) == 1
+
+
+def test_compile_cap_is_per_tenant():
+    clock = ManualClock()
+    b = Batcher(AdmissionConfig(background=False, latency_budget_s=1.0,
+                                max_tenant_compiles=1), clock=clock)
+    b.is_cold = lambda key: True
+    for t in ("a", "b"):
+        for i in range(2):
+            b.offer((t, i), f"{t}{i}", ctx=_ctx(t))
+    clock.advance(2.0)
+    released = [g.items[0] for g in b.pop_ready(clock.monotonic())]
+    assert sorted(released) == ["a0", "b0"]      # one cold budget each
+    assert b.compile_deferrals == 2
+
+
+def test_compile_cap_shields_compliant_tenant_p95(base):
+    """Regression for the admission bug the cap fixes: a tenant flooding
+    unique plan signatures used to stack its compiles in front of a
+    compliant tenant's warm traffic, inflating the compliant p95.  Compile
+    wall time is simulated by advancing the ManualClock from a compile
+    listener, so the comparison is deterministic."""
+    store, _, _ = base
+    flood_sql = [f"SELECT pid FROM patient_info WHERE age > {40 + i}"
+                 for i in range(6)]
+
+    def run_scenario(max_tenant_compiles):
+        clock = ManualClock()
+        svc = _service(store, clock=clock, latency_budget_s=1.0,
+                       max_tenant_compiles=max_tenant_compiles)
+        svc.run(SQL_PARAM, params={"lo": 0})     # warm the compliant key
+        unsub = add_compile_listener(lambda plan: clock.advance(1.0))
+        try:
+            flood = svc.session(tenant="flood")
+            calm = svc.session(tenant="compliant")
+            tickets = [flood.submit(q) for q in flood_sql]
+            tickets += [calm.submit(SQL_PARAM, params={"lo": 30 + i})
+                        for i in range(6)]
+            clock.advance(2.0)
+            svc.admission_tick()                 # non-forced: cap applies
+            while any(not t.done for t in tickets):
+                clock.advance(2.0)
+                svc.admission_tick()             # deferred colds drain
+            for t in tickets:
+                assert t.result(timeout=5.0) is not None
+            info = svc.tenant_info()
+            return (info["compliant"]["queue_p95_ms"],
+                    svc.admission_info()["compile_deferrals"])
+        finally:
+            unsub()
+
+    p95_uncapped, deferrals_uncapped = run_scenario(0)
+    p95_capped, deferrals_capped = run_scenario(1)
+    assert deferrals_uncapped == 0 and deferrals_capped > 0
+    # compliant warm traffic no longer waits behind the flood's compiles
+    assert p95_capped < p95_uncapped
