@@ -1,5 +1,6 @@
 .PHONY: verify verify-tier1 bench-subplan bench-batching bench-sharded \
-	bench-join-agg bench-tenants bench-json bench-rebaseline
+	bench-join-agg bench-tenants bench-json bench-rebaseline \
+	bench-trajectory-series
 
 # Tier-1 gate: full suite, fail fast (ROADMAP "Tier-1 verify").  verify.sh
 # exports REPRO_TEST_TIMEOUT so the threaded admission-loop tests fail
@@ -38,12 +39,18 @@ bench-tenants:
 # check — exactly what the bench-trajectory CI job runs.  BENCH_N is
 # numbered per PR so the uploaded artifacts form a perf history.
 bench-json:
-	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_8.json
-	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_8.json \
+	PYTHONPATH=src python -m benchmarks.run --quick --json BENCH_9.json
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_9.json \
 		benchmarks/baseline.json
 
 # Rewrite benchmarks/baseline.json from the latest export after an
 # *intentional* perf-profile change (then commit the diff).
 bench-rebaseline:
-	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_8.json \
+	PYTHONPATH=src python -m benchmarks.check_trajectory BENCH_9.json \
 		benchmarks/baseline.json --rebaseline
+
+# Fold every committed BENCH_N.json into one perf-history series file
+# (plus a tracked-metric sparkline table on stdout).
+bench-trajectory-series:
+	python scripts/plot_trajectory.py BENCH_*.json \
+		--out trajectory_series.json --baseline benchmarks/baseline.json

@@ -20,10 +20,29 @@ from repro.ml import (DecisionTree, GradientBoostedTrees, LogisticRegression,
 
 ROWS = []
 
+# Metrics snapshots benchmarks opt into exporting (``run.py --json``
+# embeds them under the top-level ``metrics`` key): benchmark name ->
+# ``PredictionService.metrics_snapshot()``.  Histograms make the bucket
+# tuples JSON-clean here so the export never trips on them.
+METRICS: Dict[str, dict] = {}
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def record_metrics(name: str, snapshot: dict) -> None:
+    """Stash a service's registry snapshot for the ``--json`` export."""
+    METRICS[name] = {
+        "counters": dict(snapshot.get("counters", {})),
+        "gauges": dict(snapshot.get("gauges", {})),
+        "histograms": {
+            k: {"sum": h["sum"], "count": h["count"],
+                "buckets": [[float(b), int(c)] for b, c in h["buckets"]]}
+            for k, h in snapshot.get("histograms", {}).items()
+        },
+    }
 
 
 def rerun_with_simulated_devices(module: str, rows: int, devices: int,

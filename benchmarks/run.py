@@ -39,9 +39,9 @@ def parse_derived(derived: str) -> dict:
 
 
 def write_json(path: str, quick: bool, failures: int) -> None:
-    from .common import ROWS
+    from .common import METRICS, ROWS
     payload = {
-        "schema": 1,
+        "schema": 2,
         "quick": quick,
         "failures": failures,
         "benchmarks": {
@@ -49,6 +49,10 @@ def write_json(path: str, quick: bool, failures: int) -> None:
                    "raw_derived": derived}
             for name, us, derived in ROWS
         },
+        # registry snapshots from benchmarks that opted in via
+        # common.record_metrics — the trajectory artifacts double as a
+        # metrics history (scripts/plot_trajectory.py folds them)
+        "metrics": METRICS,
     }
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
@@ -71,7 +75,7 @@ def main() -> int:
                    fig2d_tree_gemm, fig3_integration, lossy_pushdown,
                    multi_tenant_saturation, plan_cache, pruning,
                    sharded_join_agg, sharded_scan, shuffle_join,
-                   subplan_reuse)
+                   subplan_reuse, telemetry_overhead)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -109,6 +113,9 @@ def main() -> int:
         ("multi_tenant", lambda: multi_tenant_saturation.run(
             n_rows=2_000 if args.quick else 4_000,
             reqs_per_tenant=16 if args.quick else 32)),
+        ("telemetry_overhead", lambda: telemetry_overhead.run(
+            n_rows=5_000 if args.quick else 20_000,
+            iters=20 if args.quick else 40)),
     ]
     failures = 0
     for name, job in jobs:

@@ -1,0 +1,101 @@
+"""Telemetry overhead: warm-path throughput with tracing on vs off.
+
+The observability layer (ISSUE 9) promises its *on* switch is cheap and
+its *off* switch is free: every span site behind ``telemetry=False``
+touches one attribute and a shared no-op context manager, and the
+metrics registry takes zero hot-path writes.  This benchmark pins the
+promise as a tracked hard floor: warm serves (executable-cache hit,
+admission + coalesce + execute — the latency-critical path) are timed
+against two otherwise-identical services, and
+
+    ratio = throughput(telemetry=on) / throughput(telemetry=off)
+
+must stay >= 0.95 (``benchmarks/baseline.json``, ``min_ratio`` — never
+scaled by the trajectory tolerance).
+
+Reported rows:
+
+- ``telemetry_overhead/off``  — warm us/serve with ``telemetry=False``
+  (plus the asserted-zero registry write count);
+- ``telemetry_overhead/warm`` — warm us/serve with telemetry on; the
+  derived column carries the throughput ratio, the spans recorded per
+  trace, and the registry writes per serve.
+
+The export also embeds the on-service's ``metrics_snapshot()`` (see
+``run.py --json``), so the trajectory artifacts double as a metrics
+history.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _store(n_rows: int):
+    from repro.ml import (DecisionTree, Pipeline, PipelineMetadata,
+                          StandardScaler)
+
+    from .common import hospital_store
+    store, data = hospital_store(n_rows)
+    feats = ["age", "gender", "pregnant", "rcount"]   # patient_info-local
+    sc = StandardScaler(feats).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression", max_depth=6),
+                    PipelineMetadata(name="los", task="regression"))
+    pipe.fit({k: data[k] for k in feats}, data["length_of_stay"])
+    store.register_model("los", pipe)
+    return store
+
+
+SQL = ("SELECT pid, age, PREDICT(MODEL='los') AS los "
+       "FROM patient_info WHERE age > 30")
+
+
+def _warm_times(svc, iters: int) -> float:
+    """Median wall seconds per warm serve (submit -> flush -> result)."""
+    for _ in range(3):
+        svc.run(SQL)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        svc.run(SQL)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(n_rows: int = 20_000, iters: int = 30) -> None:
+    from repro.serve import PredictionService
+
+    from .common import emit, record_metrics
+
+    store = _store(n_rows)
+    svc_off = PredictionService(store, telemetry=False)
+    svc_on = PredictionService(store)
+
+    t_off = _warm_times(svc_off, iters)
+    t_on = _warm_times(svc_on, iters)
+
+    assert svc_off.metrics.writes == 0, \
+        "telemetry=off must take zero hot-path registry writes"
+    assert svc_off.traces() == [], "telemetry=off must retain no traces"
+    spans = len(svc_on.traces()[-1].span_names())
+    assert spans >= 4, "warm trace suspiciously empty"
+
+    ratio = t_off / t_on                     # throughput on / off
+    writes_per_serve = svc_on.metrics.writes / (iters + 3)
+    emit("telemetry_overhead/off", t_off * 1e6,
+         f"serves_per_s={1.0 / t_off:.0f} registry_writes=0")
+    emit("telemetry_overhead/warm", t_on * 1e6,
+         f"serves_per_s={1.0 / t_on:.0f} ratio={ratio:.3f}x "
+         f"spans_per_trace={spans} "
+         f"registry_writes_per_serve={writes_per_serve:.1f}")
+    record_metrics("telemetry_overhead", svc_on.metrics_snapshot())
+
+    svc_off.close()
+    svc_on.close()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

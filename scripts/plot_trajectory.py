@@ -1,0 +1,137 @@
+"""Fold per-PR benchmark exports into one perf-trajectory series file.
+
+    python scripts/plot_trajectory.py BENCH_*.json \
+        [--out trajectory_series.json] [--baseline benchmarks/baseline.json]
+
+Each ``BENCH_N.json`` (written by ``benchmarks.run --json``, numbered
+per PR by the ``bench-trajectory`` CI job) is one point in time; this
+script folds any number of them into a single series document::
+
+    {
+      "schema": 1,
+      "runs": [6, 8, 9],
+      "series": {
+        "shuffle_join/mesh8": {
+          "us_per_call": {"6": 81234.5, "8": 79812.1, ...},
+          "speedup":     {"6": 2.61,    "8": 2.70,    ...}
+        },
+        ...
+      }
+    }
+
+so dashboards (or a later matplotlib pass) can plot every benchmark's
+history without re-downloading N artifacts.  Rows/metrics missing from
+an export simply have no point for that run — benchmarks added later
+start where they started.  With ``--baseline`` the stdout table is
+restricted to the tracked metrics (the ones the trajectory gate
+defends); the series file always contains everything.
+
+Dependency-free on purpose: CI runs it right after the bench job and
+uploads the series next to the raw export.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+_RUN_RE = re.compile(r"BENCH[_-](\d+)\.json$")
+
+
+def run_number(path: str) -> int:
+    """PR number from a ``BENCH_N.json`` filename (the per-PR artifact
+    naming convention); falls back to file order via -1."""
+    m = _RUN_RE.search(os.path.basename(path))
+    return int(m.group(1)) if m else -1
+
+
+def fold(paths: list) -> dict:
+    points = []
+    for path in paths:
+        with open(path) as fh:
+            export = json.load(fh)
+        points.append((run_number(path), path, export))
+    points.sort(key=lambda p: (p[0], p[1]))
+
+    runs = [run for run, _, _ in points]
+    series: dict = {}
+    for run, _, export in points:
+        for name, row in export.get("benchmarks", {}).items():
+            entry = series.setdefault(name, {})
+            entry.setdefault("us_per_call", {})[str(run)] = \
+                row.get("us_per_call")
+            for metric, value in row.get("derived", {}).items():
+                if isinstance(value, (int, float)):
+                    entry.setdefault(metric, {})[str(run)] = value
+    return {"schema": 1, "runs": runs, "series": series}
+
+
+def spark(values: list) -> str:
+    """Unicode sparkline over the non-None values (min..max scaled)."""
+    blocks = "▁▂▃▄▅▆▇█"
+    nums = [v for v in values if isinstance(v, (int, float))]
+    if not nums:
+        return ""
+    lo, hi = min(nums), max(nums)
+    out = []
+    for v in values:
+        if not isinstance(v, (int, float)):
+            out.append(" ")
+        elif hi == lo:
+            out.append(blocks[3])
+        else:
+            out.append(blocks[round((v - lo) / (hi - lo)
+                                    * (len(blocks) - 1))])
+    return "".join(out)
+
+
+def render(doc: dict, baseline: dict) -> str:
+    runs = [str(r) for r in doc["runs"]]
+    lines = [f"runs: {' '.join(runs)}"]
+    for name in sorted(doc["series"]):
+        tracked = baseline.get(name)
+        metrics = doc["series"][name]
+        for metric in sorted(metrics):
+            if baseline and (tracked is None
+                             or metric not in tracked):
+                continue
+            vals = [metrics[metric].get(r) for r in runs]
+            shown = [f"{v:g}" if isinstance(v, (int, float)) else "-"
+                     for v in vals]
+            lines.append(f"{name}.{metric:<16} {spark(vals)}  "
+                         f"{' -> '.join(shown)}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("exports", nargs="+",
+                    help="BENCH_N.json files from benchmarks.run --json")
+    ap.add_argument("--out", default="trajectory_series.json",
+                    help="series file to write (default "
+                         "trajectory_series.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline.json: restrict the printed table to "
+                         "tracked metrics")
+    args = ap.parse_args()
+
+    doc = fold(args.exports)
+    with open(args.out, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {len(doc['series'])} benchmark series over "
+          f"{len(doc['runs'])} run(s) to {args.out}", file=sys.stderr)
+
+    baseline = {}
+    if args.baseline:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    print(render(doc, baseline))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

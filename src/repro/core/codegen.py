@@ -37,7 +37,7 @@ from .ir import Plan, plan_params
 
 __all__ = ["compile_plan", "execute", "resolve_params", "ExecutionConfig",
            "compile_stats", "reset_compile_stats", "add_compile_listener",
-           "pow2_bucket", "count_jit_trace"]
+           "add_trace_listener", "pow2_bucket", "count_jit_trace"]
 
 # XLA's CPU client owns a worker pool sized by the host's core count.  On a
 # one-core host that single worker executes the whole computation — including
@@ -112,6 +112,7 @@ class ExecutionConfig:
 # flat "compiles" number (see ServiceStats.bucket_compiles).
 compile_stats: Dict[str, int] = {"plans_compiled": 0, "jit_traces": 0}
 _compile_listeners: List[Callable[[Plan], None]] = []
+_trace_listeners: List[Callable[[], None]] = []
 
 
 def reset_compile_stats() -> None:
@@ -122,6 +123,8 @@ def reset_compile_stats() -> None:
 def count_jit_trace() -> None:
     """Record one jit trace (one shape-specialized XLA compilation)."""
     compile_stats["jit_traces"] += 1
+    for listener in list(_trace_listeners):
+        listener()
 
 
 def pow2_bucket(n: int, min_rows: int = 1, max_rows: int = 0) -> int:
@@ -147,6 +150,15 @@ def add_compile_listener(fn: Callable[[Plan], None]) -> Callable[[], None]:
     """Register a hook fired on every compile_plan; returns an unsubscriber."""
     _compile_listeners.append(fn)
     return lambda: _compile_listeners.remove(fn)
+
+
+def add_trace_listener(fn: Callable[[], None]) -> Callable[[], None]:
+    """Register a hook fired on every ``count_jit_trace`` (i.e. once per
+    shape-specialized XLA trace of a serving executable); returns an
+    unsubscriber.  The serving layer's MetricsRegistry subscribes here so
+    shape-driven recompiles surface as a process metric."""
+    _trace_listeners.append(fn)
+    return lambda: _trace_listeners.remove(fn)
 
 
 def _model_scores(model, x: jnp.ndarray) -> jnp.ndarray:
@@ -296,7 +308,9 @@ def _external_predict(model, task: str, proba: bool, latency_s: float):
 
 def compile_plan(plan: Plan, catalog,
                  config: Optional[ExecutionConfig] = None,
-                 capture: Optional[str] = None
+                 capture: Optional[str] = None,
+                 node_hook: Optional[Callable[[str, Any, Any, float],
+                                              None]] = None
                  ) -> Callable[[Dict[str, Table]], Any]:
     """Build the executable closure for ``plan``.
 
@@ -314,6 +328,13 @@ def compile_plan(plan: Plan, catalog,
     Plans may contain ``materialized`` nodes (see
     ``serve.prediction_service``): leaves that read a previously captured
     value injected through the tables dict under ``attrs['slot']``.
+
+    ``node_hook(nid, node, value, elapsed_s)`` turns the closure into an
+    instrumented op-at-a-time profiler: each node's value is forced with
+    ``jax.block_until_ready`` and the hook observes its wall time.  This is
+    the EXPLAIN ANALYZE seam — only meaningful *un-jitted* (under jit the
+    values are tracers and the timings are trace-time, not run-time), so
+    the serving layer runs profiled executions eagerly.
     """
     config = config or ExecutionConfig()
     compile_stats["plans_compiled"] += 1
@@ -345,6 +366,7 @@ def compile_plan(plan: Plan, catalog,
             op = n.op
             ins = [env[i] for i in n.inputs]
             a = n.attrs
+            t0 = time.perf_counter() if node_hook is not None else 0.0
             if op == "scan":
                 env[nid] = tables[a["table"]]
             elif op == "materialized":
@@ -467,6 +489,9 @@ def compile_plan(plan: Plan, catalog,
                         lambda v: np.asarray(fn(v), out_dtype), shape, x)
             else:
                 raise ValueError(f"codegen: unknown op {op}")
+            if node_hook is not None:
+                env[nid] = jax.block_until_ready(env[nid])
+                node_hook(nid, n, env[nid], time.perf_counter() - t0)
         if capture is not None:
             return env[plan.output], env[capture]
         return env[plan.output]

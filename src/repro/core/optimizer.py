@@ -35,6 +35,7 @@ Rule order (data flows top to bottom):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .ir import Plan, plan_signature
@@ -121,6 +122,10 @@ class OptimizationReport:
     # partition counts for every scan the rule pruned.
     partitions: Dict[str, Tuple[int, int]] = dataclasses.field(
         default_factory=dict)
+    # Cumulative wall seconds each rule spent across passes (EXPLAIN shows
+    # where optimization time went; the cost-model calibration items read
+    # the same numbers).
+    rule_times: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def log(self, rule: str, detail: str):
         self.entries.append((rule, detail))
@@ -176,9 +181,13 @@ class CrossOptimizer:
             for enabled, rule_fn in passes:
                 if not enabled:
                     continue
+                t0 = time.perf_counter()
                 changed |= rule_fn(plan, self.catalog, cfg, report)
                 plan.prune_dead()
                 plan.validate()
+                rule = rule_fn.__module__.rsplit(".", 1)[-1]
+                report.rule_times[rule] = report.rule_times.get(rule, 0.0) \
+                    + (time.perf_counter() - t0)
             if not changed:
                 break
         if plan.output is not None:

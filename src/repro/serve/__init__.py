@@ -14,12 +14,14 @@ from .engine import InferenceEngine, Request, ServeConfig
 from .exchange import (ExchangePlacement, choose_bucket_count, hash_buckets,
                        plan_exchange)
 from .prediction_service import (AggStage, CompiledPrediction,
-                                 DistributedSpec, ExchangeSpec,
+                                 DistributedSpec, ExchangeSpec, ExplainResult,
                                  PredictionService, PredictionTicket,
                                  ServiceStats, SubplanRef, TenantStats)
 from .sampling import sample_token
 from .sharded import (Morsel, ShardedExecutor, ShardPlacement, plan_morsels,
                       side_bucket_rows)
+from .telemetry import (NULL_TRACE, MetricsRegistry, Span, Trace,
+                        chrome_trace)
 
 __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "PredictionService", "PredictionTicket", "CompiledPrediction",
@@ -31,4 +33,6 @@ __all__ = ["InferenceEngine", "Request", "ServeConfig", "sample_token",
            "ShardedExecutor", "ShardPlacement", "plan_morsels",
            "side_bucket_rows", "ExchangePlacement", "choose_bucket_count",
            "hash_buckets", "plan_exchange",
-           "RequestContext", "Session", "TenantPolicy", "TenantStats"]
+           "RequestContext", "Session", "TenantPolicy", "TenantStats",
+           "ExplainResult", "MetricsRegistry", "NULL_TRACE", "Span", "Trace",
+           "chrome_trace"]

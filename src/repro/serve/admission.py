@@ -284,6 +284,7 @@ class Batcher:
         # now?" (an executable-cache peek).  None disables the cap.
         self.is_cold: Optional[Callable[[Any], bool]] = None
         self.compile_deferrals = 0       # cold groups held back by the cap
+        self.depth_high_water = 0        # max total depth ever observed
         # test/observability seams — called synchronously, outside cond.
         # Hooks may take the legacy shapes ``on_admit(item)`` /
         # ``on_flush(key, items, reason)`` or append a trailing
@@ -379,7 +380,10 @@ class Batcher:
         """EWMA of queue depth; call with ``cond`` held at admission and
         release events (event-driven, so ManualClock tests stay exact)."""
         a = self.config.adaptive_alpha
-        self._depth_ewma += a * (self._total() - self._depth_ewma)
+        total = self._total()
+        if total > self.depth_high_water:
+            self.depth_high_water = total
+        self._depth_ewma += a * (total - self._depth_ewma)
 
     @property
     def queue_depth_ewma(self) -> float:

@@ -36,12 +36,21 @@ class RequestContext:
     ``min(service latency budget, deadline_s)``, so a context can only
     tighten, never loosen, the service's budget.  ``priority`` breaks
     drain-order ties between groups of the same tenant (higher first).
+
+    ``trace`` carries the request's telemetry span tree
+    (:class:`~repro.serve.telemetry.Trace`).  It is per-*request*, not
+    per-session: ``submit()`` stamps it onto a private copy of the caller's
+    context (a :class:`Session`'s ctx is shared across concurrent calls),
+    and it never participates in equality/grouping — two requests with
+    different traces still coalesce.
     """
 
     tenant: Optional[str] = None
     session: Optional[str] = None
     priority: int = 0
     deadline_s: Optional[float] = None
+    trace: Optional[Any] = dataclasses.field(default=None, compare=False,
+                                             repr=False)
 
 
 #: Context every bare (ctx-less) submit runs under — the single-tenant path.

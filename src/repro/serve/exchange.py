@@ -42,7 +42,7 @@ deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -125,6 +125,23 @@ class ExchangePlacement:
         a = sum(len(i) for i in self.anchor_index)
         s = sum(len(i) for i in self.side_index)
         return a * int(anchor_row_bytes) + s * int(side_row_bytes)
+
+    def describe(self) -> Dict[str, Any]:
+        """Shuffle-shape summary for trace attrs / EXPLAIN: bucket counts,
+        row totals, and skew (largest bucket's share of a perfectly even
+        split; 1.0 = balanced)."""
+        sizes = [len(i) for i in self.anchor_index]
+        total = sum(sizes)
+        active = len(self.active_buckets)
+        even = total / active if active else 0.0
+        return {
+            "n_buckets": self.n_buckets,
+            "active_buckets": active,
+            "anchor_rows_total": total,
+            "side_rows_total": sum(len(i) for i in self.side_index),
+            "bucket_capacity": self.anchor_rows,
+            "skew": (max(sizes) / even) if even else 1.0,
+        }
 
 
 def plan_exchange(anchor_keys: np.ndarray, side_keys: np.ndarray,

@@ -105,7 +105,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.codegen import (ExecutionConfig, bind_structural_params,
+from ..core.codegen import (ExecutionConfig, add_compile_listener,
+                            add_trace_listener, bind_structural_params,
                             compile_plan, count_jit_trace, pow2_bucket,
                             resolve_params)
 from ..core.ir import (Node, Plan, ROW_LOCAL_OPS, bucketed_signature,
@@ -122,11 +123,13 @@ from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
 from .cache import CostAwareCache, value_nbytes
 from .context import RequestContext, Session, TenantPolicy
 from .sharded import ShardedExecutor, side_bucket_rows
+from .telemetry import (MetricsRegistry, NULL_TRACE, Trace, chrome_trace,
+                        next_trace_id)
 
 __all__ = ["PredictionService", "ServiceStats", "PredictionTicket",
            "CompiledPrediction", "DistributedSpec", "AggStage",
            "ExchangeSpec", "SubplanRef", "RequestContext", "Session",
-           "TenantPolicy", "TenantStats"]
+           "TenantPolicy", "TenantStats", "ExplainResult"]
 
 
 # Ops whose output rows correspond 1:1 (positionally) to their input rows —
@@ -216,6 +219,11 @@ class TenantStats:
     deadline_rejections: int = 0     # submits shed as DeadlineUnmeetable
     latencies: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=2048))
+    # Per-tenant admission queue-wait EWMA (injected-clock seconds): the
+    # deadline shedder prefers this over the global EWMA so one flooded
+    # tenant's backlog never inflates a compliant tenant's estimate (and
+    # vice versa — the flooded tenant sheds on *its own* numbers).
+    queue_wait_ewma: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -339,6 +347,14 @@ class PredictionTicket:
         self._event = threading.Event()
         self._value: Any = None
         self._error: Optional[BaseException] = None
+        self._trace: Any = None
+
+    def trace(self):
+        """The request's span tree (:class:`~repro.serve.telemetry.Trace`),
+        or ``None`` when the service runs ``telemetry=False``.  Spans keep
+        accumulating until the request is served — read after ``result()``
+        for the complete tree."""
+        return self._trace
 
     def _resolve(self, value: Any):
         # a double resolution would mean two executions raced for one
@@ -377,6 +393,9 @@ class _Pending:
     # batch key), so one group always shares one binding.
     params: Optional[Dict[str, Any]] = None
     ctx: Optional[RequestContext] = None
+    # The request's Trace (NULL_TRACE when telemetry is off).  Carried here
+    # rather than only on ctx because the single-tenant path runs ctx=None.
+    trace: Any = NULL_TRACE
 
 
 # ---------------------------------------------------------------------------
@@ -517,6 +536,116 @@ def _artifact_nbytes(plan: Plan) -> int:
     return sum(walk(n.attrs) for n in plan.nodes.values())
 
 
+@dataclasses.dataclass
+class ExplainResult:
+    """Rendered optimized plan, optionally annotated with measured
+    per-operator wall time and row counts (``service.explain(...,
+    analyze=True)``).
+
+    ``samples`` maps node id -> ``(wall seconds, output rows)`` from an
+    instrumented (un-jitted, per-op-synchronized) run of the exact compiled
+    plan; ``total_s`` is that run's end-to-end wall time, so
+    ``measured_s`` — the per-operator sum — accounts for all but the
+    interpreter's dispatch overhead."""
+
+    plan: Plan
+    report: OptimizationReport
+    compiled: CompiledPrediction
+    analyze: bool = False
+    samples: Dict[str, Tuple[float, int]] = dataclasses.field(
+        default_factory=dict)
+    total_s: float = 0.0
+
+    @property
+    def measured_s(self) -> float:
+        """Sum of per-operator wall times (analyze runs only)."""
+        return sum(dt for dt, _ in self.samples.values())
+
+    def operators(self) -> List[Tuple[str, Node]]:
+        """(nid, node) pairs in execution (topological) order."""
+        return [(nid, self.plan.nodes[nid])
+                for nid in self.plan.topo_order()]
+
+    def _detail(self, n: Node) -> str:
+        a = n.attrs
+        bits: List[str] = []
+        if n.op == "scan":
+            bits.append(str(a.get("table")))
+            pr = self.report.partitions.get(a.get("table"))
+            if pr is not None:
+                bits.append(f"partitions={pr[0]}/{pr[1]}")
+            elif a.get("partitions") is not None:
+                bits.append(f"partitions={len(a['partitions'])}")
+        elif n.op == "join":
+            bits.append(f"on={a.get('on')}")
+            if a.get("partition_wise"):
+                bits.append("partition_wise")
+            if a.get("exchange"):
+                bits.append("exchange")
+        elif n.op == "predict_model":
+            bits.append(str(a.get("model_name") or a.get("pipeline_name")))
+            if a.get("flavor"):
+                bits.append(str(a["flavor"]))
+            if n.runtime != "native":
+                bits.append(f"runtime={n.runtime}")
+        elif n.op == "tree_gemm":
+            if a.get("strategy"):
+                bits.append(f"strategy={a['strategy']}")
+        elif n.op in ("group_agg", "partial_agg"):
+            if a.get("key"):
+                bits.append(f"key={a['key']}")
+            if a.get("two_phase"):
+                bits.append("two_phase")
+        elif n.op == "materialized":
+            bits.append(f"spliced sig={str(a.get('sig'))[:12]}")
+        elif n.op == "attach_column":
+            bits.append(str(a.get("name")))
+        return f" [{', '.join(bits)}]" if bits else ""
+
+    def pretty(self) -> str:
+        lines: List[str] = []
+        plan = self.plan
+
+        def render(nid: str, prefix: str, is_last: bool, is_root: bool):
+            n = plan.nodes[nid]
+            label = f"{n.op}{self._detail(n)}"
+            if nid in self.samples:
+                dt, rows = self.samples[nid]
+                label += f"  (actual time={dt * 1e3:.3f}ms rows={rows})"
+            if is_root:
+                lines.append(label)
+                child_prefix = ""
+            else:
+                lines.append(f"{prefix}{'└─ ' if is_last else '├─ '}{label}")
+                child_prefix = prefix + ("   " if is_last else "│  ")
+            for i, inp in enumerate(n.inputs):
+                render(inp, child_prefix, i == len(n.inputs) - 1, False)
+
+        if plan.output is not None:
+            render(plan.output, "", True, True)
+        if self.analyze:
+            lines.append(f"-- operators: {self.measured_s * 1e3:.3f}ms of "
+                         f"{self.total_s * 1e3:.3f}ms end-to-end")
+        if self.compiled.splice is not None:
+            lines.append("-- splice: reading cached "
+                         f"{self.compiled.splice.describe()}")
+        elif self.compiled.capture is not None:
+            lines.append("-- capture: materializing "
+                         f"{self.compiled.capture.describe()}")
+        if self.compiled.dist is not None:
+            d = self.compiled.dist
+            mode = "exchange" if d.exchange is not None else (
+                "two_phase" if d.stages else "partition_wise")
+            lines.append(f"-- distributed: {mode} anchor={d.anchor}")
+        if self.report.entries:
+            lines.append("-- optimizer rules:")
+            for rule, det in self.report.entries:
+                t = self.report.rule_times.get(rule)
+                stamp = f" ({t * 1e3:.2f}ms)" if t else ""
+                lines.append(f"   [{rule}]{stamp} {det}")
+        return "\n".join(lines)
+
+
 class PredictionService:
     """Serves optimized prediction queries under repeated/concurrent load."""
 
@@ -532,7 +661,9 @@ class PredictionService:
                  enable_result_cache: bool = True,
                  admission: Optional[AdmissionConfig] = None,
                  clock: Optional[Clock] = None,
-                 tenants: Optional[Mapping[str, TenantPolicy]] = None):
+                 tenants: Optional[Mapping[str, TenantPolicy]] = None,
+                 telemetry: bool = True,
+                 trace_capacity: int = 64):
         self.catalog = catalog
         self.optimizer_config = optimizer_config or OptimizerConfig()
         self.execution_config = execution_config or ExecutionConfig()
@@ -600,6 +731,36 @@ class PredictionService:
         # the very request that would calibrate it).
         self._queue_wait_ewma: Optional[float] = None
         self._exec_ewma: Dict[Any, float] = {}
+        # -- telemetry: request tracing + unified metrics registry --------
+        # ``telemetry=False`` is the pinned-overhead mode: submits carry the
+        # shared NULL_TRACE (no span objects, no clock reads) and the hot
+        # path never writes the registry (the off-mode test asserts
+        # ``metrics.writes == 0``).  The registry itself always exists so
+        # ``metrics_text()`` keeps working — pull-time collectors read the
+        # stats ledger without hot-path writes.
+        self.telemetry = bool(telemetry)
+        self.metrics = MetricsRegistry()
+        self._traces: collections.deque = collections.deque(
+            maxlen=max(1, int(trace_capacity)))
+        self._register_collectors()
+        self._unsub_codegen: List[Any] = []
+        if self.telemetry:
+            # Weak trampolines (same GC rationale as the loop callbacks):
+            # module-level codegen listeners must not pin the service.
+            wreg = weakref.ref(self.metrics)
+
+            def _on_compile(_plan, _w=wreg):
+                reg = _w()
+                if reg is not None:
+                    reg.inc("repro_plans_compiled_total")
+
+            def _on_trace(_w=wreg):
+                reg = _w()
+                if reg is not None:
+                    reg.inc("repro_xla_traces_total")
+
+            self._unsub_codegen = [add_compile_listener(_on_compile),
+                                   add_trace_listener(_on_trace)]
         self._loop: Optional[AdmissionLoop] = None
         self._loop_finalizer = None
         if admission is not None and admission.background:
@@ -665,12 +826,175 @@ class PredictionService:
         # catch anything admitted after the loop's final drain (or queued
         # in explicit-flush mode)
         self.admission_tick(force=True)
+        for unsub in self._unsub_codegen:
+            try:
+                unsub()
+            except ValueError:
+                pass                   # already removed
+        self._unsub_codegen = []
         if self._unsubscribe_invalidation is not None:
             try:
                 self._unsubscribe_invalidation()
             except ValueError:
                 pass
             self._unsubscribe_invalidation = None
+
+    # -- telemetry ------------------------------------------------------------
+    def _register_collectors(self) -> None:
+        """Pull-time metric sources: every ServiceStats counter plus the
+        key cache/admission/tenant gauges, sampled when ``metrics_text()``
+        / ``metrics_snapshot()`` is called — zero hot-path cost, and one
+        registry unifies what ``cache_info()``/``admission_info()``/
+        ``tenant_info()``/``shard_info()`` previously scattered.  The
+        collector runs outside the registry lock and takes ``self._lock``
+        itself, so lock order is always registry -> service, never the
+        reverse (hot-path ``observe`` calls are made outside
+        ``self._lock``)."""
+        wsvc = weakref.ref(self)
+        stat_fields = tuple(f.name for f in dataclasses.fields(ServiceStats))
+
+        def _collect(_w=wsvc):
+            svc = _w()
+            if svc is None:
+                return
+            with svc._lock:
+                vals = [(f, getattr(svc.stats, f)) for f in stat_fields]
+                tenants = {name: (ts.submitted, ts.served, ts.coalesced,
+                                  ts.deadline_rejections, ts.queue_wait_ewma)
+                           for name, ts in svc._tenant_stats.items()}
+                qw = svc._queue_wait_ewma
+            for f, v in vals:
+                yield (f"repro_{f}_total", "counter", float(v), None)
+            yield ("repro_exec_cache_entries", "gauge",
+                   float(len(svc._exec_cache)), None)
+            yield ("repro_exec_cache_bytes", "gauge",
+                   float(svc._exec_cache.bytes_in_use), None)
+            if svc._result_cache is not None:
+                yield ("repro_result_cache_entries", "gauge",
+                       float(len(svc._result_cache)), None)
+                yield ("repro_result_cache_bytes", "gauge",
+                       float(svc._result_cache.bytes_in_use), None)
+            yield ("repro_admission_queue_depth", "gauge",
+                   float(len(svc.batcher)), None)
+            yield ("repro_admission_queue_depth_high_water", "gauge",
+                   float(svc.batcher.depth_high_water), None)
+            if qw is not None:
+                yield ("repro_queue_wait_ewma_seconds", "gauge", qw, None)
+            for name, (sub, served, coal, shed, tqw) in tenants.items():
+                labels = {"tenant": name}
+                yield ("repro_tenant_submitted_total", "counter",
+                       float(sub), labels)
+                yield ("repro_tenant_served_total", "counter",
+                       float(served), labels)
+                yield ("repro_tenant_coalesced_total", "counter",
+                       float(coal), labels)
+                yield ("repro_tenant_deadline_rejections_total", "counter",
+                       float(shed), labels)
+                if tqw is not None:
+                    yield ("repro_tenant_queue_wait_ewma_seconds", "gauge",
+                           tqw, labels)
+
+        self.metrics.add_collector(_collect)
+
+    def _new_trace(self, name: str,
+                   ctx: Optional[RequestContext]) -> Any:
+        if not self.telemetry:
+            return NULL_TRACE
+        attrs = {}
+        if ctx is not None:
+            if ctx.tenant:
+                attrs["tenant"] = ctx.tenant
+            if ctx.session:
+                attrs["session"] = ctx.session
+        return Trace(self.clock, next_trace_id(), name=name, attrs=attrs)
+
+    def _finish_trace(self, trace: Any) -> None:
+        """Seal a request's trace and retain it in the last-N ring (the
+        export buffer behind :meth:`traces` / :meth:`export_traces`)."""
+        if trace is None or not trace.enabled \
+                or trace.finished is not None:
+            return                     # already sealed (idempotent)
+        trace.finish()
+        self._traces.append(trace)
+
+    def traces(self, n: Optional[int] = None) -> List[Any]:
+        """The last-``n`` (default: all retained) finished request traces,
+        oldest first."""
+        out = list(self._traces)
+        return out if n is None else out[-n:]
+
+    def export_traces(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Retained traces as a Chrome-trace/Perfetto JSON object (written
+        to ``path`` when given — load it in ``chrome://tracing`` or
+        https://ui.perfetto.dev)."""
+        return chrome_trace(self.traces(), path=path)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Point-in-time view of every counter/gauge/histogram (hot-path
+        writes + pull-time collectors)."""
+        return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text-exposition rendering of the registry."""
+        return self.metrics.render()
+
+    def explain(self, query: Union[str, Plan],
+                tables: Optional[Dict[str, Table]] = None,
+                params: Any = None,
+                analyze: bool = False) -> "ExplainResult":
+        """EXPLAIN [ANALYZE]: the optimized plan this service would serve
+        ``query`` with — cache/splice/distribution decisions included —
+        and, under ``analyze=True``, measured per-operator wall time and
+        row counts.
+
+        The analyze run executes the *same compiled plan* through an
+        instrumented (un-jitted) twin of the codegen closure whose
+        ``node_hook`` synchronizes after every operator
+        (``jax.block_until_ready``), so each node's elapsed time is its
+        own — the per-operator sum accounts for the run's end-to-end
+        wall time minus only interpreter dispatch.  It is a real
+        execution (external runtimes pay their hop), but bypasses
+        admission/coalescing — EXPLAIN measures the plan, not the queue."""
+        plan = self._to_plan(query)
+        bound = None
+        if params is not None or plan_params(plan):
+            bound = resolve_params(plan, params) or None
+            plan, bound = bind_structural_params(plan, bound)
+            bound = bound or None
+        compiled = self.compile(plan, tables)
+        result = ExplainResult(plan=compiled.plan, report=compiled.report,
+                               compiled=compiled, analyze=analyze)
+        if not analyze:
+            return result
+        tabs = self._input_tables(compiled, tables)
+        if bound:
+            tabs["__params__"] = bound
+        if compiled.splice is not None:
+            ref = compiled.splice
+            value = self._result_cache.get(self._result_key(ref)) \
+                if self._result_cache is not None else None
+            if value is None:
+                value = self._materialize(ref)
+            tabs[ref.slot] = value
+        samples: Dict[str, Tuple[float, int]] = {}
+
+        def hook(nid, node, value, elapsed_s):
+            if isinstance(value, Table):
+                rows = value.capacity
+            elif hasattr(value, "shape") and getattr(value, "shape", ()):
+                rows = int(value.shape[0])
+            else:
+                rows = 1
+            prev = samples.get(nid)
+            samples[nid] = ((prev[0] if prev else 0.0) + elapsed_s, rows)
+
+        prof_fn = compile_plan(compiled.plan, self.catalog,
+                               self.execution_config, node_hook=hook)
+        t0 = time.perf_counter()
+        jax.block_until_ready(prof_fn(tabs))
+        result.total_s = time.perf_counter() - t0
+        result.samples = samples
+        return result
 
     # -- invalidation ---------------------------------------------------------
     def _on_artifact_registered(self, kind: str, name: str) -> None:
@@ -749,12 +1073,21 @@ class PredictionService:
             key = key[0]
         return self._exec_cache.get(key, count=False) is None
 
-    def _deadline_estimate(self, key: Any) -> Optional[float]:
+    def _deadline_estimate(self, key: Any,
+                           tenant: Optional[str] = None) -> Optional[float]:
         """Calibrated time-to-result estimate for one request of this
         cache key: queue-wait EWMA + the key's execution-time EWMA, or
-        ``None`` while either is uncalibrated (cold keys never shed)."""
+        ``None`` while either is uncalibrated (cold keys never shed).
+        A tenant with its own calibrated queue-wait EWMA uses that instead
+        of the global one, so one flooded tenant's backlog neither inflates
+        a compliant neighbor's estimate nor hides behind the fleet
+        average."""
         with self._lock:
             qw = self._queue_wait_ewma
+            if tenant is not None:
+                ts = self._tenant_stats.get(tenant)
+                if ts is not None and ts.queue_wait_ewma is not None:
+                    qw = ts.queue_wait_ewma
             ex = self._exec_ewma.get(key)
         if qw is None or ex is None:
             return None
@@ -922,8 +1255,8 @@ class PredictionService:
     # -- compile cache -------------------------------------------------------
     def compile(self, query: Union[str, Plan],
                 tables: Optional[Dict[str, Table]] = None,
-                _key: Optional[Tuple[Tuple, str]] = None
-                ) -> CompiledPrediction:
+                _key: Optional[Tuple[Tuple, str]] = None,
+                trace: Any = NULL_TRACE) -> CompiledPrediction:
         """Cache lookup; on miss, optimize + codegen + jit once.  ``_key``
         lets flush() reuse the cache key it already computed for grouping
         (key computation hashes the whole plan — not free on the warm
@@ -935,10 +1268,12 @@ class PredictionService:
         if hit is not None:
             with self._lock:
                 self.stats.cache_hits += 1
+            trace.event("executable_cache", result="hit")
             upgraded = self._maybe_upgrade_to_splice(key, hit)
             return upgraded if upgraded is not None else hit
         with self._lock:
             self.stats.cache_misses += 1
+        trace.event("executable_cache", result="miss")
         # Compile outside any lock (it is slow); racing misses both compile,
         # last one wins the slot — harmless and rare.
         t0 = time.perf_counter()
@@ -956,8 +1291,9 @@ class PredictionService:
                 opt_config, enable_stats_pruning=False,
                 enable_partition_pruning=False,
                 enable_distributed_plan=False)
-        optimized, report = CrossOptimizer(
-            self.catalog, opt_config).optimize(plan)
+        with trace.span("optimize"):
+            optimized, report = CrossOptimizer(
+                self.catalog, opt_config).optimize(plan)
         model_names = report.referenced_models
         full_scans = _scan_names(optimized)
         overridden = key[2]
@@ -995,10 +1331,12 @@ class PredictionService:
                 report.log("result_cache",
                            f"capturing subtree {capture_ref.describe()}")
 
-        raw_fn = compile_plan(exec_plan, self.catalog, self.execution_config,
-                              capture=capture_ref.subtree_plan.output
-                              if capture_ref is not None else None)
-        fn = self._jit(raw_fn)
+        with trace.span("codegen"):
+            raw_fn = compile_plan(exec_plan, self.catalog,
+                                  self.execution_config,
+                                  capture=capture_ref.subtree_plan.output
+                                  if capture_ref is not None else None)
+            fn = self._jit(raw_fn)
         scans = _scan_names(exec_plan)
         chunk_table = None
         if len(scans) == 1 and all(n.op in _ROW_LOCAL_OPS
@@ -1023,6 +1361,8 @@ class PredictionService:
             nbytes=_artifact_nbytes(optimized), tags=tags)
         with self._lock:
             self.stats.evictions += len(evicted)
+        if self.telemetry:             # outside self._lock by construction
+            self.metrics.observe("repro_compile_seconds", compile_time)
         entry = self._exec_cache.entry(key)
         # max_cache_entries=0 means "no caching": the fresh compile was
         # evicted immediately above, so fall back to it.
@@ -1272,6 +1612,7 @@ class PredictionService:
                 # min/max budgets on the queue-depth EWMA)
                 "latency_budget_s": self.batcher.effective_latency_budget(),
                 "queue_depth_ewma": self.batcher.queue_depth_ewma,
+                "queue_depth_high_water": self.batcher.depth_high_water,
                 "submitted": s.submitted,
                 "served": served,
                 "coalesce_rate": s.coalesced_requests / served
@@ -1358,7 +1699,8 @@ class PredictionService:
                  tables: Optional[Dict[str, Table]],
                  store_capture: bool = True,
                  params: Optional[Dict[str, Any]] = None,
-                 tenant: Optional[str] = None) -> Any:
+                 tenant: Optional[str] = None,
+                 trace: Any = NULL_TRACE) -> Any:
         """``store_capture=False`` executes a capture-compiled plan without
         populating the result cache — used when the inputs are not the
         catalog tables the cache key would claim (stacked micro-batches).
@@ -1373,14 +1715,14 @@ class PredictionService:
         with self._lock:
             self.stats.batch_executions += 1
         if compiled.splice is not None:
-            out = self._execute_spliced(compiled, tabs)
+            out = self._execute_spliced(compiled, tabs, trace=trace)
         elif not params and self._should_shard(compiled, tables):
             out = self._execute_sharded(compiled, tabs, store_capture,
-                                        tenant=tenant)
+                                        tenant=tenant, trace=trace)
         elif (self.chunk_rows and compiled.chunk_table is not None
                 and tabs[compiled.chunk_table].capacity > self.chunk_rows):
             out = self._execute_chunked(compiled, tabs, store_capture,
-                                        tenant=tenant)
+                                        tenant=tenant, trace=trace)
         else:
             out = self._execute_whole(compiled, tabs, store_capture,
                                       tenant=tenant)
@@ -1447,7 +1789,8 @@ class PredictionService:
     def _execute_sharded(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
                          store_capture: bool = True,
-                         tenant: Optional[str] = None) -> Any:
+                         tenant: Optional[str] = None,
+                         trace: Any = NULL_TRACE) -> Any:
         """Place the plan's surviving partitions across the data mesh and
         run the fused program per morsel (``serve/sharded.py``).  The
         partitioned table is re-read from the catalog (not the tabs dict)
@@ -1460,7 +1803,8 @@ class PredictionService:
         reassembled capture covers only the surviving rows, which is *not*
         the value the result-cache key claims, so it is discarded."""
         if compiled.dist is not None:
-            return self._execute_distributed(compiled, tabs, store_capture)
+            return self._execute_distributed(compiled, tabs, store_capture,
+                                             trace=trace)
         cfg = self.execution_config
         name = compiled.chunk_table
         pt = self.catalog.get_partitioned(name)
@@ -1491,7 +1835,7 @@ class PredictionService:
         want_capture = compiled.capture is not None
         t0 = time.perf_counter()
         out = executor.execute(twin.fn, pt, name, parts, placement,
-                               capture=want_capture)
+                               capture=want_capture, trace=trace)
         elapsed = time.perf_counter() - t0
         if want_capture:
             out, captured = out
@@ -1510,7 +1854,8 @@ class PredictionService:
 
     def _execute_distributed(self, compiled: CompiledPrediction,
                              tabs: Dict[str, Table],
-                             store_capture: bool = True) -> Any:
+                             store_capture: bool = True,
+                             trace: Any = NULL_TRACE) -> Any:
         """Partition-wise join / two-phase aggregation execution: place
         the anchor table's surviving partitions across the mesh, gather
         each join side's *aligned* partitions per morsel, run the local
@@ -1538,18 +1883,19 @@ class PredictionService:
                            combine_partials(partials, _s.key, _s.aggs))
                 if stage.exchange is not None:
                     ok, combined, n_units = self._run_exchange(
-                        compiled, stage, pts, combine=combine)
+                        compiled, stage, pts, combine=combine, trace=trace)
                     if not ok:     # cost gate: shuffle loses to whole-table
                         return self._execute_whole(compiled, tabs,
                                                    store_capture)
                 else:
                     combined, n_units = self._run_partition_wise(
-                        compiled, stage, pts, combine=combine)
+                        compiled, stage, pts, combine=combine, trace=trace)
                 slots[stage.slot] = combined
                 with self._lock:
                     self.stats.shard_agg_combines += 1
                     self.stats.shard_partial_aggs += n_units
-            out = dist.global_fn(slots)
+            with trace.span("combine_global", stages=len(dist.stages)):
+                out = dist.global_fn(slots)
             with self._lock:
                 self.stats.sharded_executions += 1
                 if any(s.n_joins or s.exchange for s in dist.stages):
@@ -1562,12 +1908,13 @@ class PredictionService:
             else None
         if dist.exchange is not None:
             ok, out, _units = self._run_exchange(compiled, dist, pts,
-                                                 unwrap=unwrap)
+                                                 unwrap=unwrap, trace=trace)
             if not ok:
                 return self._execute_whole(compiled, tabs, store_capture)
         else:
             out, _units = self._run_partition_wise(compiled, dist, pts,
-                                                   unwrap=unwrap)
+                                                   unwrap=unwrap,
+                                                   trace=trace)
         with self._lock:
             self.stats.sharded_executions += 1
             if dist.n_joins or dist.exchange is not None:
@@ -1577,7 +1924,8 @@ class PredictionService:
     def _run_partition_wise(self, compiled: CompiledPrediction, stage: Any,
                             pts: Dict[str, Any],
                             combine: Optional[Any] = None,
-                            unwrap: Optional[Any] = None
+                            unwrap: Optional[Any] = None,
+                            trace: Any = NULL_TRACE
                             ) -> Tuple[Any, int]:
         """Run one local program (a :class:`DistributedSpec` or one
         :class:`AggStage` — both carry anchor/part_tables/local_*) over
@@ -1611,7 +1959,7 @@ class PredictionService:
         t0 = time.perf_counter()
         out = executor.execute(twin.fn, anchor_pt, stage.anchor, parts,
                                placement, unwrap=unwrap, sides=sides,
-                               combine=combine)
+                               combine=combine, trace=trace)
         twin.serves += 1
         self._record_twin_cost(twin, fresh, tags,
                                time.perf_counter() - t0)
@@ -1624,7 +1972,8 @@ class PredictionService:
 
     def _run_exchange(self, compiled: CompiledPrediction, stage: Any,
                       pts: Dict[str, Any], combine: Optional[Any] = None,
-                      unwrap: Optional[Any] = None
+                      unwrap: Optional[Any] = None,
+                      trace: Any = NULL_TRACE
                       ) -> Tuple[bool, Any, int]:
         """Run one local program via the hash-repartition shuffle
         (``serve/exchange.py`` + ``ShardedExecutor.execute_exchange``).
@@ -1662,17 +2011,23 @@ class PredictionService:
             return (cols, valid, pt.table.schema,
                     len(surviving), pt.n_partitions)
 
-        a_cols, a_valid, a_schema, a_used, a_total = gather(exch.left)
-        s_cols, s_valid, s_schema, s_used, s_total = gather(exch.right)
-        n_buckets = choose_bucket_count(len(a_valid), executor.n_devices,
-                                        cfg.shard_morsel_rows)
-        if cfg.shard_exchange_cost_gate and not exchange_beneficial(
-                len(a_valid), len(s_valid), executor.n_devices, n_buckets):
-            with self._lock:
-                self.stats.exchange_fallbacks += 1
-            return False, None, 0
-        placement = plan_exchange(a_cols[exch.on], s_cols[exch.on],
-                                  n_buckets, cfg.shard_min_bucket_rows)
+        with trace.span("exchange_build", on=exch.on) as sp:
+            a_cols, a_valid, a_schema, a_used, a_total = gather(exch.left)
+            s_cols, s_valid, s_schema, s_used, s_total = gather(exch.right)
+            n_buckets = choose_bucket_count(len(a_valid),
+                                            executor.n_devices,
+                                            cfg.shard_morsel_rows)
+            if cfg.shard_exchange_cost_gate and not exchange_beneficial(
+                    len(a_valid), len(s_valid), executor.n_devices,
+                    n_buckets):
+                with self._lock:
+                    self.stats.exchange_fallbacks += 1
+                trace.event("exchange_fallback", rows=len(a_valid))
+                return False, None, 0
+            placement = plan_exchange(a_cols[exch.on], s_cols[exch.on],
+                                      n_buckets, cfg.shard_min_bucket_rows)
+            if sp is not None:
+                sp.attrs.update(placement.describe())
         twin, fresh, tags = self._twin_executable(
             compiled,
             sharded_signature(stage.local_sig, placement.anchor_rows,
@@ -1686,7 +2041,7 @@ class PredictionService:
         out = executor.execute_exchange(
             twin.fn, (a_cols, a_valid, a_schema), exch.left,
             (s_cols, s_valid, s_schema), exch.right, placement,
-            unwrap=unwrap, combine=combine)
+            unwrap=unwrap, combine=combine, trace=trace)
         twin.serves += 1
         self._record_twin_cost(twin, fresh, tags,
                                time.perf_counter() - t0)
@@ -1738,29 +2093,36 @@ class PredictionService:
             }
 
     def _execute_spliced(self, compiled: CompiledPrediction,
-                         tabs: Dict[str, Table]) -> Any:
+                         tabs: Dict[str, Table],
+                         trace: Any = NULL_TRACE) -> Any:
         ref = compiled.splice
         value = self._result_cache.get(self._result_key(ref)) \
             if self._result_cache is not None else None
+        hit = value is not None
         with self._lock:
             self.stats.spliced_executions += 1
-            if value is None:
-                self.stats.result_misses += 1
-            else:
+            if hit:
                 self.stats.result_hits += 1
+            else:
+                self.stats.result_misses += 1
         if value is None:       # evicted since compile: rebuild, repopulate
-            value = self._materialize(ref)
-        return compiled.fn({**tabs, ref.slot: value})
+            with trace.span("rematerialize", sig=ref.sig[:16]):
+                value = self._materialize(ref)
+        with trace.span("result_cache_splice", hit=hit,
+                        subtree=ref.describe()):
+            return compiled.fn({**tabs, ref.slot: value})
 
     def _execute_chunked(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
                          store_capture: bool = True,
-                         tenant: Optional[str] = None) -> Any:
+                         tenant: Optional[str] = None,
+                         trace: Any = NULL_TRACE) -> Any:
         """Morsel execution: every chunk (tail included, via padding) has the
         same static shape, so XLA compiles one chunk executable total."""
         name = compiled.chunk_table
         table = tabs[name]
         n = table.capacity
+        trace.event("chunked", rows=n, chunk_rows=self.chunk_rows)
         pieces, captured = [], []
         t0 = time.perf_counter()
         for start in range(0, n, self.chunk_rows):
@@ -1845,18 +2207,32 @@ class PredictionService:
         poisoning the batch it would have joined."""
         ctx = self._resolve_ctx(ctx, tenant, priority, deadline_s)
         ticket = PredictionTicket()
+        trace = self._new_trace(
+            query if isinstance(query, str) else "request", ctx)
+        if trace.enabled:
+            ticket._trace = trace
+            if ctx is not None:
+                # Per-request copy: a Session's ctx is shared across
+                # concurrent calls, so the trace is stamped on a private
+                # clone (trace is compare=False — grouping unaffected).
+                ctx = dataclasses.replace(ctx)
+                object.__setattr__(ctx, "trace", trace)
         try:
-            plan = self._to_plan(query)
-            bound = None
-            if params is not None or plan_params(plan):
-                bound = resolve_params(plan, params) or None
-                # Structural params (LIMIT :n) bind into a plan copy *before*
-                # the cache key: each distinct value is its own plan
-                # signature, so cached executables stay distinct per value.
-                plan, bound = bind_structural_params(plan, bound)
-                bound = bound or None
-            key, _ = self._cache_key(plan, tables)
+            with trace.span("parse"):
+                plan = self._to_plan(query)
+                bound = None
+                if params is not None or plan_params(plan):
+                    bound = resolve_params(plan, params) or None
+                    # Structural params (LIMIT :n) bind into a plan copy
+                    # *before* the cache key: each distinct value is its own
+                    # plan signature, so cached executables stay distinct
+                    # per value.
+                    plan, bound = bind_structural_params(plan, bound)
+                    bound = bound or None
+                key, _ = self._cache_key(plan, tables)
         except Exception as err:
+            trace.event("error", stage="parse", error=repr(err))
+            self._finish_trace(trace)
             ticket._fail(err)
             return ticket
         # Deadline-based shedding: once the queue-wait EWMA and this key's
@@ -1866,7 +2242,7 @@ class PredictionService:
         # estimate), and the estimate rides the injected clock, so the
         # fake-clock tests pin the behavior deterministically.
         if ctx is not None and ctx.deadline_s is not None:
-            est = self._deadline_estimate(key)
+            est = self._deadline_estimate(key, ctx.tenant)
             if est is not None and est > ctx.deadline_s:
                 err = DeadlineUnmeetable(
                     f"deadline {ctx.deadline_s:.4f}s unmeetable: estimated "
@@ -1876,6 +2252,9 @@ class PredictionService:
                     ts = self._tenant_stat(ctx.tenant)
                     if ts is not None:
                         ts.deadline_rejections += 1
+                trace.event("deadline_shed", estimate=est,
+                            deadline=ctx.deadline_s)
+                self._finish_trace(trace)
                 ticket._fail(err)
                 raise err
         # Parameterized requests group by (cache key, binding fingerprint):
@@ -1895,11 +2274,13 @@ class PredictionService:
             # groups share one execution and must never be split
             self.batcher.offer(batch_key,
                                _Pending(plan, tables, ticket,
-                                        params=bound, ctx=ctx),
+                                        params=bound, ctx=ctx, trace=trace),
                                chunk=bool(key[2]), ctx=ctx)
         except AdmissionQueueFull:
             with self._lock:
                 self.stats.queue_rejections += 1
+            trace.event("queue_rejected")
+            self._finish_trace(trace)
             raise
         with self._lock:
             self.stats.submitted += 1
@@ -1931,6 +2312,7 @@ class PredictionService:
         ``admission_tick``; ``_flush_lock`` serializes the execution."""
         now = self.clock.monotonic()
         tenant = group.ctx.tenant if group.ctx is not None else None
+        lats: List[float] = []
         with self._lock:
             if group.reason == "deadline":
                 self.stats.deadline_flushes += 1
@@ -1941,15 +2323,31 @@ class PredictionService:
             ts = self._tenant_stat(tenant)
             for t in group.admitted_at:
                 lat = max(0.0, now - t)
+                lats.append(lat)
                 self._queue_latencies.append(lat)
                 if ts is not None:
                     ts.latencies.append(lat)
+                    # per-tenant shedding calibration: the tenant's own
+                    # queue-wait EWMA (preferred by _deadline_estimate)
+                    if ts.queue_wait_ewma is None:
+                        ts.queue_wait_ewma = lat
+                    else:
+                        ts.queue_wait_ewma += \
+                            0.2 * (lat - ts.queue_wait_ewma)
                 # deadline-shedding calibration (injected-clock seconds)
                 if self._queue_wait_ewma is None:
                     self._queue_wait_ewma = lat
                 else:
                     self._queue_wait_ewma += \
                         0.2 * (lat - self._queue_wait_ewma)
+        for p, t, lat in zip(group.items, group.admitted_at, lats):
+            p.trace.add_span("queue_wait", t, t + lat,
+                             reason=group.reason)
+        if self.telemetry:             # outside self._lock by construction
+            for lat in lats:
+                self.metrics.observe(
+                    "repro_queue_wait_seconds", lat,
+                    labels={"tenant": tenant} if tenant else None)
         with self._flush_lock:
             served = self._serve_group(group.key, group.items)
         if tenant is not None and served:
@@ -1963,33 +2361,47 @@ class PredictionService:
         ``result()`` with no timeout would otherwise hang forever."""
         for p in group.items:
             if not p.ticket.done:
+                p.trace.event("error", stage="serve", error=repr(err))
                 p.ticket._fail(err)
+            self._finish_trace(p.trace)
 
     def _serve_group(self, key: Tuple, group: List[_Pending]) -> int:
         head = group[0]
         # One group = one binding (the fingerprint is part of the batch
-        # key), so the head's resolved params and tenant speak for all.
+        # key), so the head's resolved params and tenant speak for all —
+        # and the head's trace records the group-level compile/execute
+        # phases (non-head members mark themselves coalesced).
         params = head.params
         tenant = head.ctx.tenant if head.ctx is not None else None
+        trace = head.trace
         if params is not None:
             key = key[0]               # strip the binding fingerprint
+
+        def seal(err: Optional[BaseException]) -> None:
+            for p in group:
+                if err is not None and not p.ticket.done:
+                    p.trace.event("error", stage="serve", error=repr(err))
+                    p.ticket._fail(err)
+                self._finish_trace(p.trace)
+
         try:
             # key[0] is the plan signature (first component of _cache_key)
             compiled = self.compile(head.plan, head.tables,
-                                    _key=(key, key[0]))
+                                    _key=(key, key[0]), trace=trace)
         except Exception as err:
-            for p in group:
-                if not p.ticket.done:
-                    p.ticket._fail(err)
+            seal(err)
             return 0
         t0 = self.clock.monotonic()
         try:
             if all(not p.tables for p in group):
                 # identical inputs (catalog tables): one execution at the
                 # catalog's natural (fixed) shape, fanned out to every ticket
-                out = self._execute(compiled, None, params=params,
-                                    tenant=tenant)
+                with trace.span("execute", coalesced=len(group) - 1):
+                    out = self._execute(compiled, None, params=params,
+                                        tenant=tenant, trace=trace)
                 for p in group:
+                    if p is not head:
+                        p.trace.event("coalesced", group=len(group))
                     p.ticket._resolve(out)
                 with self._lock:
                     self.stats.coalesced_requests += len(group) - 1
@@ -2004,13 +2416,12 @@ class PredictionService:
                                     tenant=tenant)
             else:
                 for p in group:
-                    p.ticket._resolve(self._execute(compiled, p.tables,
-                                                    params=params,
-                                                    tenant=tenant))
+                    with p.trace.span("execute"):
+                        p.ticket._resolve(self._execute(
+                            compiled, p.tables, params=params,
+                            tenant=tenant, trace=p.trace))
         except Exception as err:
-            for p in group:
-                if not p.ticket.done:
-                    p.ticket._fail(err)
+            seal(err)
             return 0
         # execution-time EWMA per cache key (injected clock; excludes the
         # one-off compile) — the other half of the deadline-shed estimate
@@ -2021,6 +2432,11 @@ class PredictionService:
             prev = self._exec_ewma.get(key)
             self._exec_ewma[key] = dt if prev is None \
                 else prev + 0.2 * (dt - prev)
+        if self.telemetry:             # outside self._lock by construction
+            self.metrics.observe(
+                "repro_exec_seconds", dt,
+                labels={"tenant": tenant} if tenant else None)
+        seal(None)
         return len(group)
 
     def _bucket_rows(self, n: int) -> int:
@@ -2130,6 +2546,7 @@ class PredictionService:
         row-local ops never mix rows), so however batch sizes vary, at most
         O(log max_batch) shapes ever reach XLA."""
         name = compiled.chunk_table
+        trace = group[0].trace         # head records the batch-level spans
         inputs = [self._input_tables(compiled, p.tables)[name]
                   for p in group]
         sizes = [t.capacity for t in inputs]
@@ -2137,26 +2554,34 @@ class PredictionService:
         if self.chunk_rows and total > self.chunk_rows:
             # morsel execution already fixes the shape at chunk_rows (one
             # chunk-shaped executable total): pad to a chunk multiple
-            stacked = _stack_pad_host(inputs,
-                                      _round_up(total, self.chunk_rows))
-            out = self._execute(compiled, {name: stacked},
-                                store_capture=False, params=params,
-                                tenant=tenant)
+            with trace.span("bucket_pad", rows=total,
+                            bucket=_round_up(total, self.chunk_rows)):
+                stacked = _stack_pad_host(inputs,
+                                          _round_up(total, self.chunk_rows))
+            with trace.span("execute", stacked=len(group)):
+                out = self._execute(compiled, {name: stacked},
+                                    store_capture=False, params=params,
+                                    tenant=tenant, trace=trace)
         else:
             bucket = self._bucket_rows(total)
             bcompiled, fresh, btags = self._bucket_executable(compiled,
                                                               bucket)
-            stacked = _stack_pad_host(inputs, bucket)
+            with trace.span("bucket_pad", rows=total, bucket=bucket,
+                            fresh_bucket=fresh):
+                stacked = _stack_pad_host(inputs, bucket)
             tabs: Dict[str, Any] = {name: stacked}
             if params:
                 tabs["__params__"] = params
             t0 = time.perf_counter()
-            out = self._execute_direct(bcompiled, tabs)
+            with trace.span("execute", stacked=len(group), bucket=bucket):
+                out = self._execute_direct(bcompiled, tabs)
             self._record_twin_cost(bcompiled, fresh, btags,
                                    time.perf_counter() - t0)
         # no device-side trim: the host-side split only reads rows up to
         # sum(sizes), so the padded tail is simply never referenced
         for p, piece in zip(group, _split_output_host(out, sizes)):
+            if p is not group[0]:
+                p.trace.event("coalesced", group=len(group))
             p.ticket._resolve(piece)
         with self._lock:
             self.stats.coalesced_requests += len(group) - 1

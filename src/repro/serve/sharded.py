@@ -213,7 +213,7 @@ class ShardedExecutor:
                 unwrap: Optional[Callable[[Any], Any]] = None,
                 sides: Optional[Dict[str, Tuple[Any, int]]] = None,
                 combine: Optional[Callable[[List[Any]], Any]] = None,
-                capture: bool = False) -> Any:
+                capture: bool = False, trace: Any = None) -> Any:
         """Execute ``fn`` over ``partitions`` of ``source`` per
         ``placement`` and reassemble the output in partition order.
 
@@ -242,7 +242,12 @@ class ShardedExecutor:
         phase aggregation) every morsel's output is a mergeable partial
         state; they are folded host-side in ascending partition order
         (placement-independent, so any device count is bit-identical) and
-        the combined value is returned."""
+        the combined value is returned.
+
+        ``trace`` (a :class:`~repro.serve.telemetry.Trace`, or ``None``)
+        records one ``shard_wave`` span per morsel on track ``device+1``
+        — worker threads genuinely overlap, so spans go through the
+        out-of-band ``add_span`` seam rather than the phase stack."""
         if capture and (combine is not None or unwrap is not None):
             raise ValueError("capture=True is row-local reassembly; it "
                              "composes with neither combine nor unwrap")
@@ -341,11 +346,20 @@ class ShardedExecutor:
         prepared = {d: [(m, prepare_morsel(self.devices[d], m))
                         for m in placement.assignments[d]]
                     for d in active}
+        live = trace is not None and getattr(trace, "enabled", False)
 
         def run_device(d: int) -> List[Tuple[int, Any, Any]]:
             pieces: List[Tuple[int, Any, Any]] = []
             for morsel, tables in prepared[d]:
-                pieces.extend(run_morsel(morsel, tables))
+                t0 = trace.clock.monotonic() if live else 0.0
+                out = run_morsel(morsel, tables)
+                if live:
+                    trace.add_span("shard_wave", t0,
+                                   trace.clock.monotonic(), tid=d + 1,
+                                   device=d,
+                                   partitions=len(morsel.partitions),
+                                   rows=morsel.rows)
+                pieces.extend(out)
             return pieces
         if not active:
             # every partition pruned: run one all-padding morsel to learn
@@ -435,7 +449,7 @@ class ShardedExecutor:
                          side_name: str, placement,
                          unwrap: Optional[Callable[[Any], Any]] = None,
                          combine: Optional[Callable[[List[Any]], Any]] = None,
-                         capture: bool = False) -> Any:
+                         capture: bool = False, trace: Any = None) -> Any:
         """Execute ``fn`` via a hash-repartition shuffle exchange.
 
         ``anchor`` and ``side`` are host ``(columns, valid, schema)``
@@ -531,9 +545,12 @@ class ShardedExecutor:
                         np.asarray(raw.valid)[:rows], raw.schema)
             return np.asarray(raw)[:rows]
 
+        live = trace is not None and getattr(trace, "enabled", False)
+
         def run_device(d: int) -> List[Tuple[int, Any, Any]]:
             pieces: List[Tuple[int, Any, Any]] = []
             for b, tables in prepared[d]:
+                t0 = trace.clock.monotonic() if live else 0.0
                 raw = fn(tables)
                 cap = None
                 if capture:
@@ -541,6 +558,11 @@ class ShardedExecutor:
                 elif unwrap is not None:
                     raw = unwrap(raw)
                 raw = jax.block_until_ready(raw)
+                if live:
+                    trace.add_span(
+                        "exchange_bucket", t0, trace.clock.monotonic(),
+                        tid=d + 1, device=d, bucket=b,
+                        rows=len(placement.anchor_index[b]))
                 if combine is not None:
                     pieces.append((b, raw, None))
                     continue
@@ -580,6 +602,7 @@ class ShardedExecutor:
 
         # scatter bucket outputs back to original anchor row positions:
         # `order` is where each stacked row came from, `inv` sends it home
+        t_scatter = trace.clock.monotonic() if live else 0.0
         order = np.concatenate(
             [placement.anchor_index[b] for b, _, _ in pieces])
         inv = np.empty(placement.total_rows, np.int64)
@@ -598,6 +621,11 @@ class ShardedExecutor:
             return jnp.asarray(np.concatenate(items, axis=0)[inv])
 
         out = reassemble([p[1] for p in pieces])
+        cap_out = reassemble([p[2] for p in pieces]) if capture else None
+        if live:
+            trace.add_span("exchange_scatter", t_scatter,
+                           trace.clock.monotonic(),
+                           buckets=len(pieces), rows=len(order))
         if capture:
-            return out, reassemble([p[2] for p in pieces])
+            return out, cap_out
         return out

@@ -1,0 +1,251 @@
+"""Stats-ledger audits (ISSUE 9): the counters the metrics registry
+exports must balance against each other — an accounting identity per
+serving tier, checked under multi-threaded stress so lost/double counts
+under lock contention cannot hide:
+
+- signature tier:  cache_hits + cache_misses == batch_executions
+                   (every group serve does exactly one signature lookup
+                   and issues exactly one execution);
+- admission tier:  batch_executions + coalesced_requests == submitted
+                   (every admitted request is either the head of an
+                   execution or coalesced into one);
+- bucket tier:     bucket_hits + bucket_compiles == batch_executions
+                   when every execution is stacked (one shape-bucket
+                   lookup per stacked execution);
+- shedding tier:   submitted + deadline_rejections + queue_rejections
+                   == attempts, and shed requests never execute.
+
+Plus the per-tenant queue-wait EWMA regression (ManualClock): a flooded
+tenant's backlog must shed *its own* requests without inflating a
+compliant neighbor's estimate — the neighbor's calibrated EWMA wins over
+the polluted global one.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import ModelStore
+from repro.data import hospital_tables
+from repro.ml import DecisionTree, Pipeline, PipelineMetadata, StandardScaler
+from repro.relational.table import Table
+from repro.serve import (AdmissionConfig, DeadlineUnmeetable, ManualClock,
+                         PredictionService)
+
+pytestmark = pytest.mark.tier1
+
+N_ROWS = 400
+FEATS = ["age", "gender", "pregnant", "rcount"]
+SQL = "SELECT pid, PREDICT(MODEL='m') AS p FROM patient_info WHERE age > 30"
+QUERIES = [
+    SQL,
+    "SELECT pid, age, PREDICT(MODEL='m') AS p FROM patient_info "
+    "WHERE age > 45",
+    "SELECT pid FROM patient_info WHERE age > 60",
+]
+
+
+@pytest.fixture(scope="module")
+def base():
+    full = hospital_tables(N_ROWS, seed=7)["patient_info"]
+    data = {c: np.asarray(full.column(c)) for c in full.names}
+    sc = StandardScaler(FEATS).fit(data)
+    pipe = Pipeline([sc], DecisionTree(task="regression", max_depth=5),
+                    PipelineMetadata(name="m", task="regression"))
+    pipe.fit({k: data[k] for k in FEATS}, data["length_of_stay"])
+    store = ModelStore()
+    store.register_table("patient_info", full)
+    store.register_model("m", pipe)
+    return store, full
+
+
+def _sub(full: Table, lo: int, n: int) -> Table:
+    return Table({k: v[lo:lo + n] for k, v in full.columns.items()},
+                 full.valid[lo:lo + n], full.schema)
+
+
+def _stress(service, submit_one, n_threads=8, per_thread=6):
+    """N threads x per_thread submit+flush rounds; returns the resolved
+    outputs, asserting no deadlock and no worker error."""
+    results, errors = {}, []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            barrier.wait(timeout=30)
+            for i in range(per_thread):
+                ticket = submit_one(tid, i)
+                service.flush()
+                results[(tid, i)] = ticket.result(timeout=60.0)
+        except Exception as e:            # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "worker deadlocked"
+    assert not errors, errors
+    assert len(results) == n_threads * per_thread
+    return results
+
+
+@pytest.mark.timeout_guard(300)
+def test_ledger_balances_under_catalog_stress(base):
+    """Identical-catalog requests (the coalescing path): signature and
+    admission tiers balance exactly, and the registry snapshot agrees
+    with the raw stats it collects from."""
+    store, _ = base
+    service = PredictionService(store)
+    n_threads, per_thread = 8, 6
+    results = _stress(
+        service,
+        lambda tid, i: service.submit(QUERIES[(tid + i) % len(QUERIES)]),
+        n_threads, per_thread)
+    for out in results.values():
+        assert np.asarray(out.valid).any()
+
+    s = service.stats
+    assert s.cache_hits + s.cache_misses == s.batch_executions
+    assert s.batch_executions + s.coalesced_requests \
+        == n_threads * per_thread == s.submitted
+    assert s.queue_rejections == 0 and s.deadline_rejections == 0
+    # the registry is a view, not a second ledger: collected counters
+    # must equal the stats they sample
+    snap = service.metrics_snapshot()
+    assert snap["counters"]["repro_submitted_total"] == s.submitted
+    assert snap["counters"]["repro_batch_executions_total"] \
+        == s.batch_executions
+    assert snap["counters"]["repro_coalesced_requests_total"] \
+        == s.coalesced_requests
+    info = service.admission_info()
+    assert info["queue_depth_high_water"] >= 1
+    service.close()
+
+
+@pytest.mark.timeout_guard(300)
+def test_bucket_ledger_balances_under_override_stress(base):
+    """All-override requests (the stacked path): every execution performs
+    exactly one shape-bucket lookup — bucket_hits + bucket_compiles must
+    equal batch_executions, with row counts spanning several buckets."""
+    store, full = base
+    service = PredictionService(store, admission=AdmissionConfig(
+        min_bucket_rows=8))
+    sizes = [3, 8, 9, 17, 30, 33]
+    n_threads, per_thread = 8, 6
+    results = _stress(
+        service,
+        lambda tid, i: service.submit(
+            SQL, {"patient_info": _sub(full, 0, sizes[(tid + i)
+                                                     % len(sizes)])}),
+        n_threads, per_thread)
+    for (tid, i), out in results.items():
+        assert out.capacity == sizes[(tid + i) % len(sizes)]
+
+    s = service.stats
+    assert s.batch_executions > 0
+    assert s.bucket_hits + s.bucket_compiles == s.batch_executions
+    assert s.batch_executions + s.coalesced_requests \
+        == n_threads * per_thread == s.submitted
+    service.close()
+
+
+def test_shed_ledger_balances_on_manual_clock(base):
+    """Deterministic shedding audit: every attempt is admitted, coalesced
+    into an execution, or shed — and shed requests never execute."""
+    store, _ = base
+    clock = ManualClock()
+    service = PredictionService(store, clock=clock,
+                                admission=AdmissionConfig(
+                                    latency_budget_s=1.0, background=False))
+    # calibrate: one served request seeds the queue-wait and exec EWMAs
+    t0 = service.submit(SQL)
+    clock.advance(2.0)
+    assert service.admission_tick() == 1
+    t0.result(timeout=0)
+    est = service._deadline_estimate(
+        service._cache_key(service._to_plan(SQL), None)[0])
+    assert est is not None and est >= 2.0 * 0.9
+
+    attempts, shed = 0, 0
+    for deadline in (0.01, 100.0, 0.5, 100.0):
+        attempts += 1
+        try:
+            t = service.submit(SQL, deadline_s=deadline)
+        except DeadlineUnmeetable:
+            shed += 1
+            continue
+        clock.advance(1.5)
+        service.admission_tick()
+        t.result(timeout=0)
+
+    s = service.stats
+    assert shed == 2 == s.deadline_rejections
+    assert s.submitted == attempts - shed + 1          # +1: the calibrator
+    assert s.batch_executions + s.coalesced_requests == s.submitted
+    assert s.batch_executions + s.coalesced_requests \
+        + s.deadline_rejections + s.queue_rejections == attempts + 1
+    # the shed requests' traces carry the decision with both numbers
+    shed_traces = [t for t in service.traces()
+                   if t.find("deadline_shed") is not None]
+    assert len(shed_traces) == 2
+    ev = shed_traces[0].find("deadline_shed")
+    assert ev.attrs["estimate"] > ev.attrs["deadline"]
+    service.close()
+
+
+def test_per_tenant_ewma_isolates_shedding(base):
+    """Regression (ISSUE 9 satellite): _deadline_estimate must prefer the
+    tenant's own calibrated queue-wait EWMA.  Tenant A's 5s backlog and
+    tenant B's 0.1s waits pollute the *global* EWMA to ~4s; a 1s-deadline
+    request from B must still be admitted (its own estimate ~0.1s) while
+    the same request from A sheds — and before this mechanism existed, B
+    would have been shed on the fleet average."""
+    store, _ = base
+    clock = ManualClock()
+    service = PredictionService(store, clock=clock,
+                                admission=AdmissionConfig(
+                                    latency_budget_s=1.0, background=False))
+    # tenant A: one slow round calibrates its EWMA at 5.0s
+    ta = service.submit(SQL, tenant="A")
+    clock.advance(5.0)
+    service.admission_tick()
+    ta.result(timeout=0)
+    # tenant B: one fast round calibrates its EWMA at 0.1s; the global
+    # EWMA is now 5.0 + 0.2*(0.1-5.0) = 4.02s — useless for B
+    tb = service.submit(SQL, tenant="B")
+    clock.advance(0.1)
+    service.flush()                    # inside the budget: drain explicitly
+    tb.result(timeout=0)
+
+    key = service._cache_key(service._to_plan(SQL), None)[0]
+    est_a = service._deadline_estimate(key, "A")
+    est_b = service._deadline_estimate(key, "B")
+    est_global = service._deadline_estimate(key)
+    assert est_a == pytest.approx(5.0, rel=0.05)
+    assert est_b == pytest.approx(0.1, rel=0.5)
+    assert est_global == pytest.approx(4.02, rel=0.05)
+
+    # B's 1s deadline is fine on its own estimate (the global would shed)
+    tb2 = service.submit(SQL, tenant="B", deadline_s=1.0)
+    clock.advance(1.5)
+    service.admission_tick()
+    assert tb2.result(timeout=0) is not None
+    # the same deadline from flooded A sheds on A's own estimate
+    with pytest.raises(DeadlineUnmeetable):
+        service.submit(SQL, tenant="A", deadline_s=1.0)
+    # an uncalibrated tenant falls back to the (polluted) global estimate
+    with pytest.raises(DeadlineUnmeetable):
+        service.submit(SQL, tenant="C", deadline_s=1.0)
+
+    tinfo = service.tenant_info()
+    assert tinfo["A"]["deadline_rejections"] == 1
+    assert tinfo["B"]["deadline_rejections"] == 0
+    # the per-tenant EWMA gauge is exported for exactly A and B
+    text = service.metrics_text()
+    assert 'repro_tenant_queue_wait_ewma_seconds{tenant="A"} 5' in text
+    assert 'repro_tenant_queue_wait_ewma_seconds{tenant="B"}' in text
+    service.close()
