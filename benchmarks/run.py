@@ -75,7 +75,7 @@ def main() -> int:
                    fig2d_tree_gemm, fig3_integration, lossy_pushdown,
                    multi_tenant_saturation, plan_cache, pruning,
                    sharded_join_agg, sharded_scan, shuffle_join,
-                   subplan_reuse, telemetry_overhead)
+                   streaming_ingest, subplan_reuse, telemetry_overhead)
 
     n = 30_000 if args.quick else 200_000
     print("name,us_per_call,derived")
@@ -116,6 +116,10 @@ def main() -> int:
         ("telemetry_overhead", lambda: telemetry_overhead.run(
             n_rows=5_000 if args.quick else 20_000,
             iters=20 if args.quick else 40)),
+        ("streaming_ingest", lambda: streaming_ingest.run(
+            n_rows=20_000 if args.quick else 100_000,
+            append_rows=1_000 if args.quick else 2_000,
+            cycles=3 if args.quick else 5)),
     ]
     failures = 0
     for name, job in jobs:

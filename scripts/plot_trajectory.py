@@ -26,8 +26,13 @@ start where they started.  With ``--baseline`` the stdout table is
 restricted to the tracked metrics (the ones the trajectory gate
 defends); the series file always contains everything.
 
-Dependency-free on purpose: CI runs it right after the bench job and
-uploads the series next to the raw export.
+With ``--plots OUTDIR`` the script additionally renders the series as
+browsable history: one PNG per tracked benchmark row (every numeric
+metric of that row on one axes, run number on x) plus an ``index.html``
+linking them — the document the ``publish-trajectory`` CI job pushes to
+``gh-pages``.  Plot rendering is the one mode that needs matplotlib;
+the fold/series path stays dependency-free on purpose: CI runs it right
+after the bench job and uploads the series next to the raw export.
 """
 
 from __future__ import annotations
@@ -106,6 +111,77 @@ def render(doc: dict, baseline: dict) -> str:
     return "\n".join(lines)
 
 
+def _slug(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", name)
+
+
+def render_plots(doc: dict, baseline: dict, outdir: str) -> list:
+    """One PNG per benchmark row (tracked rows only when a baseline is
+    given, every row otherwise) and an ``index.html`` linking them.
+    Requires matplotlib — the only mode of this script that does."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError as exc:            # pragma: no cover - CI installs it
+        raise SystemExit(f"--plots needs matplotlib ({exc}); "
+                         f"pip install matplotlib or drop --plots")
+    os.makedirs(outdir, exist_ok=True)
+    runs = doc["runs"]
+    names = [n for n in sorted(doc["series"])
+             if not baseline or n in baseline]
+    pngs = []
+    for name in names:
+        metrics = doc["series"][name]
+        fig, ax = plt.subplots(figsize=(6.4, 3.2))
+        for metric in sorted(metrics):
+            if metric == "us_per_call" and len(metrics) > 1:
+                continue                  # derived metrics tell the story
+            pts = [(r, metrics[metric].get(str(r))) for r in runs]
+            pts = [(r, v) for r, v in pts if isinstance(v, (int, float))]
+            if not pts:
+                continue
+            ax.plot([r for r, _ in pts], [v for _, v in pts],
+                    marker="o", label=metric)
+        if not ax.lines:
+            plt.close(fig)
+            continue
+        floors = baseline.get(name, {}) if baseline else {}
+        for metric, floor_of in floors.items():
+            if isinstance(floor_of, dict) and "min_ratio" in floor_of:
+                ax.axhline(floor_of["min_ratio"], ls="--", lw=0.8,
+                           color="grey")
+        ax.set_title(name)
+        ax.set_xlabel("PR / BENCH_N")
+        ax.set_xticks(runs)
+        ax.grid(True, alpha=0.3)
+        ax.legend(fontsize=8)
+        fig.tight_layout()
+        png = f"{_slug(name)}.png"
+        fig.savefig(os.path.join(outdir, png), dpi=120)
+        plt.close(fig)
+        pngs.append((name, png))
+
+    items = "\n".join(
+        f'    <h2>{name}</h2>\n    <img src="{png}" alt="{name}">'
+        for name, png in pngs)
+    html = ("<!DOCTYPE html>\n<html>\n<head>\n"
+            "  <meta charset=\"utf-8\">\n"
+            "  <title>Benchmark trajectory</title>\n"
+            "  <style>body{font-family:sans-serif;max-width:720px;"
+            "margin:2em auto}img{max-width:100%}</style>\n"
+            "</head>\n<body>\n"
+            f"  <h1>Benchmark trajectory</h1>\n"
+            f"  <p>Runs (PR numbers): {', '.join(map(str, runs))}. "
+            "Dashed lines are committed baseline floors.</p>\n"
+            f"{items}\n</body>\n</html>\n")
+    with open(os.path.join(outdir, "index.html"), "w") as fh:
+        fh.write(html)
+    print(f"rendered {len(pngs)} plot(s) + index.html to {outdir}",
+          file=sys.stderr)
+    return pngs
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("exports", nargs="+",
@@ -116,6 +192,9 @@ def main() -> int:
     ap.add_argument("--baseline", default=None,
                     help="baseline.json: restrict the printed table to "
                          "tracked metrics")
+    ap.add_argument("--plots", metavar="OUTDIR", default=None,
+                    help="render per-benchmark PNG history plots plus an "
+                         "index.html into OUTDIR (needs matplotlib)")
     args = ap.parse_args()
 
     doc = fold(args.exports)
@@ -130,6 +209,8 @@ def main() -> int:
         with open(args.baseline) as fh:
             baseline = json.load(fh)
     print(render(doc, baseline))
+    if args.plots:
+        render_plots(doc, baseline, args.plots)
     return 0
 
 

@@ -406,12 +406,29 @@ def tree_strategy_costs(model, n_rows: float, n_features: int,
     return costs
 
 
+# A translated strategy must beat traversal's *predicted* cost by this
+# factor before we abandon the incumbent.  The calibration slopes are
+# best-of-3 microbenchmark fits, good to ~10% on a quiet host and worse on
+# a loaded CI runner — without the margin a forest sitting near the
+# crossover flips strategy run-to-run on measurement noise alone, and the
+# mispredicted side of a near-tie can be ~2x slower in reality (the linear
+# model ignores cache effects at forest sizes the calibration never ran).
+# Traversal is the safe incumbent: it never pays padding or lowering cost.
+_STRATEGY_MARGIN = 0.85
+
+
 def choose_tree_strategy(model, n_rows: float, n_features: int,
                          backend: Optional[str] = None, catalog=None
                          ) -> tuple:
     """Measured crossover: pick the cheapest of traversal / dense GEMM /
-    Pallas for this (model, n_rows, n_features, backend).  Returns
+    Pallas for this (model, n_rows, n_features, backend), keeping
+    traversal unless a translated strategy's predicted win exceeds the
+    calibration-noise margin (``_STRATEGY_MARGIN``).  Returns
     ``(strategy, costs)`` so callers can log the margin."""
     cal = calibrated_tree_costs(backend, catalog)
     costs = tree_strategy_costs(model, n_rows, n_features, cal)
-    return min(costs, key=costs.get), costs
+    best = min(costs, key=costs.get)
+    if best != "traversal" and \
+            costs[best] > _STRATEGY_MARGIN * costs["traversal"]:
+        best = "traversal"
+    return best, costs

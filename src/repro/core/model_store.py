@@ -48,6 +48,11 @@ __all__ = ["ColumnStats", "ModelStore", "AuditRecord", "content_fingerprint"]
 
 _ADDR_RE = re.compile(r" at 0x[0-9a-fA-F]+")
 
+# Append-lineage entries kept per table (version, rows): old enough
+# versions fall off the chain and lose their prefix-reuse proof, which is
+# safe — the serving layer then recomputes whole-table.
+_MAX_LINEAGE = 16
+
 # Identity-keyed memo for the (expensive) object branch of _canon_value:
 # walking a fitted model hashes every weight array, and the serving layer
 # computes a plan signature per request.  Registered artifacts are immutable
@@ -188,7 +193,7 @@ def content_fingerprint(obj: Any) -> str:
 @dataclasses.dataclass(frozen=True)
 class AuditRecord:
     timestamp: float
-    action: str          # register | read | commit | rollback | cluster
+    action: str          # register | read | commit | rollback | cluster | append
     subject: str
     version: Optional[int]
     principal: str
@@ -237,6 +242,10 @@ class ModelStore:
         self._tables: Dict[str, Table] = {}
         self._partitioned: Dict[str, Any] = {}     # name -> PartitionedTable
         self._table_versions: Dict[str, int] = {}
+        # append lineage: name -> ascending (version, rows) pairs; version
+        # v's rows are an immutable prefix of any later version in the same
+        # chain.  register_table resets the chain (rows replaced wholesale).
+        self._lineage: Dict[str, List[Tuple[int, int]]] = {}
         self._stats: Dict[str, Dict[str, ColumnStats]] = {}
         self._clusters: Dict[str, Any] = {}
         self._calibrations: Dict[Any, Any] = {}
@@ -249,11 +258,14 @@ class ModelStore:
     # -- invalidation hooks ---------------------------------------------------
     def add_invalidation_listener(self, fn) -> "Any":
         """Register ``fn(kind, name)`` to fire after every ``register_model``
-        (kind='model') or ``register_table`` (kind='table').  Caches keyed by
-        artifact content use this to *free* entries that reference the
-        re-registered name — content digests already make stale entries
-        unreachable, but without eviction they still occupy slots/bytes.
-        Returns an unsubscriber."""
+        (kind='model'), ``register_table`` (kind='table'), or stats-stable
+        ``append_rows`` (kind='append').  Caches keyed by artifact content
+        use this to *free* entries that reference the re-registered name —
+        content digests already make stale entries unreachable, but without
+        eviction they still occupy slots/bytes.  An 'append' is the one
+        kind that promises the old rows survive as an immutable prefix, so
+        listeners may *keep* warm state and serve deltas instead of
+        evicting.  Returns an unsubscriber."""
         self._invalidation_listeners.append(fn)
         return lambda: self._invalidation_listeners.remove(fn)
 
@@ -391,6 +403,7 @@ class ModelStore:
                 self._partitioned.pop(name, None)
             self._tables[name] = table
             self._table_versions[name] = version
+            self._lineage[name] = [(version, table.capacity)]
             stats: Dict[str, ColumnStats] = {}
             valid = np.asarray(table.valid)
             for cname in table.names:
@@ -405,6 +418,116 @@ class ModelStore:
                     if uniq.size <= max_distinct else None)
             self._stats[name] = stats
         self._notify_invalidation("table", name)
+
+    def append_rows(self, name: str, batch: Table,
+                    max_distinct: int = 64) -> int:
+        """Append ``batch`` to table ``name`` as a first-class ingest step
+        (streaming ingest) and return the new table version.
+
+        Unlike ``register_table`` — which replaces the rows wholesale and
+        invalidates everything derived from them — an append promises the
+        old version's rows are an *immutable prefix* of the new version:
+
+        - the version counter still bumps (so exact result-cache keys go
+          stale and nothing serves old-version answers as current), but
+          :meth:`version_lineage` records the ``(version, rows)`` chain so
+          caches can prove prefix reuse and recompute only the delta;
+        - a partitioned table keeps every existing partition object and
+          zone map untouched; fresh zone maps are collected only over the
+          appended row range (``PartitionedTable.append``);
+        - column stats merge conservatively (min/max extend, small distinct
+          sets union exactly; a too-large cardinality keeps the prefix
+          count as a lower bound).  When the merged stats equal the old
+          ones — an *in-domain* batch — listeners get ``kind='append'``:
+          the signal that every plan-level fact survives and only result
+          freshness moved.  Otherwise a full ``kind='table'`` invalidation
+          fires, because stats-derived plan facts may not hold for the
+          appended rows."""
+        with self._lock:
+            if name not in self._tables:
+                raise KeyError(f"table {name!r} not registered; "
+                               f"have {sorted(self._tables)}")
+            current = self._table_versions[name]
+            if batch.capacity == 0:
+                self._audit("append", name, current)
+                return current
+            base = self._tables[name]
+            combined = base.concat_rows(batch)
+            version = current + 1
+            old_pt = self._partitioned.get(name)
+            if old_pt is not None:
+                new_pt = old_pt.append(batch, combined,
+                                       max_domain=max_distinct)
+                new_pt.version = version
+                self._partitioned[name] = new_pt
+            self._tables[name] = combined
+            self._table_versions[name] = version
+            lineage = self._lineage.setdefault(
+                name, [(current, base.capacity)])
+            lineage.append((version, combined.capacity))
+            del lineage[:-_MAX_LINEAGE]
+            old_stats = self._stats.get(name, {})
+            merged = self._merge_stats(old_stats, batch, max_distinct)
+            stats_changed = merged != old_stats
+            if stats_changed:
+                self._stats[name] = merged
+            self._audit("append", name, version)
+        self._notify_invalidation(
+            "table" if stats_changed else "append", name)
+        return version
+
+    @staticmethod
+    def _merge_stats(old: Dict[str, ColumnStats], batch: Table,
+                     max_distinct: int) -> Dict[str, ColumnStats]:
+        """Column stats for prefix+batch without rescanning the prefix."""
+        stats = dict(old)
+        valid = np.asarray(batch.valid)
+        for cname in batch.names:
+            arr = np.asarray(batch.column(cname))[valid]
+            if arr.dtype.kind not in "iuf" or arr.size == 0:
+                continue
+            lo, hi = float(arr.min()), float(arr.max())
+            prev = stats.get(cname)
+            if prev is None:
+                uniq = np.unique(arr)
+                stats[cname] = ColumnStats(
+                    min=lo, max=hi, n_distinct=int(uniq.size),
+                    distinct_values=tuple(float(v) for v in uniq)
+                    if uniq.size <= max_distinct else None)
+                continue
+            if prev.distinct_values is not None:
+                union = sorted(set(prev.distinct_values)
+                               | {float(v) for v in np.unique(arr)})
+                n_distinct = len(union)
+                distinct = tuple(union) if len(union) <= max_distinct \
+                    else None
+            else:
+                # the prefix cardinality is a valid lower bound; keeping it
+                # (rather than guessing) also keeps the stats fingerprint
+                # stable, which is what lets warm plans survive the append
+                n_distinct = prev.n_distinct
+                distinct = None
+            stats[cname] = ColumnStats(
+                min=min(prev.min, lo), max=max(prev.max, hi),
+                n_distinct=n_distinct, distinct_values=distinct)
+        return stats
+
+    def version_lineage(self, name: str) -> Tuple[Tuple[int, int], ...]:
+        """Append lineage of a table: ascending ``(version, rows)`` pairs
+        ending at the current version.  Version ``v``'s rows are an
+        immutable, bit-identical prefix of any later version in the same
+        chain — the proof the serving layer needs to splice a cached
+        old-version result with delta-only compute.  ``register_table``
+        resets the chain (no prefix relationship across re-registrations);
+        the chain is bounded, so very old versions simply fall off and
+        their cached results take the whole-table fallback."""
+        with self._lock:
+            lineage = self._lineage.get(name)
+            if lineage:
+                return tuple(lineage)
+            v = self._table_versions.get(name, 0)
+            table = self._tables.get(name)
+            return ((v, table.capacity),) if table is not None and v else ()
 
     def table_version(self, name: str) -> int:
         """Monotone per-name registration counter.  Materialized-result

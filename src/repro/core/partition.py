@@ -296,6 +296,89 @@ class PartitionedTable:
                              columns=zones)))
         return cls(table, parts, partition_by=partition_by)
 
+    def append(self, batch: Table, combined: Table,
+               partition_rows: Optional[int] = None,
+               max_domain: int = _MAX_DOMAIN) -> "PartitionedTable":
+        """Incremental partitioning for an append (streaming ingest).
+
+        Returns a new :class:`PartitionedTable` over ``combined`` (= this
+        table's rows followed by ``batch``'s rows, see
+        ``Table.concat_rows``) that *reuses* every existing
+        :class:`Partition` object — and therefore every existing zone map —
+        untouched, collecting fresh zone maps only over the appended row
+        range.  Appends never extend the (possibly ragged) last partition:
+        the batch always opens a new partition at the old row boundary, so
+        pre-existing partitions keep their identity and anything proven
+        about them (pruning decisions, cached per-partition partials)
+        stays provably valid for the prefix.
+
+        For a key-range-partitioned table the batch must itself be sorted
+        on the key and start *strictly after* the last existing key — one
+        key value must never straddle a partition boundary (the invariant
+        partition-wise joins rely on); violating batches raise, and the
+        caller falls back to a full re-registration."""
+        old_n = self.table.capacity
+        bn = batch.capacity
+        if combined.capacity != old_n + bn:
+            raise ValueError(
+                f"combined table has {combined.capacity} rows, expected "
+                f"base {old_n} + batch {bn}")
+        if bn == 0:
+            out = PartitionedTable(combined, self.partitions,
+                                   partition_by=self.partition_by)
+            out._host_view = self._host_view
+            return out
+        if partition_rows is None:
+            partition_rows = max((p.n_rows for p in self.partitions),
+                                 default=bn)
+        if self.partition_by is not None:
+            keys = self._sorted_key_column(batch, self.partition_by)
+            if old_n:
+                last = np.asarray(
+                    self.table.column(self.partition_by)[-1])
+                if keys[0] <= last:
+                    raise ValueError(
+                        f"append to a table range-partitioned on "
+                        f"{self.partition_by!r} must start strictly after "
+                        f"the last existing key ({last}); got {keys[0]}")
+            ranges = []
+            start = 0
+            while start < bn:
+                stop = min(start + partition_rows, bn)
+                while stop < bn and keys[stop] == keys[stop - 1]:
+                    stop += 1               # snap: keep equal keys together
+                ranges.append((start, stop))
+                start = stop
+        else:
+            ranges = [(s, min(s + partition_rows, bn))
+                      for s in range(0, bn, partition_rows)]
+        bvalid = np.asarray(batch.valid)
+        bcols = {name: np.asarray(batch.column(name))
+                 for name in batch.names}
+        parts = list(self.partitions)
+        for start, stop in ranges:
+            pvalid = bvalid[start:stop]
+            zones = {
+                name: _column_zone(arr[start:stop], pvalid, max_domain)
+                for name, arr in bcols.items()
+                if arr.dtype.kind in "iufb"
+            }
+            parts.append(Partition(
+                index=len(parts), start=old_n + start, stop=old_n + stop,
+                zone=ZoneMap(n_rows=stop - start,
+                             null_count=int((~pvalid).sum()),
+                             columns=zones)))
+        out = PartitionedTable(combined, parts,
+                               partition_by=self.partition_by)
+        if self._host_view is not None:
+            # extend the memoized host snapshot instead of re-downloading
+            # the whole (grown) table on the next sharded serve
+            hcols, hvalid = self._host_view
+            out._host_view = (
+                {k: np.concatenate([hcols[k], bcols[k]]) for k in hcols},
+                np.concatenate([hvalid, bvalid]))
+        return out
+
     @property
     def n_partitions(self) -> int:
         return len(self.partitions)

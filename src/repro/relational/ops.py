@@ -22,7 +22,8 @@ from .table import ColumnSchema, Schema, Table
 
 __all__ = [
     "filter_", "project", "with_column", "join_unique", "group_aggregate",
-    "partial_aggregate", "combine_partials", "order_by", "limit",
+    "partial_aggregate", "combine_partials", "merge_partial_states",
+    "order_by", "limit",
     "union_all", "AGGREGATIONS", "COMBINABLE_AGGS",
 ]
 
@@ -373,6 +374,61 @@ def combine_partials(partials: Sequence[Table], key: Optional[str],
         cols[out_name] = val
         fields.append(ColumnSchema(out_name, val.dtype))
     return Table(cols, counts > 0, Schema(tuple(fields)))
+
+
+def merge_partial_states(partials: Sequence[Table], key: Optional[str],
+                         aggs: Mapping[str, Tuple[str, str]]) -> Table:
+    """Fold several :func:`partial_aggregate` states into **one
+    still-partial** state (incremental view maintenance support).
+
+    Where :func:`combine_partials` finalizes (turning counts back into
+    validity and dividing means out), this keeps the state mergeable: sums,
+    counts and ``@sum``/``@n`` columns add, ``min``/``max`` fold, the key
+    column and schema pass through.  The streaming-ingest path caches the
+    merged state of a table's immutable prefix so that, after an append,
+    ``combine_partials([prefix_state] + delta_partials)`` answers the query
+    touching only the delta partitions.  For integer-valued data (and
+    min/max/count always) the fold is exact, so the delta answer is
+    bit-identical to a full recompute; general float sums reassociate — the
+    same contract the sharded two-phase path already carries."""
+    if not partials:
+        raise ValueError("merge_partial_states needs at least one partial")
+    if len(partials) == 1:
+        return partials[0]
+    base = partials[0]
+
+    def stacked(name: str) -> jnp.ndarray:
+        return jnp.asarray(np.stack(
+            [np.asarray(p.columns[name]) for p in partials], axis=0))
+
+    fold_ops: Dict[str, str] = {_PCOUNT: "sum"}
+    for out_name, (fn, _column) in aggs.items():
+        if fn in ("mean", "avg"):
+            fold_ops[out_name + "@sum"] = "sum"
+            fold_ops[out_name + "@n"] = "sum"   # global states only
+        elif fn in ("min", "max"):
+            fold_ops[out_name] = fn
+        else:                                    # sum, count
+            fold_ops[out_name] = "sum"
+
+    cols: Dict[str, jnp.ndarray] = {}
+    fields: List[ColumnSchema] = []
+    for f in base.schema.columns:
+        if key is not None and f.name == key:
+            cols[f.name] = base.columns[f.name]
+            fields.append(f)
+            continue
+        op = fold_ops[f.name]
+        s = stacked(f.name)
+        if op == "min":
+            val = jnp.min(s, axis=0)
+        elif op == "max":
+            val = jnp.max(s, axis=0)
+        else:
+            val = jnp.sum(s, axis=0)
+        cols[f.name] = val
+        fields.append(ColumnSchema(f.name, val.dtype, f.dictionary))
+    return Table(cols, base.valid, Schema(tuple(fields)))
 
 
 def order_by(table: Table, key: str, descending: bool = False) -> Table:

@@ -213,6 +213,40 @@ class Table:
         return Table({n: self.columns[n] for n in names}, self.valid,
                      self.schema.select(names))
 
+    def concat_rows(self, batch: "Table") -> "Table":
+        """This table's rows followed by ``batch``'s rows — the append-ingest
+        primitive (``ModelStore.append_rows``).  The schemas must agree
+        column-for-column: same names, same dtypes, and for
+        dictionary-encoded columns the *same dictionary*, so the appended
+        codes mean what the prefix codes mean.  The result keeps this
+        table's schema; the prefix rows are bit-identical to this table's."""
+        if sorted(self.columns) != sorted(batch.columns):
+            raise ValueError(
+                f"append schema mismatch: have {sorted(self.columns)}, "
+                f"batch has {sorted(batch.columns)}")
+        for name in self.columns:
+            mine = self.schema.field(name)
+            theirs = batch.schema.field(name)
+            if mine.dictionary != theirs.dictionary:
+                raise ValueError(
+                    f"column {name!r}: dictionary mismatch — appended rows "
+                    f"must be encoded with the base table's dictionary")
+            if self.columns[name].dtype != batch.columns[name].dtype:
+                raise ValueError(
+                    f"column {name!r}: dtype {batch.columns[name].dtype} "
+                    f"!= base dtype {self.columns[name].dtype}")
+        # Host-side concatenation (numpy memcpy + one upload per column):
+        # the result shape grows with every append, so device-side
+        # ``jnp.concatenate`` would eagerly compile a fresh XLA kernel per
+        # ingest cycle — an unbounded compile stream on the hot path.
+        cols = {name: jnp.asarray(np.concatenate(
+                    [np.asarray(self.columns[name]),
+                     np.asarray(batch.columns[name])]))
+                for name in self.columns}
+        valid = jnp.asarray(np.concatenate(
+            [np.asarray(self.valid), np.asarray(batch.valid)]))
+        return Table(cols, valid, self.schema)
+
     # -- materialization (host side; not jittable) --------------------------
     def to_pydict(self, decode: bool = True) -> Dict[str, list]:
         valid = np.asarray(self.valid)

@@ -174,6 +174,13 @@ class AdmissionConfig:
       ``Batcher.is_cold`` seam (the service injects an executable-cache
       peek); warm groups are never deferred, and ``drain()`` ignores the
       cap — an explicit flush leaves nothing behind.
+    - ``max_staleness_s`` — service-wide freshness SLA default under
+      streaming ingest: requests that carry no
+      ``RequestContext.max_staleness_s`` (and whose tenant policy sets
+      none) inherit this budget.  A request whose only missed cache key is
+      an *append* within the budget may then be answered from the
+      pre-append snapshot instead of computing the delta (None = always
+      serve the current version; the conservative default).
     """
 
     latency_budget_s: float = 0.002
@@ -189,6 +196,7 @@ class AdmissionConfig:
     max_latency_budget_s: float = 8e-3
     adaptive_alpha: float = 0.2
     max_tenant_compiles: int = 0
+    max_staleness_s: Optional[float] = None
 
 
 @dataclasses.dataclass

@@ -250,6 +250,20 @@ class CostAwareCache:
         e = self._entries.pop(key)
         self.bytes_in_use -= e.nbytes
 
+    def pop(self, key: Any) -> Optional[CacheEntry]:
+        """Remove one entry (refunding its byte charge) and return it, or
+        ``None`` if absent.  Not an eviction in the stats sense: the caller
+        is *superseding* the entry — the streaming-ingest path uses this to
+        retire a prefix result the moment its spliced successor (covering
+        strictly more rows of the same lineage) has been stored, so the two
+        never double-charge the bytes budget."""
+        with self._lock:
+            if key not in self._entries:
+                return None
+            entry = self._entries[key]
+            self._remove(key)
+            return entry
+
     def evict_if(self, pred: Callable[[CacheEntry], bool]) -> List[Any]:
         """Evict every entry matching ``pred``; returns evicted keys."""
         with self._lock:

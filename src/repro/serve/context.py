@@ -49,6 +49,15 @@ class RequestContext:
     session: Optional[str] = None
     priority: int = 0
     deadline_s: Optional[float] = None
+    #: Freshness SLA under streaming ingest: a non-None budget says "an
+    #: answer computed over a snapshot at most this many seconds old is
+    #: acceptable".  When the only thing that changed since a cached result
+    #: was produced is an *append* within the budget, the service may serve
+    #: the pre-append snapshot instead of touching the delta rows at all.
+    #: ``None`` (default) always demands the current version.  Participates
+    #: in equality on purpose: requests with different freshness demands
+    #: must not coalesce into one answer.
+    max_staleness_s: Optional[float] = None
     trace: Optional[Any] = dataclasses.field(default=None, compare=False,
                                              repr=False)
 
@@ -75,6 +84,9 @@ class TenantPolicy:
     max_queue: Optional[int] = None
     result_cache_bytes: int = 0
     result_cache_entries: int = 0
+    #: Tenant-wide freshness SLA default (see
+    #: ``RequestContext.max_staleness_s``); a request-level value wins.
+    max_staleness_s: Optional[float] = None
 
 
 class Session:
@@ -89,13 +101,15 @@ class Session:
 
     def __init__(self, service, tenant: Optional[str] = None,
                  session_id: Optional[str] = None, priority: int = 0,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 max_staleness_s: Optional[float] = None):
         if session_id is None:
             Session._COUNTER[0] += 1
             session_id = f"session-{Session._COUNTER[0]}"
         self.service = service
         self.ctx = RequestContext(tenant=tenant, session=session_id,
-                                  priority=priority, deadline_s=deadline_s)
+                                  priority=priority, deadline_s=deadline_s,
+                                  max_staleness_s=max_staleness_s)
 
     @property
     def tenant(self) -> Optional[str]:

@@ -115,7 +115,7 @@ from ..core.ir import (Node, Plan, ROW_LOCAL_OPS, bucketed_signature,
 from ..core.optimizer import (CrossOptimizer, OptimizationReport,
                               OptimizerConfig, referenced_models)
 from ..core.sql_frontend import parse_query
-from ..relational.ops import combine_partials
+from ..relational.ops import combine_partials, merge_partial_states
 from ..relational.table import Schema, Table
 from .admission import (AdmissionConfig, AdmissionLoop, AdmissionQueueFull,
                         Batcher, Clock, DeadlineUnmeetable, ReadyGroup,
@@ -205,6 +205,15 @@ class ServiceStats:
     # SQL front door
     sql_parses: int = 0             # SQL texts parsed (parse-cache misses)
     sql_parse_hits: int = 0         # SQL texts served from the parse cache
+    # streaming ingest (ModelStore.append_rows front door)
+    appends_observed: int = 0       # stats-stable append events seen
+    delta_serves: int = 0           # serves that executed only appended rows
+    delta_rows_scanned: int = 0     # appended rows touched by delta serves
+    delta_fallbacks: int = 0        # post-append serves sent whole-table
+    stale_serves: int = 0           # pre-append snapshots served within SLA
+    prefix_supersedes: int = 0      # prefix entries retired by delta results
+    append_upgrades: int = 0        # capture entries re-wired to splice when
+                                    # their table grew under them
 
 
 @dataclasses.dataclass
@@ -237,6 +246,8 @@ class SubplanRef:
     tags: Tuple[Any, ...]            # ("model", name) / ("table", name)
     n_nodes: int
     _fn: Any = None                  # lazily compiled subtree executable
+    _raw_fn: Any = None              # unjitted subtree closure; the delta
+                                     # tier re-jits it per append bucket
 
     def describe(self) -> str:
         root = self.subtree_plan.nodes[self.subtree_plan.output]
@@ -426,6 +437,29 @@ def _slice_table(table: Table, start: int, size: int) -> Table:
     return _pad_table(part, size)
 
 
+def _slice_table_host(table: Table, start: int, size: int) -> Table:
+    """Row-range slice + False-padding to exactly ``size`` rows, done
+    **host-side** (numpy memcpy + one device upload per column).
+
+    The streaming-ingest paths slice at an offset that moves with every
+    append, over a table whose shape also grows with every append:
+    device-side slicing would eagerly compile a fresh XLA kernel per
+    (shape, bounds) pair on every cycle — the host route compiles
+    nothing and hands the delta twin stable bucket-sized shapes."""
+    end = min(start + size, table.capacity)
+    pad = size - (end - start)
+    cols = {}
+    for k, v in table.columns.items():
+        col = np.asarray(v)[start:end]
+        if pad:
+            col = np.pad(col, [(0, pad)] + [(0, 0)] * (col.ndim - 1))
+        cols[k] = jnp.asarray(col)
+    valid = np.asarray(table.valid)[start:end]
+    if pad:
+        valid = np.pad(valid, (0, pad))
+    return Table(cols, jnp.asarray(valid), table.schema)
+
+
 def _stack_pad_host(tables: List[Table], target: int) -> Table:
     """Stack request tables and pad to ``target`` rows **host-side**
     (numpy memcpy + one device upload per column).  Device-side
@@ -496,6 +530,33 @@ def _concat_outputs(pieces: List[Any]) -> Any:
         valid = jnp.concatenate([p.valid for p in pieces], axis=0)
         return Table(cols, valid, base.schema)
     return jnp.concatenate(pieces, axis=0)
+
+
+def _concat_outputs_host(pieces: List[Any]) -> Any:
+    """``_concat_outputs`` routed through host numpy.  The delta-splice
+    path concatenates a prefix value whose row count grows with every
+    append — device-side concat would eagerly compile a new XLA kernel
+    per ingest cycle, while a host memcpy + one upload compiles nothing
+    (same rationale as ``_stack_pad_host``)."""
+    if isinstance(pieces[0], Table):
+        base = pieces[0]
+        cols = {k: jnp.asarray(np.concatenate(
+                    [np.asarray(p.columns[k]) for p in pieces], axis=0))
+                for k in base.columns}
+        valid = jnp.asarray(np.concatenate(
+            [np.asarray(p.valid) for p in pieces], axis=0))
+        return Table(cols, valid, base.schema)
+    return jnp.asarray(np.concatenate(
+        [np.asarray(p) for p in pieces], axis=0))
+
+
+def _trim_rows_host(out: Any, n: int) -> Any:
+    """Host-side ``_trim_rows`` — the delta tail length varies with each
+    append's batch size, so a device slice would compile per size."""
+    if isinstance(out, Table):
+        return Table({k: np.asarray(v)[:n] for k, v in out.columns.items()},
+                     np.asarray(out.valid)[:n], out.schema)
+    return np.asarray(out)[:n]
 
 
 def _round_up(n: int, multiple: int) -> int:
@@ -680,6 +741,11 @@ class PredictionService:
         # (invalidation hooks clear it), and the optimizer copies its input
         # plan, so a cached parse is never mutated by compilation.
         self._parse_cache: Dict[str, Plan] = {}
+        # Streaming ingest: table -> injected-clock time of its most recent
+        # stats-stable append (the 'append' invalidation kind).  The
+        # freshness-SLA tier compares a request's max_staleness_s budget
+        # against this age; a full re-registration clears the entry.
+        self._append_times: Dict[str, float] = {}
         self._exec_cache = CostAwareCache(max_entries=max_cache_entries,
                                           max_bytes=exec_cache_bytes)
         self._result_cache: Optional[CostAwareCache] = (
@@ -1000,8 +1066,26 @@ class PredictionService:
     def _on_artifact_registered(self, kind: str, name: str) -> None:
         """ModelStore hook: free cache entries referencing a re-registered
         model/table.  Content digests already guarantee the *next* lookup
-        misses; this reclaims the budget stale entries occupy."""
+        misses; this reclaims the budget stale entries occupy.
+
+        ``kind='append'`` is the streaming-ingest contract: rows were
+        appended to ``name`` with merged column stats *unchanged*, so every
+        compiled plan and cached result stays bitwise-valid over the rows
+        it covers — version-vector cache keys already route exact lookups
+        past pre-append entries, and the delta/staleness tiers put the
+        surviving prefix entries to work.  Evicting here would throw away
+        exactly the reuse the append path exists to preserve, so the only
+        bookkeeping is the append timestamp the freshness SLA reads."""
+        if kind == "append":
+            self._append_times[name] = self.clock.monotonic()
+            with self._lock:
+                self.stats.appends_observed += 1
+            return
         tag = (kind, name)
+        if kind == "table":
+            # full re-registration: the append timeline restarts with the
+            # new data (a later append to the new table stamps it afresh)
+            self._append_times.pop(name, None)
         evicted = len(self._exec_cache.evict_by_tag(tag))
         if self._result_cache is not None:
             evicted += len(self._result_cache.evict_by_tag(tag))
@@ -1029,13 +1113,15 @@ class PredictionService:
 
     def session(self, tenant: Optional[str] = None,
                 session_id: Optional[str] = None, priority: int = 0,
-                deadline_s: Optional[float] = None) -> Session:
+                deadline_s: Optional[float] = None,
+                max_staleness_s: Optional[float] = None) -> Session:
         """Open a long-lived front-door handle: every ``sql``/``submit``/
-        ``predict`` through it carries this tenant/priority/deadline
-        context.  Sessions are free to create and need no teardown (all
-        state lives in the service)."""
+        ``predict`` through it carries this tenant/priority/deadline/
+        freshness context.  Sessions are free to create and need no
+        teardown (all state lives in the service)."""
         return Session(self, tenant=tenant, session_id=session_id,
-                       priority=priority, deadline_s=deadline_s)
+                       priority=priority, deadline_s=deadline_s,
+                       max_staleness_s=max_staleness_s)
 
     def _tenant_stat(self, tenant: Optional[str]) -> Optional[TenantStats]:
         """Tenant ledger accessor; call while holding ``self._lock``."""
@@ -1049,7 +1135,8 @@ class PredictionService:
     @staticmethod
     def _resolve_ctx(ctx: Optional[RequestContext],
                      tenant: Optional[str], priority: int,
-                     deadline_s: Optional[float]
+                     deadline_s: Optional[float],
+                     max_staleness_s: Optional[float] = None
                      ) -> Optional[RequestContext]:
         """Fold loose kwargs into a context.  Returns ``None`` when the
         caller supplied nothing — the single-tenant path stays ctx-free so
@@ -1057,10 +1144,12 @@ class PredictionService:
         pre-tenant one."""
         if ctx is not None:
             return ctx
-        if tenant is None and not priority and deadline_s is None:
+        if tenant is None and not priority and deadline_s is None \
+                and max_staleness_s is None:
             return None
         return RequestContext(tenant=tenant, priority=priority,
-                              deadline_s=deadline_s)
+                              deadline_s=deadline_s,
+                              max_staleness_s=max_staleness_s)
 
     def _is_cold_key(self, batch_key: Any) -> bool:
         """Whether serving this batch key would compile (no executable-
@@ -1151,6 +1240,63 @@ class PredictionService:
                 tuple((t, self._table_version(t)) for t in ref.scan_tables),
                 self.execution_config.cache_key(), self.jit)
 
+    # -- streaming-ingest plumbing -------------------------------------------
+    def _version_lineage(self, name: str) -> Tuple[Tuple[int, int], ...]:
+        """The catalog's append lineage for ``name``: ``(version, rows)``
+        pairs, oldest first, where each version's rows are a *prefix* of
+        every later version's (appends never rewrite existing rows).
+        Empty for catalogs without streaming ingest."""
+        getter = getattr(self.catalog, "version_lineage", None)
+        return getter(name) if getter is not None else ()
+
+    def _staleness_budget(self, ctx: Optional[RequestContext]
+                          ) -> Optional[float]:
+        """Effective freshness SLA for one request: request context ->
+        tenant policy -> service-wide admission default, first non-None
+        wins.  ``None`` means the request demands the current version."""
+        if ctx is not None:
+            if ctx.max_staleness_s is not None:
+                return ctx.max_staleness_s
+            if ctx.tenant is not None:
+                policy = self.tenants.get(ctx.tenant)
+                if policy is not None \
+                        and policy.max_staleness_s is not None:
+                    return policy.max_staleness_s
+        return self.batcher.config.max_staleness_s
+
+    def _prefix_entry(self, ref: SubplanRef
+                      ) -> Optional[Tuple[Tuple, Any, int]]:
+        """On an exact result-key miss, look for the same subtree's value
+        cached at an *earlier version of the same lineage* — i.e. computed
+        over a strict row-prefix of the current table.  Sound because the
+        lineage's tail version is required to match the live version (a
+        full re-registration resets the lineage, so values from other
+        data can never pose as prefixes).  Returns ``(old_key, entry,
+        prefix_rows)`` or ``None``; single-scan subtrees only (a multi-
+        table subtree's rows have no prefix correspondence)."""
+        if self._result_cache is None or len(ref.scan_tables) != 1:
+            return None
+        (t,) = ref.scan_tables
+        lineage = self._version_lineage(t)
+        if len(lineage) < 2 or lineage[-1][0] != self._table_version(t):
+            return None
+        cur_rows = lineage[-1][1]
+        cfg_key = self.execution_config.cache_key()
+        for version, rows in reversed(lineage[:-1]):
+            if rows >= cur_rows:
+                continue
+            old_key = (ref.sig, ((t, version),), cfg_key, self.jit)
+            entry = self._result_cache.entry(old_key)
+            if entry is None:
+                continue
+            try:
+                if _rows_of(entry.value) != rows:
+                    continue           # no row alignment (e.g. aggregate)
+            except (AttributeError, IndexError, TypeError):
+                continue
+            return old_key, entry, rows
+        return None
+
     def _subplan_ref(self, plan: Plan, nid: str, sig: str) -> SubplanRef:
         nids = subtree_nodes(plan, nid)
         sub = Plan({i: plan.nodes[i].copy() for i in nids}, output=nid)
@@ -1223,8 +1369,7 @@ class PredictionService:
         """Execute the subtree plan standalone (result-cache miss after
         eviction/invalidation) and repopulate the cache."""
         if ref._fn is None:
-            fn = compile_plan(ref.subtree_plan, self.catalog,
-                              self.execution_config)
+            fn = self._subtree_raw_fn(ref)
             ref._fn = jax.jit(fn) if self.jit else fn
         tabs = {t: self.catalog.get_table(t) for t in ref.scan_tables}
         t0 = time.perf_counter()
@@ -1234,6 +1379,15 @@ class PredictionService:
         with self._lock:
             self.stats.rematerializations += 1
         return value
+
+    def _subtree_raw_fn(self, ref: SubplanRef) -> Any:
+        """The subtree's unjitted closure, compiled lazily and memoized on
+        the ref — shared by whole-table rematerialization and the delta
+        tier's shape-bucket twins (which re-jit it per append bucket)."""
+        if ref._raw_fn is None:
+            ref._raw_fn = compile_plan(ref.subtree_plan, self.catalog,
+                                       self.execution_config)
+        return ref._raw_fn
 
     def _jit(self, fn):
         """jax.jit with trace accounting: the counter bumps run as Python
@@ -1256,11 +1410,13 @@ class PredictionService:
     def compile(self, query: Union[str, Plan],
                 tables: Optional[Dict[str, Table]] = None,
                 _key: Optional[Tuple[Tuple, str]] = None,
+                ctx: Optional[RequestContext] = None,
                 trace: Any = NULL_TRACE) -> CompiledPrediction:
         """Cache lookup; on miss, optimize + codegen + jit once.  ``_key``
         lets flush() reuse the cache key it already computed for grouping
         (key computation hashes the whole plan — not free on the warm
-        path)."""
+        path).  ``ctx`` informs the append-upgrade decision only (whether
+        a freshness SLA could recover a non-row-local subtree)."""
         plan = self._to_plan(query)
         key, sig = _key if _key is not None \
             else self._cache_key(plan, tables)
@@ -1270,6 +1426,8 @@ class PredictionService:
                 self.stats.cache_hits += 1
             trace.event("executable_cache", result="hit")
             upgraded = self._maybe_upgrade_to_splice(key, hit)
+            if upgraded is None:
+                upgraded = self._maybe_append_upgrade(key, hit, ctx)
             return upgraded if upgraded is not None else hit
         with self._lock:
             self.stats.cache_misses += 1
@@ -1527,6 +1685,37 @@ class PredictionService:
         entry = self._result_cache.entry(self._result_key(ref))
         if entry is None or ("producer", key) in entry.tags:
             return None
+        return self._upgrade_to_splice(key, hit, ref, "splice_upgrades")
+
+    def _maybe_append_upgrade(self, key: Tuple, hit: CompiledPrediction,
+                              ctx: Optional[RequestContext] = None
+                              ) -> Optional[CompiledPrediction]:
+        """Warm-hit path under streaming ingest: a capture-compiled entry
+        whose own cached subtree value went stale because its table *grew*
+        (the exact result key misses, but a strict prefix of the same
+        lineage is resident) re-wires to its residual once.  The spliced
+        execution then recovers the value incrementally — delta rows only
+        for row-local subtrees, or the pre-append snapshot within the
+        freshness SLA — instead of re-running the fused whole-table
+        program over rows it already processed.  The producer-stays-fused
+        guarantee is untouched: while the exact value is resident this is
+        a no-op, so append-free workloads never see it."""
+        if hit.capture is None or self._result_cache is None:
+            return None
+        ref = hit.capture
+        if self._result_cache.entry(self._result_key(ref)) is not None:
+            return None                # exact value resident: stay fused
+        if self._prefix_entry(ref) is None:
+            return None
+        row_local = all(n.op in _ROW_LOCAL_OPS
+                        for n in ref.subtree_plan.nodes.values())
+        if not row_local and self._staleness_budget(ctx) is None:
+            return None     # neither delta nor stale serve could recover it
+        return self._upgrade_to_splice(key, hit, ref, "append_upgrades")
+
+    def _upgrade_to_splice(self, key: Tuple, hit: CompiledPrediction,
+                           ref: SubplanRef, stat_name: str
+                           ) -> CompiledPrediction:
         t0 = time.perf_counter()
         residual = self._residual_plan(hit.plan, ref.subtree_plan.output, ref)
         raw_fn = compile_plan(residual, self.catalog, self.execution_config)
@@ -1553,7 +1742,8 @@ class PredictionService:
             key, compiled, cost_s=compiled.compile_time_s,
             nbytes=nbytes, tags=tags)
         with self._lock:
-            self.stats.splice_upgrades += 1
+            setattr(self.stats, stat_name,
+                    getattr(self.stats, stat_name) + 1)
             self.stats.evictions += len(evicted)
         return compiled
 
@@ -1700,6 +1890,7 @@ class PredictionService:
                  store_capture: bool = True,
                  params: Optional[Dict[str, Any]] = None,
                  tenant: Optional[str] = None,
+                 ctx: Optional[RequestContext] = None,
                  trace: Any = NULL_TRACE) -> Any:
         """``store_capture=False`` executes a capture-compiled plan without
         populating the result cache — used when the inputs are not the
@@ -1715,7 +1906,8 @@ class PredictionService:
         with self._lock:
             self.stats.batch_executions += 1
         if compiled.splice is not None:
-            out = self._execute_spliced(compiled, tabs, trace=trace)
+            out = self._execute_spliced(compiled, tabs, ctx=ctx,
+                                        trace=trace)
         elif not params and self._should_shard(compiled, tables):
             out = self._execute_sharded(compiled, tabs, store_capture,
                                         tenant=tenant, trace=trace)
@@ -1867,20 +2059,61 @@ class PredictionService:
         racing the invalidation hook) voids both the pruned-partition set
         *and* the co-partitioning proof, so the serve falls back to
         whole-table execution — pruning and distribution are only ever
-        optimizations."""
+        optimizations.  One exception earns a cheaper path: a mismatch
+        that the catalog's *append lineage* explains (rows were appended;
+        every pre-append partition is untouched) keeps two-phase
+        aggregation incremental — the cached prefix partial-state folds
+        with fresh partials over only the delta partitions (partial states
+        are additive by construction, see ``merge_partial_states``)."""
         dist = compiled.dist
         getter = getattr(self.catalog, "get_partitioned", None)
         pts = {}
+        stale: Set[str] = set()
         for t in dist.part_tables:
             pt = getter(t) if getter is not None else None
-            if pt is None or (t, pt.version) not in compiled.catalog_versions:
+            if pt is None:
                 return self._execute_whole(compiled, tabs, store_capture)
+            if (t, pt.version) not in compiled.catalog_versions:
+                stale.add(t)
             pts[t] = pt
         if dist.stages:
+            # Pre-validate every stage before running any: a stage touching
+            # a stale table must be recoverable from a cached prefix state
+            # over only its delta partitions, else the whole plan takes the
+            # sound whole-table fallback (partial work would be wasted).
+            preps: Dict[int, Tuple] = {}
+            for i, stage in enumerate(dist.stages):
+                if not any(t in stale for t in stage.part_tables):
+                    continue
+                prep = self._agg_delta_prep(stage, pts)
+                if prep is None:
+                    with self._lock:
+                        self.stats.delta_fallbacks += 1
+                    trace.event("delta_fallback", slot=stage.slot)
+                    return self._execute_whole(compiled, tabs,
+                                               store_capture)
+                preps[i] = prep
             slots: Dict[str, Any] = {}
-            for stage in dist.stages:
-                combine = (lambda partials, _s=stage:
-                           combine_partials(partials, _s.key, _s.aggs))
+            for i, stage in enumerate(dist.stages):
+                prep = preps.get(i)
+                pt = pts[stage.anchor]
+                # Capture the merged partial state whenever this stage's
+                # serve covers the whole table (no pruning, single-table
+                # stage): the state is what a future append extends.
+                keep_state = self._result_cache is not None \
+                    and self._stage_state_eligible(stage, pt)
+                state_box: List[Any] = []
+                prefix_state = prep[1].value if prep is not None else None
+
+                def combine(partials, _s=stage, _pre=prefix_state,
+                            _keep=keep_state, _box=state_box):
+                    parts = list(partials) if _pre is None \
+                        else [_pre] + list(partials)
+                    if _keep:
+                        _box.append(merge_partial_states(parts, _s.key,
+                                                         _s.aggs))
+                    return combine_partials(parts, _s.key, _s.aggs)
+
                 if stage.exchange is not None:
                     ok, combined, n_units = self._run_exchange(
                         compiled, stage, pts, combine=combine, trace=trace)
@@ -1889,8 +2122,33 @@ class PredictionService:
                                                    store_capture)
                 else:
                     combined, n_units = self._run_partition_wise(
-                        compiled, stage, pts, combine=combine, trace=trace)
+                        compiled, stage, pts, combine=combine,
+                        surviving=prep[3] if prep is not None else None,
+                        trace=trace)
                 slots[stage.slot] = combined
+                if keep_state and state_box:
+                    skey = self._agg_state_key(stage, stage.anchor,
+                                               pt.version)
+                    if skey not in self._result_cache:
+                        evicted = self._result_cache.put(
+                            skey, jax.block_until_ready(state_box[0]),
+                            tags=(("table", stage.anchor),))
+                        with self._lock:
+                            self.stats.result_puts += 1
+                            self.stats.result_evictions += len(evicted)
+                    if prep is not None:
+                        popped = self._result_cache.pop(prep[2])
+                        with self._lock:
+                            if popped is not None:
+                                self.stats.prefix_supersedes += 1
+                if prep is not None:
+                    with self._lock:
+                        self.stats.delta_serves += 1
+                        self.stats.delta_rows_scanned += \
+                            pt.table.capacity - prep[0]
+                    trace.event("delta_agg", slot=stage.slot,
+                                prefix_rows=prep[0],
+                                delta_rows=pt.table.capacity - prep[0])
                 with self._lock:
                     self.stats.shard_agg_combines += 1
                     self.stats.shard_partial_aggs += n_units
@@ -1901,6 +2159,12 @@ class PredictionService:
                 if any(s.n_joins or s.exchange for s in dist.stages):
                     self.stats.shard_join_executions += 1
             return out
+        if stale:
+            # join-only plans have no additive state to extend: appends
+            # void the co-partitioning proof like any re-registration
+            with self._lock:
+                self.stats.delta_fallbacks += 1
+            return self._execute_whole(compiled, tabs, store_capture)
         # join-only: the local plan IS the whole plan; drop the capture
         # half when present (a shuffled/sharded capture is not the value
         # the result-cache key would claim)
@@ -1921,22 +2185,86 @@ class PredictionService:
                 self.stats.shard_join_executions += 1
         return out
 
+    def _agg_state_key(self, stage: AggStage, t: str,
+                       version: int) -> Tuple:
+        """Result-cache key of one stage's merged *partial state* (still
+        mergeable, unlike the finalized combined table) over ``t`` at
+        ``version`` — what a later append folds its delta partials into."""
+        return ("agg_state", stage.local_sig, (t, version),
+                self.execution_config.cache_key(), self.jit)
+
+    def _stage_state_eligible(self, stage: AggStage, pt: Any) -> bool:
+        """Whether this serve's merged partial state would cover the whole
+        table — the precondition for caching it as an append-extensible
+        prefix.  Single-table stages only (a join side has no row-prefix
+        correspondence), with no zone-map pruning in force (a pruned
+        state would silently miss rows a later delta never revisits)."""
+        if (stage.exchange is not None or stage.n_joins
+                or stage.part_tables != (stage.anchor,)):
+            return False
+        scan = next(n for n in stage.local_plan.nodes.values()
+                    if n.op == "scan" and n.attrs["table"] == stage.anchor)
+        surviving = scan.attrs.get("partitions")
+        return (surviving is None
+                or any(i >= pt.n_partitions for i in surviving)
+                or len(surviving) == pt.n_partitions)
+
+    def _agg_delta_prep(self, stage: AggStage, pts: Dict[str, Any]
+                        ) -> Optional[Tuple[int, Any, Tuple, Tuple]]:
+        """Whether one stale-anchored stage can run incrementally: its
+        (single) anchor's growth is explained by the append lineage, a
+        prefix partial-state is cached at some earlier lineage version,
+        and the partitions past that prefix tile exactly the appended
+        rows (``PartitionedTable.append`` guarantees appends open new
+        partitions at the old boundary).  Returns ``(prefix_rows,
+        state_entry, old_state_key, delta_partition_indices)`` or
+        ``None`` (-> whole-table fallback)."""
+        if (stage.exchange is not None or stage.n_joins
+                or stage.part_tables != (stage.anchor,)
+                or self._result_cache is None):
+            return None
+        t = stage.anchor
+        pt = pts[t]
+        lineage = self._version_lineage(t)
+        if len(lineage) < 2 or lineage[-1][0] != pt.version:
+            return None
+        cur_rows = lineage[-1][1]
+        for version, rows in reversed(lineage[:-1]):
+            if rows >= cur_rows:
+                continue
+            entry = self._result_cache.entry(
+                self._agg_state_key(stage, t, version))
+            if entry is None:
+                continue
+            delta = tuple(p.index for p in pt.partitions
+                          if p.start >= rows)
+            if not delta or pt.partitions[delta[0]].start != rows:
+                return None    # prefix boundary straddles a partition
+            return rows, entry, self._agg_state_key(stage, t, version), \
+                delta
+        return None
+
     def _run_partition_wise(self, compiled: CompiledPrediction, stage: Any,
                             pts: Dict[str, Any],
                             combine: Optional[Any] = None,
                             unwrap: Optional[Any] = None,
+                            surviving: Optional[Tuple[int, ...]] = None,
                             trace: Any = NULL_TRACE
                             ) -> Tuple[Any, int]:
         """Run one local program (a :class:`DistributedSpec` or one
         :class:`AggStage` — both carry anchor/part_tables/local_*) over
         the anchor's surviving partitions with aligned co-partitioned
-        sides.  Returns ``(output, #morsels)``."""
+        sides.  ``surviving`` overrides the compile-time pruned set (the
+        delta tier passes exactly the appended partitions).  Returns
+        ``(output, #morsels)``."""
         cfg = self.execution_config
         executor = self._shard_executor()
         anchor_pt = pts[stage.anchor]
-        scan = next(n for n in stage.local_plan.nodes.values()
-                    if n.op == "scan" and n.attrs["table"] == stage.anchor)
-        surviving = scan.attrs.get("partitions")
+        if surviving is None:
+            scan = next(n for n in stage.local_plan.nodes.values()
+                        if n.op == "scan"
+                        and n.attrs["table"] == stage.anchor)
+            surviving = scan.attrs.get("partitions")
         if surviving is None \
                 or any(i >= anchor_pt.n_partitions for i in surviving):
             surviving = tuple(range(anchor_pt.n_partitions))
@@ -2094,9 +2422,15 @@ class PredictionService:
 
     def _execute_spliced(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
+                         ctx: Optional[RequestContext] = None,
                          trace: Any = NULL_TRACE) -> Any:
+        """Serve a spliced plan, recovering its slot value by the cheapest
+        sound tier: exact cached value -> pre-append snapshot within the
+        freshness SLA -> prefix + delta-rows execution (streaming ingest)
+        -> whole-subtree rematerialization."""
         ref = compiled.splice
-        value = self._result_cache.get(self._result_key(ref)) \
+        rkey = self._result_key(ref)
+        value = self._result_cache.get(rkey) \
             if self._result_cache is not None else None
         hit = value is not None
         with self._lock:
@@ -2105,12 +2439,124 @@ class PredictionService:
                 self.stats.result_hits += 1
             else:
                 self.stats.result_misses += 1
-        if value is None:       # evicted since compile: rebuild, repopulate
+        from_prefix = False
+        if value is None:       # version moved or evicted: prefix tiers
+            value = self._serve_from_prefix(compiled, ref, rkey, tabs,
+                                            ctx=ctx, trace=trace)
+            from_prefix = value is not None
+        if value is None:       # no lineage to exploit: rebuild, repopulate
             with trace.span("rematerialize", sig=ref.sig[:16]):
                 value = self._materialize(ref)
         with trace.span("result_cache_splice", hit=hit,
                         subtree=ref.describe()):
+            # Prefix-tier serves run the residual through the unjitted
+            # closure: under streaming ingest the slot's row count grows
+            # with every append, and re-tracing the (tiny, cosmetic)
+            # residual per append would put an XLA compile back on the
+            # very path the delta tier exists to keep compile-free.
+            if from_prefix and compiled.raw_fn is not None:
+                return compiled.raw_fn({**tabs, ref.slot: value})
             return compiled.fn({**tabs, ref.slot: value})
+
+    def _serve_from_prefix(self, compiled: CompiledPrediction,
+                           ref: SubplanRef, rkey: Tuple,
+                           tabs: Dict[str, Table],
+                           ctx: Optional[RequestContext] = None,
+                           trace: Any = NULL_TRACE) -> Optional[Any]:
+        """Exact result-key miss under streaming ingest: recover the slot
+        value from a cached *prefix* of the same lineage — either serving
+        the pre-append snapshot outright (freshness SLA: the request said
+        an answer this many seconds old is acceptable) or executing the
+        subtree over only the appended delta rows and concatenating
+        (incremental maintenance; bitwise-equal by row-locality).  Returns
+        ``None`` when no tier applies — the caller rematerializes, which
+        is always sound."""
+        found = self._prefix_entry(ref)
+        if found is None:
+            return None
+        old_key, entry, prefix_rows = found
+        (t,) = ref.scan_tables
+        # Tier 1: freshness SLA.  The prefix value *is* the answer over a
+        # snapshot exactly one append old; when the caller's staleness
+        # budget covers that append's age, serve it without touching the
+        # delta — the residual's own scan of the table (if any) is sliced
+        # back to the same snapshot so the whole answer is consistent.
+        budget = self._staleness_budget(ctx)
+        if budget is not None:
+            appended_at = self._append_times.get(t)
+            age = None if appended_at is None \
+                else max(0.0, self.clock.monotonic() - appended_at)
+            if age is not None and age <= budget:
+                if t in tabs:
+                    tabs[t] = _slice_table_host(tabs[t], 0, prefix_rows)
+                # recency bump so the entry survives while the SLA holds
+                self._result_cache.get(old_key, count=False)
+                with self._lock:
+                    self.stats.stale_serves += 1
+                trace.event("stale_serve", table=t, age_s=age,
+                            budget_s=budget, rows=prefix_rows)
+                return entry.value
+        # Tier 2: delta execution — row-local subtrees only (every output
+        # row depends on exactly its input row, so prefix and delta
+        # outputs concatenate to the bitwise whole-table value).
+        if all(n.op in _ROW_LOCAL_OPS
+               for n in ref.subtree_plan.nodes.values()):
+            value = self._delta_value(compiled, ref, rkey, entry, old_key,
+                                      prefix_rows, t, trace=trace)
+            if value is not None:
+                return value
+        with self._lock:
+            self.stats.delta_fallbacks += 1
+        trace.event("delta_fallback", table=t)
+        return None
+
+    def _delta_value(self, compiled: CompiledPrediction, ref: SubplanRef,
+                     rkey: Tuple, entry: Any, old_key: Tuple,
+                     prefix_rows: int, t: str,
+                     trace: Any = NULL_TRACE) -> Optional[Any]:
+        """Run the subtree over only the appended rows and splice the
+        cached prefix in front.  The delta execution reuses the admission
+        tier's shape-bucket machinery (pad the delta to a power-of-two
+        bucket, one cached twin executable per bucket), so steady-state
+        appends of similar size never trace or compile anything new."""
+        table = self.catalog.get_table(t)
+        d = table.capacity - prefix_rows
+        if d <= 0:
+            return None
+        cfg = self.batcher.config
+        bucket = pow2_bucket(d, cfg.min_bucket_rows, cfg.max_bucket_rows)
+        raw_fn = self._subtree_raw_fn(ref)
+        twin, fresh, tags = self._twin_executable(
+            compiled, bucketed_signature(f"delta::{ref.sig}", bucket),
+            bucket, "bucket_hits", "bucket_compiles", raw_fn=raw_fn)
+        t0 = time.perf_counter()
+        with trace.span("delta_execute", table=t, rows=d, bucket=bucket,
+                        fresh_bucket=fresh):
+            delta = _slice_table_host(table, prefix_rows, bucket)
+            dval = jax.block_until_ready(twin.fn({t: delta}))
+            value = jax.block_until_ready(
+                _concat_outputs_host([entry.value,
+                                      _trim_rows_host(dval, d)]))
+        elapsed = time.perf_counter() - t0
+        twin.serves += 1
+        self._record_twin_cost(twin, fresh, tags, elapsed)
+        if self._result_cache is not None:
+            # the spliced successor replaces the prefix entry (same
+            # lineage, strictly more rows): store first, then retire the
+            # prefix so the bytes budget never double-charges the pair
+            evicted = self._result_cache.put(
+                rkey, value, cost_s=entry.cost_s + elapsed,
+                tags=entry.tags, tenant=entry.tenant)
+            popped = self._result_cache.pop(old_key)
+            with self._lock:
+                self.stats.result_puts += 1
+                self.stats.result_evictions += len(evicted)
+                if popped is not None:
+                    self.stats.prefix_supersedes += 1
+        with self._lock:
+            self.stats.delta_serves += 1
+            self.stats.delta_rows_scanned += d
+        return value
 
     def _execute_chunked(self, compiled: CompiledPrediction,
                          tabs: Dict[str, Table],
@@ -2150,14 +2596,18 @@ class PredictionService:
             params: Any = None,
             ctx: Optional[RequestContext] = None,
             tenant: Optional[str] = None, priority: int = 0,
-            deadline_s: Optional[float] = None) -> Any:
+            deadline_s: Optional[float] = None,
+            max_staleness_s: Optional[float] = None) -> Any:
         """Synchronous serve.  Goes through the admission queue, so requests
         issued concurrently from other threads coalesce with this one.
         Under a background admission loop the request is served within the
-        latency budget; otherwise this flushes immediately."""
+        latency budget; otherwise this flushes immediately.
+        ``max_staleness_s`` is the request's freshness SLA under streaming
+        ingest (see :class:`~repro.serve.context.RequestContext`)."""
         ticket = self.submit(query, tables, params=params, ctx=ctx,
                              tenant=tenant, priority=priority,
-                             deadline_s=deadline_s)
+                             deadline_s=deadline_s,
+                             max_staleness_s=max_staleness_s)
         if self._loop is None:
             self.flush()
         return ticket.result()
@@ -2166,7 +2616,8 @@ class PredictionService:
             tables: Optional[Dict[str, Table]] = None,
             ctx: Optional[RequestContext] = None,
             tenant: Optional[str] = None, priority: int = 0,
-            deadline_s: Optional[float] = None) -> Any:
+            deadline_s: Optional[float] = None,
+            max_staleness_s: Optional[float] = None) -> Any:
         """Front door: serve a SQL text synchronously.
 
         ``params`` binds the query's placeholders — positional (a sequence,
@@ -2183,7 +2634,8 @@ class PredictionService:
         quota and stats ledger; both default to the single-tenant path."""
         return self.run(query, tables, params=params, ctx=ctx,
                         tenant=tenant, priority=priority,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s,
+                        max_staleness_s=max_staleness_s)
 
     def predict(self, query: Union[str, Plan],
                 tables: Optional[Dict[str, Table]] = None, **kw) -> Any:
@@ -2197,7 +2649,9 @@ class PredictionService:
                params: Any = None,
                ctx: Optional[RequestContext] = None,
                tenant: Optional[str] = None, priority: int = 0,
-               deadline_s: Optional[float] = None) -> PredictionTicket:
+               deadline_s: Optional[float] = None,
+               max_staleness_s: Optional[float] = None
+               ) -> PredictionTicket:
         """Admit one request.  Blocks under backpressure (bounded queue);
         raises :class:`~repro.serve.admission.AdmissionQueueFull` when the
         queue stays full past the offer timeout (or immediately with
@@ -2205,7 +2659,8 @@ class PredictionService:
         computed (e.g. unknown table) or whose parameter bindings do not
         match the plan's placeholders fails its ticket instead of
         poisoning the batch it would have joined."""
-        ctx = self._resolve_ctx(ctx, tenant, priority, deadline_s)
+        ctx = self._resolve_ctx(ctx, tenant, priority, deadline_s,
+                                max_staleness_s)
         ticket = PredictionTicket()
         trace = self._new_trace(
             query if isinstance(query, str) else "request", ctx)
@@ -2387,7 +2842,8 @@ class PredictionService:
         try:
             # key[0] is the plan signature (first component of _cache_key)
             compiled = self.compile(head.plan, head.tables,
-                                    _key=(key, key[0]), trace=trace)
+                                    _key=(key, key[0]), ctx=head.ctx,
+                                    trace=trace)
         except Exception as err:
             seal(err)
             return 0
@@ -2398,7 +2854,8 @@ class PredictionService:
                 # catalog's natural (fixed) shape, fanned out to every ticket
                 with trace.span("execute", coalesced=len(group) - 1):
                     out = self._execute(compiled, None, params=params,
-                                        tenant=tenant, trace=trace)
+                                        tenant=tenant, ctx=head.ctx,
+                                        trace=trace)
                 for p in group:
                     if p is not head:
                         p.trace.event("coalesced", group=len(group))
@@ -2419,7 +2876,7 @@ class PredictionService:
                     with p.trace.span("execute"):
                         p.ticket._resolve(self._execute(
                             compiled, p.tables, params=params,
-                            tenant=tenant, trace=p.trace))
+                            tenant=tenant, ctx=p.ctx, trace=p.trace))
         except Exception as err:
             seal(err)
             return 0

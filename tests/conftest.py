@@ -7,6 +7,19 @@ import os
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import settings as _hyp_settings
+except ImportError:                       # hypothesis is optional locally
+    _hyp_settings = None
+else:
+    # Raised example budget for the scheduled nightly run (nightly.yml):
+    # select it with --hypothesis-profile=nightly *and* export
+    # HYPOTHESIS_PROFILE=nightly — the property-test modules load their
+    # own CI-sized profile at import time unless the env var names
+    # another registered profile.
+    _hyp_settings.register_profile("nightly", max_examples=300,
+                                   deadline=None)
+
 
 @pytest.fixture(autouse=True)
 def _timeout_guard(request):

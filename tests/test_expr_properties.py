@@ -2,6 +2,8 @@
 constraint extraction is sound (never claims a constraint the data can
 violate)."""
 
+import os
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -14,7 +16,8 @@ from repro.relational.expr import (BinOp, CaseWhen, Col, Const, UnaryOp,
                                    fold_constants)
 
 settings.register_profile("ci2", max_examples=40, deadline=None)
-settings.load_profile("ci2")
+settings.load_profile(
+    os.environ.get("HYPOTHESIS_PROFILE", "ci2"))
 
 _NUM = st.floats(-10, 10, allow_nan=False, width=32)
 

@@ -1,5 +1,7 @@
 """Paged KV cache: allocator invariants + attention equivalence."""
 
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -11,7 +13,8 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.serve.kv_cache import PagedKVCache
 
 settings.register_profile("kv", max_examples=15, deadline=None)
-settings.load_profile("kv")
+settings.load_profile(
+    os.environ.get("HYPOTHESIS_PROFILE", "kv"))
 
 
 def test_alloc_free_reuse():

@@ -1,5 +1,7 @@
 """Unit + property tests for the classical ML layer."""
 
+import os
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -12,7 +14,8 @@ from repro.ml import (DecisionTree, GradientBoostedTrees, LinearRegression,
                       predict_ensemble_gemm, predict_gemm, tree_to_gemm)
 
 settings.register_profile("ci", max_examples=20, deadline=None)
-settings.load_profile("ci")
+settings.load_profile(
+    os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 
 
 def _toy(n=400, d=5, seed=0):

@@ -4,6 +4,8 @@ The system invariant: mask-carrying static-shape execution must agree with
 plain compacting numpy semantics (SQL bags) for every operator composition.
 """
 
+import os
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -15,7 +17,8 @@ from repro.relational import (Table, col, const, filter_, group_aggregate,
                               join_unique, limit, order_by, union_all)
 
 settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+settings.load_profile(
+    os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 
 
 @st.composite

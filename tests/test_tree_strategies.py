@@ -20,6 +20,8 @@ estimator never picks a strategy that measures much slower than its
 runner-up on the calibration workload.
 """
 
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -37,7 +39,8 @@ try:
     from hypothesis import given, settings, strategies as st
     settings.register_profile("tree_strategies", max_examples=12,
                               deadline=None)
-    settings.load_profile("tree_strategies")
+    settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "tree_strategies"))
     HAVE_HYPOTHESIS = True
 except ImportError:                     # property test degrades to the
     HAVE_HYPOTHESIS = False             # deterministic grid below
@@ -163,8 +166,15 @@ def test_crossover_not_worse_than_runner_up():
             break
     else:
         raise AssertionError((chosen, measured, costs))
-    # and the estimator's own ranking agrees with itself
-    assert costs[chosen] == min(costs.values())
+    # and the estimator's own ranking agrees with itself: chosen is either
+    # the outright cheapest, or traversal retained because no translated
+    # strategy beat it by more than the calibration-noise margin
+    from repro.core.cost_model import _STRATEGY_MARGIN
+    if chosen == "traversal":
+        assert min(costs.values()) > _STRATEGY_MARGIN * costs["traversal"]
+    else:
+        assert costs[chosen] == min(costs.values())
+        assert costs[chosen] <= _STRATEGY_MARGIN * costs["traversal"]
 
 
 def test_strategy_costs_monotone_in_rows():
